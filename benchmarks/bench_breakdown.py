@@ -1,0 +1,95 @@
+"""Paper Table IV analogue: breakdown of BitDecoding's optimizations.
+
+GPU knobs -> TPU analogues measured here:
+  * lop3 layout remap  -> strided packing vs a transpose-requiring layout
+    (consecutive packing needs an extra relayout before the matmul);
+  * warp-efficient design -> query transformation on (g_q as matmul M) vs
+    per-head GEMV loop;
+  * async pipeline -> fused dequant+attention vs separate dequant kernel
+    with a materialized fp16 cache round-trip (the KIVI-style non-fused path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, make_decode_case, timeit
+from repro.core import attention as catt
+from repro.core.layout import packing_ratio, qmax
+from repro.kernels.bitdecode import ref as bd_ref
+
+
+def _consecutive_unpack(w, bits, block_n):
+    """Anti-optimization: consecutive token packing -> strided planes that
+    must be interleaved (transpose) after extraction."""
+    r = packing_ratio(bits)
+    planes = [(w >> (bits * k)) & qmax(bits) for k in range(r)]
+    st = jnp.stack(planes, axis=-2)  # [..., npr, R, d] -> interleave
+    *lead, npr, _, dd = st.shape
+    return st.reshape(*lead, npr * r, dd)
+
+
+def run():
+    b, h_kv, g_q, d, s, bits = 1, 4, 4, 128, 4096, 4
+    q, cache, (k, v) = make_decode_case(b=b, h_kv=h_kv, g_q=g_q, d=d, s=s, bits=bits)
+
+    # full fused path (all optimizations on)
+    fused = jax.jit(functools.partial(catt.decode_attention, impl="xla"))
+    us_all = timeit(fused, q, cache)
+    emit("breakdown.fused_all_on", us_all, "strided+qtransform+fused")
+
+    # (1) layout: consecutive packing with explicit interleave cost
+    @jax.jit
+    def unfused_layout(cache_kw):
+        x = _consecutive_unpack(cache_kw, bits, cache.block_n)
+        return x.sum()
+
+    @jax.jit
+    def strided_layout(cache_kw):
+        from repro.core.layout import unpack_strided
+
+        return unpack_strided(cache_kw, bits).sum()
+
+    us_strided = timeit(strided_layout, cache.kw)
+    us_consec = timeit(unfused_layout, cache.kw)
+    emit("breakdown.unpack_strided", us_strided,
+         f"vs_consecutive={us_consec/max(us_strided,1e-9):.2f}x")
+
+    # (2) query transform: one (g_q x d) matmul vs per-head GEMV loop
+    def per_head(qq, cache):
+        outs = []
+        for i in range(g_q):
+            qi = qq[:, :, i::g_q][:, :, : h_kv]  # one head per kv group
+            outs.append(catt.decode_attention(qi.reshape(b, 1, h_kv, d), cache, impl="xla"))
+        return jnp.concatenate(outs, axis=2)
+
+    us_gemv = timeit(jax.jit(per_head), q, cache)
+    emit("breakdown.query_transform", us_all,
+         f"vs_per_head_gemv={us_gemv/max(us_all,1e-9):.2f}x")
+
+    # (3) fused vs non-fused (KIVI-style): dequantize whole cache to fp16 in
+    # HBM, then run fp16 attention over it (extra round-trip)
+    @jax.jit
+    def non_fused(qq, cache):
+        k_hat = bd_ref._dequant_blocks(cache.kw, cache.k_scale, cache.k_zero,
+                                       cache.bits, cache.k_gran)
+        v_hat = bd_ref._dequant_blocks(cache.vw, cache.v_scale, cache.v_zero,
+                                       cache.bits, "tensor")
+        # force materialization boundary (separate kernel in the paper)
+        k_hat = jax.lax.optimization_barrier(k_hat)
+        v_hat = jax.lax.optimization_barrier(v_hat)
+        qt = qq.reshape(b, h_kv, g_q, d)
+        sc = jnp.einsum("bhgd,bhtd->bhgt", qt.astype(jnp.float32),
+                        k_hat.astype(jnp.float32))
+        p = jax.nn.softmax(sc / d**0.5, axis=-1)
+        return jnp.einsum("bhgt,bhtd->bhgd", p, v_hat.astype(jnp.float32))
+
+    us_nonfused = timeit(non_fused, q, cache)
+    emit("breakdown.fused_pipeline", us_all,
+         f"vs_nonfused={us_nonfused/max(us_all,1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    run()

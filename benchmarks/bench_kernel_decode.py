@@ -1,0 +1,54 @@
+"""Paper Fig. 8/9/10 analogue: decode-kernel performance across serving
+settings (Single / Batches) × bits {16,4,2} × attention variants (MHA/GQA).
+
+On CPU we report (a) measured XLA-path wall time at reduced sizes and (b) the
+modeled HBM-bytes speedup vs the fp16 baseline at paper-scale sizes — decode
+is bandwidth-bound (paper §II), so bytes-moved ratio is the TPU roofline
+prediction of the kernel speedup the paper measures on GPUs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (emit, kv_bytes_fp16, kv_bytes_quant,
+                               make_decode_case, timeit)
+from repro.core import attention as catt
+
+
+def _fp16_decode(q, k, v):
+    qt = q.reshape(q.shape[0], k.shape[1], -1, q.shape[-1])
+    s = jnp.einsum("bhgd,bhtd->bhgt", qt.astype(jnp.float32), k.astype(jnp.float32))
+    p = jax.nn.softmax(s / q.shape[-1] ** 0.5, axis=-1)
+    return jnp.einsum("bhgt,bhtd->bhgd", p, v.astype(jnp.float32))
+
+
+def run():
+    d, block_n = 128, 128
+    settings = [
+        ("single-mha", dict(b=1, h_kv=8, g_q=1, s=4096)),
+        ("single-gqa", dict(b=1, h_kv=2, g_q=4, s=4096)),
+        ("batches-mha", dict(b=8, h_kv=8, g_q=1, s=2048)),
+        ("batches-gqa", dict(b=8, h_kv=2, g_q=4, s=2048)),
+    ]
+    for name, kw in settings:
+        q, cache16, (k, v) = make_decode_case(d=d, bits=8, block_n=block_n, **kw)
+        fp16 = jax.jit(_fp16_decode)
+        us16 = timeit(fp16, q, k, v)
+        for bits in (4, 2):
+            _, cache, _ = make_decode_case(d=d, bits=bits, block_n=block_n, **kw)
+            fn = jax.jit(functools.partial(catt.decode_attention, impl="xla"))
+            us = timeit(fn, q, cache)
+            # paper-scale modeled speedup (S=128K) from bytes moved
+            bl = kv_bytes_fp16(kw["b"], kw["h_kv"], 131072, d)
+            bq = kv_bytes_quant(kw["b"], kw["h_kv"], 131072, d, bits, block_n)
+            emit(
+                f"kernel_decode.{name}.int{bits}", us,
+                f"modeled_speedup_vs_fp16_128k={bl / bq:.2f}x;cpu_fp16_us={us16:.0f}",
+            )
+
+
+if __name__ == "__main__":
+    run()

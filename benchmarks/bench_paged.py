@@ -1,0 +1,42 @@
+"""Paper Fig. 8/9/10 "Page" setting: paged low-bit decode through the
+scalar-prefetch kernel — scrambled page tables over a shared pool, per-seq
+lengths, vs the dense kernel on the same content."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.kernels.kv_quant import ref as kq_ref
+from repro.kernels.paged_bitdecode import ops as pg_ops
+
+
+def run():
+    b, h, g, d, block_n, nb = 4, 4, 4, 128, 128, 8
+    n_pages = b * nb
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    for bits in (4, 2):
+        k = jax.random.normal(ks[0], (1, h, n_pages * block_n, d)).astype(jnp.bfloat16)
+        v = jax.random.normal(ks[1], (1, h, n_pages * block_n, d)).astype(jnp.bfloat16)
+        kw, ksc, kzp = kq_ref.quantize_kv_ref(k, bits, "channel", block_n=block_n)
+        vw, vsc, vzp = kq_ref.quantize_kv_ref(v, bits, "tensor", block_n=block_n)
+        pool = lambda x: jnp.moveaxis(x[0], 1, 0)  # noqa: E731
+        q = jax.random.normal(ks[2], (b, h, g, d)).astype(jnp.bfloat16)
+        k_res = jax.random.normal(ks[3], (b, h, block_n, d)).astype(jnp.bfloat16)
+        v_res = jax.random.normal(ks[4], (b, h, block_n, d)).astype(jnp.bfloat16)
+        table = jax.random.permutation(ks[5], n_pages).reshape(b, nb).astype(jnp.int32)
+        pb = jnp.full((b,), nb, jnp.int32)
+        rl = jnp.full((b,), 33, jnp.int32)
+        fn = jax.jit(functools.partial(
+            pg_ops.paged_bitdecode_attention, bits=bits, block_n=block_n,
+            impl="xla"))
+        us = timeit(fn, q, pool(kw), pool(ksc), pool(kzp), pool(vw), pool(vsc),
+                    pool(vzp), k_res, v_res, table, pb, rl)
+        emit(f"paged_decode.int{bits}", us,
+             f"pages={n_pages};scrambled_table;per_seq_lengths")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Paper Table II + Fig. 13 analogue: quantization+packing overhead.
+
+Marlin/Ladder-style pre-transform is impossible for a dynamic KV cache; the
+paper's point is that the fused Residual-Kernel path makes online
+quantization negligible.  We measure (a) prefill-time fused quantize+pack of
+a long context, (b) per-decode-step residual append (amortized flush), and
+(c) the residual fraction of total cache bytes vs sequence length (Fig. 13)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import qcache
+from repro.kernels.kv_quant import ops as kvq_ops
+
+
+def run():
+    b, h, d, block_n = 1, 8, 128, 128
+    # (a) prefill quantize+pack (paper: Prefill row of Table II)
+    for s in (4096, 16384):
+        x = jax.random.normal(jax.random.PRNGKey(0), (b, h, s, d), jnp.bfloat16)
+        fn = jax.jit(functools.partial(
+            kvq_ops.quantize_kv, bits=4, granularity="channel", impl="xla"))
+        us = timeit(fn, x)
+        gbps = (x.size * 2) / (us * 1e-6) / 1e9
+        emit(f"quant_overhead.prefill_s{s}", us, f"throughput={gbps:.2f}GB/s")
+
+    # (b) decode-step append incl. amortized flush (Table II Decode row)
+    cache = qcache.init_cache(b, h, d, 4096, bits=4, block_n=block_n)
+    kn = jax.random.normal(jax.random.PRNGKey(1), (b, h, 1, d), jnp.bfloat16)
+
+    @jax.jit
+    def append(c, kn):
+        return qcache.append_decode(c, kn, kn)
+
+    us = timeit(append, cache, kn)
+    emit("quant_overhead.decode_append", us, "fused_residual_append")
+
+    # (c) residual memory fraction vs seq len (Fig. 13): bf16 residual
+    # (N_r tokens x 2B/elem) over the int4 packed cache (bits/8 B/elem)
+    for s in (4096, 32768, 131072):
+        res_frac = block_n * 2 / (s * 4 / 8 + block_n * 2)
+        emit(f"quant_overhead.residual_frac_s{s}", 0.0, f"frac={res_frac:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Aggregate the dry-run roofline artifacts into the benchmark CSV (one row
+per (arch x shape x mesh) cell) — the §Roofline table source."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+ART = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def run():
+    if not ART.exists():
+        emit("roofline.missing", 0.0, "run repro.launch.dryrun first")
+        return
+    for f in sorted(ART.glob("*.json")):
+        rec = json.loads(f.read_text())
+        t = rec["roofline"]
+        emit(
+            f"roofline.{rec['arch']}.{rec['shape']}.{rec['mesh']}",
+            t["bound_s"] * 1e6,
+            f"dom={t['dominant']};comp={t['compute_s']:.2e};"
+            f"mem={t['memory_s']:.2e};coll={t['collective_s']:.2e};"
+            f"useful={rec['useful_flops_ratio']:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

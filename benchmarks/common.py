@@ -1,0 +1,56 @@
+"""Shared benchmark utilities: timing, case construction, CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qcache
+from repro.kernels.kv_quant import ref as kq_ref
+
+
+def timeit(fn, *args, warmup=2, iters=5):
+    """Median wall time of a jitted callable, in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def make_decode_case(*, b, h_kv, g_q, d, s, bits, block_n=128, k_gran="channel",
+                     key=0):
+    """Build a filled quantized cache + query for decode benchmarks."""
+    ks = jax.random.split(jax.random.PRNGKey(key), 3)
+    k = jax.random.normal(ks[0], (b, h_kv, s, d), jnp.float32).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[1], (b, h_kv, s, d), jnp.float32).astype(jnp.bfloat16)
+    q = jax.random.normal(ks[2], (b, 1, h_kv * g_q, d), jnp.float32).astype(jnp.bfloat16)
+    cache = qcache.init_cache(
+        b, h_kv, d, s + block_n, bits=bits, block_n=block_n, k_gran=k_gran
+    )
+    cache = qcache.prefill(cache, k, v, quant_impl="xla")
+    return q, cache, (k, v)
+
+
+def kv_bytes_fp16(b, h, s, d):
+    return 2 * b * h * s * d * 2  # K+V, fp16
+
+
+def kv_bytes_quant(b, h, s, d, bits, block_n=128, k_gran="channel",
+                   param_bytes=2):
+    """Analytic HBM bytes of the packed cache + metadata (the fused kernel's
+    definitional traffic)."""
+    packed = 2 * b * h * s * d * bits / 8
+    nb = s // block_n
+    k_params = b * h * nb * d * 2 * param_bytes  # scale+zero per channel/block
+    v_params = b * h * s * 2 * param_bytes  # per-token
+    return packed + k_params + v_params

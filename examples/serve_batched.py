@@ -1,0 +1,38 @@
+"""End-to-end driver: serve a small model with batched requests through the
+slot-based engine (continuous-batching-lite) with an int4 KV cache — the
+paper's "Batches" serving setting.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.base import smoke_config
+from repro.models.zoo import build_model
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    cfg = smoke_config("llama3-8b").with_(kv_bits=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, slots=4, max_seq=256)
+
+    rng = np.random.default_rng(0)
+    n_requests = 12
+    for uid in range(n_requests):
+        prompt_len = int(rng.integers(8, 48))
+        engine.submit(Request(
+            uid=uid,
+            prompt=rng.integers(0, cfg.vocab, prompt_len).astype(np.int32),
+            max_new_tokens=int(rng.integers(4, 24)),
+        ))
+    print(f"submitted {n_requests} requests into 4 slots (int4 KV cache)")
+    stats = engine.run()
+    print(f"served: {stats['decoded_tokens']} tokens in {stats['steps']} "
+          f"batched steps, {stats['tokens_per_s']:.1f} tok/s (CPU), "
+          f"evicted={stats['evicted']}")
+
+
+if __name__ == "__main__":
+    main()

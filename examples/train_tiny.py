@@ -1,0 +1,26 @@
+"""Train a small model for a few hundred steps on the synthetic pipeline
+with checkpoint/restart — exercises the full training substrate (optimizer,
+microbatching, prefetch, checkpoint manager).
+
+Run:  PYTHONPATH=src python examples/train_tiny.py [--steps 200]
+"""
+import argparse
+import sys
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    sys.argv = [
+        "train", "--arch", "llama3-8b", "--smoke",
+        "--steps", str(args.steps), "--batch", "8", "--seq", "128",
+        "--ckpt-dir", "/tmp/repro_train_tiny", "--ckpt-every", "50",
+    ]
+    train_mod.main()
+
+
+if __name__ == "__main__":
+    main()

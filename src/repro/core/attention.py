@@ -1,0 +1,178 @@
+"""Attention entry points: query transformation, decode dispatch, blockwise
+prefill attention.
+
+Query transformation (paper §V-A): during decode the query tensor is
+``[B, 1, h_q, d]``; a naive QK^T is a GEMV that underfills the MXU.  We
+reshape to ``[B, h_kv, g_q, d]`` (``g_q = h_q / h_kv``) so the grouped query
+heads that share a KV head become the M dimension of a real matmul — MHA
+(g_q = 1), GQA (g_q > 1) and MQA (h_kv = 1) all flow through the same kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.qcache import QuantKVCache
+from repro.kernels.bitdecode import ops as bd_ops
+
+MASK_VALUE = -1e37
+
+
+def query_transform(q: jax.Array, h_kv: int) -> jax.Array:
+    """[B, 1, h_q, d] -> [B, h_kv, g_q, d].  Head h shares KV head h // g_q."""
+    b, s1, h_q, d = q.shape
+    if s1 != 1:
+        raise ValueError(f"decode expects q_len=1, got {s1}")
+    if h_q % h_kv:
+        raise ValueError(f"h_q={h_q} not divisible by h_kv={h_kv}")
+    return q.reshape(b, h_kv, h_q // h_kv, d)
+
+
+def inverse_query_transform(o: jax.Array) -> jax.Array:
+    """[B, h_kv, g_q, d_v] -> [B, 1, h_q, d_v]."""
+    b, h_kv, g_q, d_v = o.shape
+    return o.reshape(b, 1, h_kv * g_q, d_v)
+
+
+# Split-KV (sequence-parallel) decode context: when set, decode_attention
+# routes through dist.splitkv with the packed cache sharded along blocks.
+_SPLITKV: dict = {"mesh": None, "axis": "data"}
+
+
+class use_splitkv:
+    """Context manager enabling cross-chip split-KV decode (long-context,
+    small-batch shapes).  Used by the launcher/dry-run around lowering."""
+
+    def __init__(self, mesh, axis: str = "data"):
+        self.mesh, self.axis = mesh, axis
+
+    def __enter__(self):
+        self._prev = dict(_SPLITKV)
+        _SPLITKV["mesh"], _SPLITKV["axis"] = self.mesh, self.axis
+        return self
+
+    def __exit__(self, *exc):
+        _SPLITKV.update(self._prev)
+        return False
+
+
+def decode_attention(
+    q: jax.Array,  # [B, 1, h_q, d_k]
+    cache: QuantKVCache,
+    *,
+    sm_scale: float | None = None,
+    d_v: int | None = None,
+    impl: str = "auto",
+    return_lse: bool = False,
+):
+    """Low-bit fused decode attention against a QuantKVCache."""
+    if _SPLITKV["mesh"] is not None and not return_lse:
+        from repro.dist import splitkv as _sk
+
+        return _sk.splitkv_decode_attention(
+            q, cache, _SPLITKV["mesh"], axis=_SPLITKV["axis"],
+            sm_scale=sm_scale, d_v=d_v, impl=impl,
+        )
+    h_kv = cache.kw.shape[1]
+    qt = query_transform(q, h_kv)
+    out = bd_ops.bitdecode_attention(
+        qt, cache.kw, cache.k_scale, cache.k_zero,
+        cache.vw, cache.v_scale, cache.v_zero,
+        cache.k_res, cache.v_res, cache.pack_blocks, cache.res_len,
+        bits=cache.bits, block_n=cache.block_n, sm_scale=sm_scale,
+        k_gran=cache.k_gran, shared_kv=cache.shared_kv, d_v=d_v,
+        impl=impl, return_lse=return_lse,
+    )
+    if return_lse:
+        o, lse = out
+        return inverse_query_transform(o), lse
+    return inverse_query_transform(out)
+
+
+def blockwise_attention(
+    q: jax.Array,  # [B, S, h_q, d_k]
+    k: jax.Array,  # [B, T, h_kv, d_k]
+    v: jax.Array,  # [B, T, h_kv, d_v]
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_k: int = 512,
+    q_offset: int = 0,
+    impl: str = "xla",
+) -> jax.Array:
+    """Memory-subquadratic (flash-style) attention in pure jnp.
+
+    Scans KV blocks with online-softmax carries; never materializes the
+    [S, T] score matrix.  Used for prefill/training; GQA handled by folding
+    the query-group dimension (the training-time face of the paper's query
+    transformation).  q_offset shifts query positions for cross-chunk decode.
+
+    impl="pallas" routes through the fused flash_prefill kernel (forward
+    only — the VMEM-resident path that removes the materialized-score HBM
+    traffic measured in EXPERIMENTS §Perf cells B/C); requires q_offset=0,
+    same q/kv lengths and d_k == d_v.
+    """
+    if impl == "pallas":
+        from repro.kernels.flash_prefill import ops as fp_ops
+
+        assert q_offset == 0 and q.shape[1] == k.shape[1]
+        out = fp_ops.flash_prefill_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3),
+            sm_scale=sm_scale, causal=causal, impl="pallas",
+        )
+        return out.transpose(0, 2, 1, 3)
+    b, s, h_q, d_k = q.shape
+    _, t, h_kv, d_v = v.shape
+    g = h_q // h_kv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d_k**0.5)
+    nb = -(-t // block_k)
+    t_pad = nb * block_k
+    if t_pad != t:
+        k = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+
+    qg = q.reshape(b, s, h_kv, g, d_k).astype(jnp.bfloat16)
+    kb = k.reshape(b, nb, block_k, h_kv, d_k).astype(jnp.bfloat16)
+    vb = v.reshape(b, nb, block_k, h_kv, d_v).astype(jnp.bfloat16)
+    kb = jnp.moveaxis(kb, 1, 0)  # [nb, B, block_k, h_kv, d_k]
+    vb = jnp.moveaxis(vb, 1, 0)
+
+    rows = jnp.arange(s, dtype=jnp.int32) + q_offset  # global query positions
+
+    def step(carry, blk):
+        m, l, acc, j = carry
+        kj, vj = blk
+        cols = j * block_k + jnp.arange(block_k, dtype=jnp.int32)
+        sblk = lax.dot_general(
+            qg, kj, (((4,), (3,)), ((0, 2), (0, 2))),
+            preferred_element_type=jnp.float32,
+        ) * sm_scale  # [B, h_kv, S, g, block_k]
+        valid = cols[None, :] < t
+        if causal:
+            valid = valid & (cols[None, :] <= rows[:, None])  # [S, block_k]
+        else:
+            valid = jnp.broadcast_to(valid, (s, block_k))
+        sblk = jnp.where(valid[None, None, :, None, :], sblk, MASK_VALUE)
+        m_new = jnp.maximum(m, jnp.max(sblk, axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(sblk - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        # (§Perf iteration C2, REFUTED: storing p in bf16 to halve the tile
+        # traffic added convert materializations and *increased* bytes 19% —
+        # the f32 tile stays; see EXPERIMENTS.md)
+        pv = lax.dot_general(
+            p.astype(jnp.bfloat16), vj, (((4,), (1,)), ((0, 1), (0, 2))),
+            preferred_element_type=jnp.float32,
+        )  # [B, h_kv, S, g, d_v]
+        acc_new = acc * alpha + pv
+        return (m_new, l_new, acc_new, j + 1), None
+
+    m0 = jnp.full((b, h_kv, s, g, 1), MASK_VALUE, jnp.float32)
+    l0 = jnp.zeros((b, h_kv, s, g, 1), jnp.float32)
+    acc0 = jnp.zeros((b, h_kv, s, g, d_v), jnp.float32)
+    (m, l, acc, _), _ = lax.scan(step, (m0, l0, acc0, jnp.int32(0)), (kb, vb))
+    out = acc / l
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, s, h_q, d_v)

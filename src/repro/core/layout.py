@@ -1,0 +1,97 @@
+"""Strided low-bit packing layout — the TPU analogue of BitDecoding's
+ldmatrix-induced fragment layout (paper §IV-A(1)).
+
+A block of ``block_n`` tokens × ``d`` channels is quantized to ``bits``-wide
+unsigned integers and packed into int32 words, ``R = 32 // bits`` values per
+word.  The packing permutation is *strided*:
+
+    word[i, c]  packs tokens  {k * (block_n // R) + i : k in [0, R)}
+    bit-field k of word[i, c] = q[k * (block_n // R) + i, c]
+
+so that extracting bit-plane ``k`` — one shift and one mask, full-width VPU
+ops — yields the *contiguous* token range ``[k*block_n/R, (k+1)*block_n/R)``
+and stacking the planes in order reconstructs the block in natural token
+order.  Unpacking therefore needs **zero** relayout/permutation: the packing
+order was chosen so the unpack the hardware wants is the identity, exactly
+the paper's "induce the layout while computing" insight mapped from GPU
+register fragments to TPU (sublane, lane) tiles.
+
+Both the quantization (Residual) kernel and the decode (Packing) kernel
+import these constants/functions so their layouts mirror each other, as the
+paper requires ("the Packing Kernel mirrors the Residual Kernel's
+instruction configuration").
+
+In jnp terms the strided pack/unpack are pure reshapes along the leading
+(sublane) axis:
+
+    pack  : q.reshape(R, block_n // R, d)  ->  or-reduce over axis 0
+    unpack: planes k=0..R-1 stacked on axis 0 -> reshape(block_n, d)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+SUPPORTED_BITS = (2, 4, 8)
+WORD_BITS = 32
+
+
+def packing_ratio(bits: int) -> int:
+    """Values per int32 word (paper's R = word / beta)."""
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"bits must be one of {SUPPORTED_BITS}, got {bits}")
+    return WORD_BITS // bits
+
+
+def words_per_block(block_n: int, bits: int) -> int:
+    r = packing_ratio(bits)
+    if block_n % r:
+        raise ValueError(f"block_n={block_n} must be a multiple of R={r}")
+    return block_n // r
+
+
+def qmax(bits: int) -> int:
+    return (1 << bits) - 1
+
+
+def pack_strided(q: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack unsigned quantized values into int32 words with the strided layout.
+
+    q: int32[..., block_n, d] with values in [0, 2**bits).
+    returns int32[..., block_n // R, d].
+
+    Disjoint bit-ranges mean the or-combine can be expressed as a sum; we use
+    explicit ``|`` to make the no-carry property structural.
+    """
+    r = packing_ratio(bits)
+    *lead, n, d = q.shape
+    npr = words_per_block(n, bits)
+    planes = q.reshape(*lead, r, npr, d)
+    word = planes[..., 0, :, :] << 0
+    for k in range(1, r):
+        word = word | (planes[..., k, :, :] << (bits * k))
+    return word.astype(jnp.int32)
+
+
+def unpack_strided(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_strided`.
+
+    w: int32[..., npr, d]  ->  int32[..., npr * R, d] in natural token order.
+
+    Mask-after-shift makes the extraction correct under arithmetic shift of
+    the (possibly negative) int32 word — the lop3-free TPU dequant path.
+    """
+    r = packing_ratio(bits)
+    mask = qmax(bits)
+    planes = [(w >> (bits * k)) & mask for k in range(r)]
+    stacked = jnp.stack(planes, axis=-3)  # [..., R, npr, d]
+    *lead, _, npr, d = stacked.shape
+    return stacked.reshape(*lead, r * npr, d)
+
+
+@functools.lru_cache(maxsize=None)
+def plane_shift_mask(bits: int) -> tuple[tuple[int, ...], int]:
+    """Static (shifts, mask) used by the Pallas kernels' in-register unpack."""
+    r = packing_ratio(bits)
+    return tuple(bits * k for k in range(r)), qmax(bits)

@@ -1,0 +1,124 @@
+"""Synthetic deterministic data pipeline.
+
+Production-shaped: batches are generated *per device shard* (host-sharded
+loading — no host ever materializes the global batch), assembled into global
+jax.Arrays via ``make_array_from_callback``, and prefetched on a background
+thread.  Generation is a pure function of (seed, step, shard index) so any
+host/pod can reproduce its shard after elastic restart.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+
+def batch_dims(cfg, shape):
+    """Logical element shapes for one batch of a given ShapeSpec."""
+    b, s = shape.global_batch, shape.seq_len
+    dims = {}
+    if cfg.encdec:
+        dims["frames"] = ((b, min(cfg.enc_len, s // 2), cfg.d_model), jnp.bfloat16)
+        s_dec = s // 2 if shape.kind == "train" else s
+        dims["tokens"] = ((b, s_dec), jnp.int32)
+        dims["labels"] = ((b, s_dec), jnp.int32)
+        dims["loss_mask"] = ((b, s_dec), jnp.float32)
+    elif cfg.vision_stub:
+        s_text = max(8, s - cfg.n_patches)
+        dims["patches"] = ((b, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        dims["tokens"] = ((b, s_text), jnp.int32)
+        dims["labels"] = ((b, s_text), jnp.int32)
+        dims["loss_mask"] = ((b, s_text), jnp.float32)
+    else:
+        dims["tokens"] = ((b, s), jnp.int32)
+        dims["labels"] = ((b, s), jnp.int32)
+        dims["loss_mask"] = ((b, s), jnp.float32)
+    return dims
+
+
+def batch_specs(cfg, shape, mesh=None, batch_axes=("pod", "data")):
+    """ShapeDtypeStructs (optionally with shardings) for the dry-run."""
+    dims = batch_dims(cfg, shape)
+    out = {}
+    for k, (shp, dt) in dims.items():
+        if mesh is not None:
+            axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+            sh = NamedSharding(mesh, PS(axes))
+            out[k] = jax.ShapeDtypeStruct(shp, dt, sharding=sh)
+        else:
+            out[k] = jax.ShapeDtypeStruct(shp, dt)
+    return out
+
+
+def _gen_shard(name, shp, dt, seed, step, index):
+    """Deterministic shard content: pure function of (seed, step, shard)."""
+    key = hash((name, seed, step, str(index))) % (2**31)
+    rng = np.random.default_rng(key)
+    if np.issubdtype(np.dtype("int32"), np.integer) and dt == jnp.int32:
+        return rng.integers(0, 1024, shp, dtype=np.int32)
+    if dt == jnp.float32:
+        return np.ones(shp, np.float32)
+    return rng.standard_normal(shp).astype(np.float32)
+
+
+def make_batch(cfg, shape, *, step=0, seed=0, mesh=None, batch_axes=("pod", "data")):
+    """Build one global batch.  With a mesh, each device's shard is generated
+    independently (host-sharded); without, plain host arrays."""
+    dims = batch_dims(cfg, shape)
+    vocab = cfg.vocab
+    out = {}
+    for k, (shp, dt) in dims.items():
+        if mesh is None:
+            arr = _gen_shard(k, shp, dt, seed, step, ())
+            if k in ("tokens", "labels"):
+                arr = arr % vocab
+            out[k] = jnp.asarray(arr, dt)
+        else:
+            axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+            sh = NamedSharding(mesh, PS(axes))
+
+            def cb(index, _k=k, _shp=shp, _dt=dt):
+                sl = tuple(index)
+                loc = tuple(
+                    (s.stop or d) - (s.start or 0) for s, d in zip(sl, _shp)
+                )
+                arr = _gen_shard(_k, loc, _dt, seed, step, tuple((s.start, s.stop) for s in sl))
+                if _k in ("tokens", "labels"):
+                    arr = arr % vocab
+                return np.asarray(arr, jax.dtypes.canonicalize_dtype(_dt))
+
+            out[k] = jax.make_array_from_callback(shp, sh, cb)
+    return out
+
+
+class Prefetcher:
+    """Background-thread prefetch of the synthetic pipeline."""
+
+    def __init__(self, cfg, shape, *, mesh=None, seed=0, depth=2, start_step=0):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+
+        def worker():
+            step = start_step
+            while not self._stop.is_set():
+                b = make_batch(cfg, shape, step=step, seed=seed, mesh=mesh)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put((step, b), timeout=0.2)
+                        break
+                    except queue.Full:
+                        continue
+                step += 1
+
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def next(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()

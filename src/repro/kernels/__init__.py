@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for BitDecoding.
+
+Each kernel is a subpackage with:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, dispatch, interpret on CPU)
+  ref.py    — pure-jnp oracle used by tests and as the XLA fallback path
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.bitdecode.ops import bitdecode_attention  # noqa: F401

@@ -1,0 +1,287 @@
+"""Pallas TPU kernel: fused low-bit flash-decode attention (Packing Kernel).
+
+Grid = (B, H_kv, nb + 1): FlashDecoding-style iteration over packed KV blocks
+with online-softmax carries in VMEM scratch; the final grid step processes the
+half-precision *residual* buffer (paper §IV-A(2)) and normalizes.
+
+Cooperative-unit mapping (paper §III-A):
+  * unpack + dequant: shift/mask/FMA on the VPU — the CUDA-core role;
+  * QK^T and PV: `lax.dot_general` with bf16 operands, f32 accumulation on
+    the MXU — the Tensor-Core role;
+  * Mosaic's grid pipeline double-buffers the HBM→VMEM DMA of block i+1
+    against the compute of block i — the paper's cp.async/wgmma software
+    pipeline (§V-C(2)) falls out of the BlockSpec machinery;
+  * the online-softmax carry in VMEM scratch across sequential grid steps
+    replaces the multi-warp cooperative softmax (§IV-B(2)): on TPU the KV
+    blocks of one (b, h) are visited by one core, so cross-warp shared-memory
+    reduction is structural rather than synchronized.
+
+The strided packed layout (core/layout.py) makes the unpack a handful of
+full-width vector ops whose output is already in natural token order inside
+the (sublane, lane) tile — the ldmatrix-induced-layout analogue.
+
+`shared_kv=True` is the MLA latent-cache mode (DeepSeek): the cache holds a
+single quantized latent stream; V is a channel-slice of the dequantized K
+tile, so the latent is unpacked once and feeds both matmuls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import layout
+
+MASK_VALUE = -1e37
+
+try:  # jax >= 0.7 renamed TPUCompilerParams
+    _CompilerParams = pltpu.CompilerParams
+except AttributeError:  # pragma: no cover
+    _CompilerParams = pltpu.TPUCompilerParams
+
+
+def _unpack(w, bits):
+    """int32 (npr, d) -> int32 (block_n, d), natural token order (strided layout)."""
+    shifts, mask = layout.plane_shift_mask(bits)
+    planes = [(w >> s) & mask for s in shifts]
+    return jnp.concatenate(planes, axis=0)
+
+
+def make_flash_update(q, m_scr, l_scr, acc_scr, sm_scale):
+    """Online-softmax update closure shared by the dense and paged kernels.
+    q: (g, d_k) bf16; scratch refs hold the running (m, l, acc) carries."""
+
+    def update(k_tile, v_tile, row_mask=None):
+        s = (
+            lax.dot_general(
+                q, k_tile, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            * sm_scale
+        )  # (g, n) — MXU
+        if row_mask is not None:
+            s = jnp.where(row_mask, s, MASK_VALUE)
+        m_prev = m_scr[...]  # (g, 128) lane-replicated
+        m_cur = jnp.max(s, axis=1, keepdims=True)  # (g, 1)
+        m_next = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_next)
+        p = jnp.exp(s - m_next[:, :1])  # (g, n)
+        l_next = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        pv = lax.dot_general(
+            p.astype(jnp.bfloat16), v_tile, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (g, d_v) — MXU
+        acc_scr[...] = acc_scr[...] * alpha[:, :1] + pv
+        m_scr[...] = m_next
+        l_scr[...] = l_next
+
+    return update
+
+
+def dequant_tile(wq, scale, zero, k_gran):
+    """(n, d) int codes + params -> bf16 tile (VPU scale-FMA)."""
+    s = scale.astype(jnp.float32)
+    z = zero.astype(jnp.float32)
+    if k_gran == "channel":  # params per channel: (d,)
+        return (wq.astype(jnp.float32) * s[None, :] + z[None, :]).astype(jnp.bfloat16)
+    return (wq.astype(jnp.float32) * s[:, None] + z[:, None]).astype(jnp.bfloat16)
+
+
+def finalize(o_ref, lse_ref, m_scr, l_scr, acc_scr):
+    # guard l=0 (all tokens masked, e.g. an empty split-KV shard): output
+    # zeros with lse ~ -inf so the cross-chip merge weights it out exactly
+    l = jnp.maximum(l_scr[...], 1e-30)
+    o_ref[0, 0] = (acc_scr[...] / l[:, :1]).astype(o_ref.dtype)
+    lse_ref[0, 0] = m_scr[:, 0] + jnp.log(l[:, 0])
+
+
+def init_carries(m_scr, l_scr, acc_scr):
+    m_scr[...] = jnp.full(m_scr.shape, MASK_VALUE, jnp.float32)
+    l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+    acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+
+def _body(
+    pb_ref,
+    rl_ref,
+    q_ref,
+    kw_ref,
+    ks_ref,
+    kz_ref,
+    vw_ref,
+    vs_ref,
+    vz_ref,
+    kres_ref,
+    vres_ref,
+    o_ref,
+    lse_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    bits,
+    block_n,
+    nb,
+    res_n,
+    sm_scale,
+    k_gran,
+    shared_kv,
+    d_v,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    n_steps = nb + 1
+
+    @pl.when(j == 0)
+    def _init():
+        init_carries(m_scr, l_scr, acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.bfloat16)  # (g, d_k)
+    update = make_flash_update(q, m_scr, l_scr, acc_scr, sm_scale)
+
+    @pl.when(jnp.logical_and(j < n_steps - 1, j < pb_ref[b]))
+    def _packed_block():
+        kw = kw_ref[0, 0, 0]  # (npr, d_k) int32
+        kq = _unpack(kw, bits)  # (block_n, d_k) — VPU
+        k_hat = dequant_tile(kq, ks_ref[0, 0, 0], kz_ref[0, 0, 0], k_gran)
+        if shared_kv:
+            v_hat = k_hat[:, :d_v]
+        else:
+            vq = _unpack(vw_ref[0, 0, 0], bits)
+            v_hat = dequant_tile(vq, vs_ref[0, 0, 0], vz_ref[0, 0, 0], "tensor")
+        update(k_hat, v_hat)
+
+    @pl.when(j == n_steps - 1)
+    def _residual_and_finalize():
+        kr = kres_ref[0, 0].astype(jnp.bfloat16)  # (res_n, d_k)
+        if shared_kv:
+            vr = kres_ref[0, 0, :, :d_v].astype(jnp.bfloat16)
+        else:
+            vr = vres_ref[0, 0].astype(jnp.bfloat16)
+        mask = lax.broadcasted_iota(jnp.int32, (1, res_n), 1) < rl_ref[b]
+        update(kr, vr, row_mask=mask)
+        finalize(o_ref, lse_ref, m_scr, l_scr, acc_scr)
+
+
+def _kernel_standard(pb, rl, q, kw, ks, kz, vw, vs, vz, kres, vres,
+                     o, lse, m, l, acc, **kwargs):
+    _body(pb, rl, q, kw, ks, kz, vw, vs, vz, kres, vres, o, lse, m, l, acc, **kwargs)
+
+
+def _kernel_shared(pb, rl, q, kw, ks, kz, kres, o, lse, m, l, acc, **kwargs):
+    _body(pb, rl, q, kw, ks, kz, None, None, None, kres, None, o, lse, m, l, acc,
+          **kwargs)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bits", "block_n", "sm_scale", "k_gran", "shared_kv", "d_v", "interpret",
+    ),
+)
+def bitdecode_attention_pallas(
+    q,
+    kw,
+    k_scale,
+    k_zero,
+    vw,
+    v_scale,
+    v_zero,
+    k_res,
+    v_res,
+    pack_blocks,
+    res_len,
+    *,
+    bits: int,
+    block_n: int,
+    sm_scale: float,
+    k_gran: str,
+    shared_kv: bool,
+    d_v: int,
+    interpret: bool,
+):
+    """Inputs must be pre-padded: g % 8 == 0, d_k % 128 == 0, d_v % 128 == 0.
+
+    Returns (out [B,H,g,d_v] f32, lse [B,H,g] f32).
+    """
+    b, h, g, d_k = q.shape
+    nb, npr = kw.shape[2], kw.shape[3]
+    res_n = k_res.shape[2]
+    n_steps = nb + 1
+
+    def last_blk(j):
+        return jnp.minimum(j, nb - 1)
+
+    q_spec = pl.BlockSpec((1, 1, g, d_k), lambda i, hh, j, *_: (i, hh, 0, 0))
+    kw_spec = pl.BlockSpec(
+        (1, 1, 1, npr, d_k), lambda i, hh, j, *_: (i, hh, last_blk(j), 0, 0)
+    )
+    kp_shape = (1, 1, 1, d_k) if k_gran == "channel" else (1, 1, 1, block_n)
+    kp_spec = pl.BlockSpec(kp_shape, lambda i, hh, j, *_: (i, hh, last_blk(j), 0))
+    kres_spec = pl.BlockSpec((1, 1, res_n, d_k), lambda i, hh, j, *_: (i, hh, 0, 0))
+
+    in_specs = [q_spec, kw_spec, kp_spec, kp_spec]
+    operands = [q, kw, k_scale, k_zero]
+    if not shared_kv:
+        vw_spec = pl.BlockSpec(
+            (1, 1, 1, npr, d_v), lambda i, hh, j, *_: (i, hh, last_blk(j), 0, 0)
+        )
+        vp_spec = pl.BlockSpec(
+            (1, 1, 1, block_n), lambda i, hh, j, *_: (i, hh, last_blk(j), 0)
+        )
+        vres_spec = pl.BlockSpec(
+            (1, 1, res_n, d_v), lambda i, hh, j, *_: (i, hh, 0, 0)
+        )
+        in_specs += [vw_spec, vp_spec, vp_spec, kres_spec, vres_spec]
+        operands += [vw, v_scale, v_zero, k_res, v_res]
+        kernel = _kernel_standard
+    else:
+        in_specs += [kres_spec]
+        operands += [k_res]
+        kernel = _kernel_shared
+
+    out_specs = [
+        pl.BlockSpec((1, 1, g, d_v), lambda i, hh, j, *_: (i, hh, 0, 0)),
+        pl.BlockSpec((1, 1, g), lambda i, hh, j, *_: (i, hh, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, h, g, d_v), jnp.float32),
+        jax.ShapeDtypeStruct((b, h, g), jnp.float32),
+    ]
+    scratch = [
+        pltpu.VMEM((g, 128), jnp.float32),
+        pltpu.VMEM((g, 128), jnp.float32),
+        pltpu.VMEM((g, d_v), jnp.float32),
+    ]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, n_steps),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    body = functools.partial(
+        kernel,
+        bits=bits,
+        block_n=block_n,
+        nb=nb,
+        res_n=res_n,
+        sm_scale=sm_scale,
+        k_gran=k_gran,
+        shared_kv=shared_kv,
+        d_v=d_v,
+    )
+    out, lse = pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+    )(pack_blocks.astype(jnp.int32), res_len.astype(jnp.int32), *operands)
+    return out, lse

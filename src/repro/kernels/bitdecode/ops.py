@@ -1,0 +1,111 @@
+"""Public entry point for low-bit fused decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitdecode import kernel as _kernel
+from repro.kernels.bitdecode import ref as _ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def bitdecode_attention(
+    q,
+    kw,
+    k_scale,
+    k_zero,
+    vw,
+    v_scale,
+    v_zero,
+    k_res,
+    v_res,
+    pack_blocks,
+    res_len,
+    *,
+    bits: int,
+    block_n: int = 128,
+    sm_scale: float | None = None,
+    k_gran: str = "channel",
+    shared_kv: bool = False,
+    d_v: int | None = None,
+    impl: str = "auto",
+    return_lse: bool = False,
+):
+    """Fused low-bit decode attention over (packed cache + bf16 residual).
+
+    q: [B, H_kv, g_q, d_k] (query-transformed).  See ref.py for full shapes.
+    impl: 'pallas' | 'xla' | 'auto'.  Pallas runs interpret-mode off-TPU.
+    """
+    b, h, g, d_k = q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / (d_k**0.5)
+    if shared_kv:
+        if d_v is None:
+            raise ValueError("shared_kv requires d_v")
+    else:
+        d_v = v_res.shape[-1]
+
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+
+    if impl == "xla":
+        out, lse = _ref.bitdecode_attention_ref(
+            q, kw, k_scale, k_zero, vw, v_scale, v_zero, k_res, v_res,
+            pack_blocks, res_len,
+            bits=bits, block_n=block_n, sm_scale=sm_scale, k_gran=k_gran,
+            shared_kv=shared_kv, d_v=d_v,
+        )
+        return (out, lse) if return_lse else out
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+
+    # ---- pad to TPU tile alignment: g -> x8 sublanes, d -> x128 lanes ----
+    g_p = max(8, _round_up(g, 8))
+    dk_p = _round_up(d_k, 128)
+    dv_p = _round_up(d_v, 128)
+
+    def pad(x, axis_pads):
+        cfg = [(0, 0)] * x.ndim
+        for ax, p in axis_pads:
+            cfg[ax] = (0, p)
+        return jnp.pad(x, cfg) if any(p for _, p in axis_pads) else x
+
+    q_p = pad(q, [(2, g_p - g), (3, dk_p - d_k)])
+    kw_p = pad(kw, [(4, dk_p - d_k)])
+    k_res_p = pad(k_res, [(3, dk_p - d_k)])
+    if k_gran == "channel":
+        # pad channels with scale=1 / zero=0 so dequantized padding is 0
+        if dk_p != d_k:
+            ones = jnp.ones(k_scale.shape[:-1] + (dk_p - d_k,), k_scale.dtype)
+            k_scale_p = jnp.concatenate([k_scale, ones], axis=-1)
+            k_zero_p = pad(k_zero, [(3, dk_p - d_k)])
+        else:
+            k_scale_p, k_zero_p = k_scale, k_zero
+    else:
+        k_scale_p, k_zero_p = k_scale, k_zero
+
+    if shared_kv:
+        vw_p = v_scale_p = v_zero_p = v_res_p = None
+        # d_v must remain a lane-aligned slice of d_k
+        if d_v % 128:
+            raise ValueError(f"shared_kv requires d_v % 128 == 0, got {d_v}")
+        dv_eff = d_v
+    else:
+        vw_p = pad(vw, [(4, dv_p - d_v)])
+        v_scale_p, v_zero_p = v_scale, v_zero
+        v_res_p = pad(v_res, [(3, dv_p - d_v)])
+        dv_eff = dv_p
+
+    out, lse = _kernel.bitdecode_attention_pallas(
+        q_p, kw_p, k_scale_p, k_zero_p, vw_p, v_scale_p, v_zero_p,
+        k_res_p, v_res_p, pack_blocks, res_len,
+        bits=bits, block_n=block_n, sm_scale=float(sm_scale), k_gran=k_gran,
+        shared_kv=shared_kv, d_v=dv_eff,
+        interpret=jax.default_backend() != "tpu",
+    )
+    out = out[:, :, :g, :d_v]
+    lse = lse[:, :, :g]
+    return (out, lse) if return_lse else out

@@ -1,0 +1,103 @@
+"""Pure-jnp oracle for the fused low-bit decode-attention (Packing) kernel.
+
+Also serves as the XLA fallback path on CPU and the dry-run lowering target:
+it performs the *same* work (unpack, dequant, QK^T, online-softmax-equivalent
+masked softmax, PV) as the Pallas kernel, so ``cost_analysis()`` of a program
+built on this path reflects the mixed-precision pipeline honestly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import quantizer
+
+MASK_VALUE = -1e37
+
+
+def _dequant_blocks(words, scale, zero, bits, granularity, dtype=jnp.bfloat16):
+    """words [B,H,nb,npr,d] -> [B,H,nb*block_n,d] in natural token order."""
+    x = quantizer.unpack_and_dequantize(words, scale, zero, bits, granularity, dtype=dtype)
+    b, h, nb, n, d = x.shape
+    return x.reshape(b, h, nb * n, d)
+
+
+def bitdecode_attention_ref(
+    q,
+    kw,
+    k_scale,
+    k_zero,
+    vw,
+    v_scale,
+    v_zero,
+    k_res,
+    v_res,
+    pack_blocks,
+    res_len,
+    *,
+    bits: int,
+    block_n: int = 128,
+    sm_scale: float | None = None,
+    k_gran: str = "channel",
+    shared_kv: bool = False,
+    d_v: int | None = None,
+):
+    """Low-bit flash-decode attention, reference semantics.
+
+    q: [B, H_kv, g_q, d_k]    (already query-transformed: g_q = h_q / h_kv)
+    kw: int32 [B, H_kv, nb, npr, d_k]; k params per k_gran.
+    vw: int32 [B, H_kv, nb, npr, d_v] + per-token params [B,H,nb,block_n]
+        (ignored when shared_kv: V is the first d_v channels of dequant K —
+        the MLA latent-cache mode).
+    k_res/v_res: bf16 [B, H_kv, N_r, d_k/d_v]; pack_blocks/res_len: int32 [B].
+
+    Returns (out [B,H,g,d_v] f32, lse [B,H,g] f32).
+    """
+    b, h, g, d_k = q.shape
+    nb = kw.shape[2]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d_k**0.5)
+    if shared_kv:
+        assert d_v is not None
+    else:
+        d_v = v_res.shape[-1]
+
+    k_hat = _dequant_blocks(kw, k_scale, k_zero, bits, k_gran)  # [B,H,Sp,dk]
+    if shared_kv:
+        v_hat = k_hat[..., :d_v]
+        if v_res is None:  # latent mode: residual V is the slice of residual K
+            v_res = k_res[..., :d_v]
+    else:
+        v_hat = _dequant_blocks(vw, v_scale, v_zero, bits, "tensor")
+
+    k_all = jnp.concatenate([k_hat, k_res.astype(k_hat.dtype)], axis=2)
+    v_all = jnp.concatenate([v_hat, v_res.astype(v_hat.dtype)], axis=2)
+
+    s_pack = nb * block_n
+    res_n = k_res.shape[2]
+    t = jnp.arange(s_pack + res_n, dtype=jnp.int32)
+    valid_pack = t[None, :] < (pack_blocks[:, None] * block_n)
+    in_res = t[None, :] >= s_pack
+    valid_res = in_res & (t[None, :] - s_pack < res_len[:, None])
+    valid = jnp.where(in_res, valid_res, valid_pack)  # [B, S_tot]
+
+    scores = lax.dot_general(
+        q.astype(jnp.bfloat16),
+        k_all,
+        (((3,), (3,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32,
+    ) * sm_scale  # [B,H,g,S_tot]
+    scores = jnp.where(valid[:, None, None, :], scores, MASK_VALUE)
+
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = lax.dot_general(
+        p.astype(jnp.bfloat16),
+        v_all,
+        (((3,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32,
+    )
+    out = out / l.astype(jnp.float32)
+    lse = (m + jnp.log(l))[..., 0]
+    return out, lse

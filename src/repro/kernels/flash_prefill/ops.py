@@ -1,0 +1,61 @@
+"""Public entry point for the flash-prefill kernel (padding + dispatch).
+
+Forward-only: used in the prefill/serving path (no grads needed).  Training
+keeps the XLA blockwise path; wiring a flash backward kernel is the natural
+next perf iteration (EXPERIMENTS §Perf cells B/C discussion).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_prefill import kernel as _kernel
+from repro.kernels.flash_prefill import ref as _ref
+
+
+def _round_up(x, m):
+    return -(-x // m) * m
+
+
+def flash_prefill_attention(
+    q,  # [B, Hq, S, d]
+    k,  # [B, Hkv, S, d]
+    v,
+    *,
+    sm_scale: float | None = None,
+    causal: bool = True,
+    bq: int = 256,
+    bk: int = 256,
+    impl: str = "auto",
+    return_lse: bool = False,
+):
+    b, hq, s, d = q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / d**0.5
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        out, lse = _ref.flash_prefill_ref(q, k, v, sm_scale=sm_scale, causal=causal)
+        return (out, lse) if return_lse else out
+    if impl != "pallas":
+        raise ValueError(impl)
+
+    blk = max(bq, bk)
+    s_pad = _round_up(s, blk)
+    d_pad = _round_up(d, 128)
+
+    def pad(x):
+        cfg = [(0, 0)] * 4
+        cfg[2] = (0, s_pad - s)
+        cfg[3] = (0, d_pad - d)
+        return jnp.pad(x, cfg) if (s_pad != s or d_pad != d) else x
+
+    out, lse = _kernel.flash_prefill_pallas(
+        pad(q).astype(jnp.bfloat16), pad(k).astype(jnp.bfloat16),
+        pad(v).astype(jnp.bfloat16),
+        bq=bq, bk=bk, sm_scale=float(sm_scale), causal=causal, s_valid=s,
+        interpret=jax.default_backend() != "tpu",
+    )
+    out = out[:, :, :s, :d]
+    lse = lse[:, :, :s]
+    return (out, lse) if return_lse else out

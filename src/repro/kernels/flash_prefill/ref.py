@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-prefill kernel (naive causal attention with
+the kernel's mixed-precision choices: bf16 operands, f32 softmax/accum)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill_ref(q, k, v, *, sm_scale=None, causal=True):
+    """q [B,Hq,S,d]; k,v [B,Hkv,S,d] -> (out [B,Hq,S,d] bf16, lse [B,Hq,S])."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / d**0.5
+    kx = jnp.repeat(k, g, axis=1)
+    vx = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.bfloat16), kx.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    ) * sm_scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None], scores, -1e37)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum(
+        "bhqk,bhkd->bhqd", (p / l).astype(jnp.bfloat16), vx.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+    lse = (m + jnp.log(l))[..., 0]
+    return out.astype(jnp.bfloat16), lse

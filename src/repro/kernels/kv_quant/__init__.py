@@ -1,0 +1,1 @@
+from repro.kernels.kv_quant.ops import quantize_kv  # noqa: F401

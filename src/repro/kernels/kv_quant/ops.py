@@ -1,0 +1,42 @@
+"""Public entry point for fused KV quantize+pack."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kv_quant import kernel as _kernel
+from repro.kernels.kv_quant import ref as _ref
+
+
+def quantize_kv(
+    x: jnp.ndarray,
+    bits: int,
+    granularity: str,
+    *,
+    block_n: int = 128,
+    param_dtype=jnp.bfloat16,
+    impl: str = "auto",
+):
+    """Quantize+pack x[B,H,S,d] into (words[B,H,nb,npr,d], scale, zero).
+
+    impl: 'pallas' (interpret-mode on CPU), 'xla' (pure-jnp reference path,
+    used by the dry-run so cost_analysis sees the real dequant/pack work),
+    or 'auto' (pallas on TPU, xla otherwise).
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        return _kernel.quantize_kv_pallas(
+            x,
+            bits=bits,
+            granularity=granularity,
+            block_n=block_n,
+            param_dtype=param_dtype,
+            interpret=interpret,
+        )
+    if impl == "xla":
+        return _ref.quantize_kv_ref(
+            x, bits, granularity, block_n=block_n, param_dtype=param_dtype
+        )
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the fused quantize+pack (Residual) kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import layout, quantizer
+
+
+def quantize_kv_ref(
+    x: jnp.ndarray,
+    bits: int,
+    granularity: str,
+    *,
+    block_n: int = 128,
+    param_dtype=jnp.bfloat16,
+):
+    """Quantize+pack a KV tensor with the strided block layout.
+
+    x: [B, H, S, d] with S % block_n == 0.
+    Returns:
+      words: int32 [B, H, nb, npr, d]
+      scale/zero: [B, H, nb, d] (channel) or [B, H, nb, block_n] (tensor)
+    """
+    b, h, s, d = x.shape
+    if s % block_n:
+        raise ValueError(f"S={s} must be a multiple of block_n={block_n}")
+    nb = s // block_n
+    xb = x.reshape(b, h, nb, block_n, d)
+    words, scale, zero = quantizer.quantize_and_pack(
+        xb, bits, granularity, param_dtype=param_dtype
+    )
+    npr = layout.words_per_block(block_n, bits)
+    assert words.shape == (b, h, nb, npr, d)
+    return words, scale, zero
+
+
+def dequantize_kv_ref(words, scale, zero, bits, granularity, *, dtype=jnp.bfloat16):
+    """Inverse: words [B,H,nb,npr,d] -> [B,H,nb*block_n,d] natural order."""
+    x = quantizer.unpack_and_dequantize(words, scale, zero, bits, granularity, dtype=dtype)
+    b, h, nb, n, d = x.shape
+    return x.reshape(b, h, nb * n, d)

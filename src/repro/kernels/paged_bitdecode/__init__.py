@@ -1,0 +1,1 @@
+from repro.kernels.paged_bitdecode.ops import paged_bitdecode_attention  # noqa: F401

@@ -1,0 +1,144 @@
+"""Pallas TPU kernel: paged low-bit flash-decode attention (paper's Page
+setting, §VI-A).
+
+TPU-idiomatic paging: instead of a scalar-core page-table walk (vLLM/GPU),
+the page table is a *scalar-prefetch* operand — BlockSpec index_maps read
+``page_table[b, j]`` to pick which page of the global pool the next grid
+step's DMA fetches, so page indirection rides the same double-buffered
+HBM→VMEM pipeline as the dense kernel (zero extra kernels, zero gathers).
+
+Pools are [n_pages, H, ...]; everything else matches kernels/bitdecode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.kernels.bitdecode.kernel import (_CompilerParams, _unpack,
+                                            dequant_tile, finalize,
+                                            init_carries, make_flash_update)
+
+
+def _kernel(pt_ref, pb_ref, rl_ref, q_ref, kw_ref, ks_ref, kz_ref,
+            vw_ref, vs_ref, vz_ref, kres_ref, vres_ref,
+            o_ref, lse_ref, m_scr, l_scr, acc_scr,
+            *, bits, block_n, nb, res_n, sm_scale, k_gran):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    n_steps = nb + 1
+
+    @pl.when(j == 0)
+    def _init():
+        init_carries(m_scr, l_scr, acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.bfloat16)
+    update = make_flash_update(q, m_scr, l_scr, acc_scr, sm_scale)
+
+    @pl.when(jnp.logical_and(j < n_steps - 1, j < pb_ref[b]))
+    def _packed_page():
+        kq = _unpack(kw_ref[0, 0], bits)  # pool block (1,1,npr,dk) -> [0,0]
+        k_hat = dequant_tile(kq, ks_ref[0, 0], kz_ref[0, 0], k_gran)
+        vq = _unpack(vw_ref[0, 0], bits)
+        v_hat = dequant_tile(vq, vs_ref[0, 0], vz_ref[0, 0], "tensor")
+        update(k_hat, v_hat)
+
+    @pl.when(j == n_steps - 1)
+    def _residual_and_finalize():
+        kr = kres_ref[0, 0].astype(jnp.bfloat16)
+        vr = vres_ref[0, 0].astype(jnp.bfloat16)
+        mask = lax.broadcasted_iota(jnp.int32, (1, res_n), 1) < rl_ref[b]
+        update(kr, vr, row_mask=mask)
+        finalize(o_ref, lse_ref, m_scr, l_scr, acc_scr)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "block_n", "sm_scale", "k_gran", "interpret"),
+)
+def paged_bitdecode_attention_pallas(
+    q,             # [B, H, g, d_k]  (pre-padded)
+    kw_pool,       # int32 [P, H, npr, d_k]
+    k_scale_pool,  # [P, H, d_k] (channel) or [P, H, block_n]
+    k_zero_pool,
+    vw_pool,       # int32 [P, H, npr, d_v]
+    v_scale_pool,  # [P, H, block_n]
+    v_zero_pool,
+    k_res, v_res,  # [B, H, res_n, d]
+    page_table,    # int32 [B, nb_max]
+    pack_blocks, res_len,
+    *,
+    bits: int, block_n: int, sm_scale: float, k_gran: str, interpret: bool,
+):
+    b, h, g, d_k = q.shape
+    _, _, npr, _ = kw_pool.shape
+    d_v = vw_pool.shape[-1]
+    nb = page_table.shape[1]
+    res_n = k_res.shape[2]
+    n_steps = nb + 1
+
+    def page(j, pt_ref, b_):
+        # page id for grid step j of sequence b (clamped for residual step)
+        return pt_ref[b_, jnp.minimum(j, nb - 1)]
+
+    q_spec = pl.BlockSpec((1, 1, g, d_k), lambda i, hh, j, pt, pb, rl: (i, hh, 0, 0))
+    kw_spec = pl.BlockSpec(
+        (1, 1, npr, d_k), lambda i, hh, j, pt, pb, rl: (page(j, pt, i), hh, 0, 0)
+    )
+    kp_last = d_k if k_gran == "channel" else block_n
+    kp_spec = pl.BlockSpec(
+        (1, 1, kp_last), lambda i, hh, j, pt, pb, rl: (page(j, pt, i), hh, 0)
+    )
+    vw_spec = pl.BlockSpec(
+        (1, 1, npr, d_v), lambda i, hh, j, pt, pb, rl: (page(j, pt, i), hh, 0, 0)
+    )
+    vp_spec = pl.BlockSpec(
+        (1, 1, block_n), lambda i, hh, j, pt, pb, rl: (page(j, pt, i), hh, 0)
+    )
+    res_spec_k = pl.BlockSpec(
+        (1, 1, res_n, d_k), lambda i, hh, j, pt, pb, rl: (i, hh, 0, 0))
+    res_spec_v = pl.BlockSpec(
+        (1, 1, res_n, d_v), lambda i, hh, j, pt, pb, rl: (i, hh, 0, 0))
+
+    out_specs = [
+        pl.BlockSpec((1, 1, g, d_v), lambda i, hh, j, pt, pb, rl: (i, hh, 0, 0)),
+        pl.BlockSpec((1, 1, g), lambda i, hh, j, pt, pb, rl: (i, hh, 0)),
+    ]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, h, n_steps),
+        in_specs=[q_spec, kw_spec, kp_spec, kp_spec, vw_spec, vp_spec, vp_spec,
+                  res_spec_k, res_spec_v],
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, d_v), jnp.float32),
+        ],
+    )
+    body = functools.partial(
+        _kernel, bits=bits, block_n=block_n, nb=nb, res_n=res_n,
+        sm_scale=sm_scale, k_gran=k_gran,
+    )
+    out, lse = pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, g, d_v), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, g), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+    )(page_table.astype(jnp.int32), pack_blocks.astype(jnp.int32),
+      res_len.astype(jnp.int32), q,
+      kw_pool, k_scale_pool, k_zero_pool, vw_pool, v_scale_pool, v_zero_pool,
+      k_res, v_res)
+    return out, lse

@@ -1,0 +1,69 @@
+"""Public entry point for paged low-bit decode attention (Page setting)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_bitdecode import kernel as _kernel
+from repro.kernels.paged_bitdecode import ref as _ref
+
+
+def _round_up(x, m):
+    return -(-x // m) * m
+
+
+def paged_bitdecode_attention(
+    q,
+    kw_pool, k_scale_pool, k_zero_pool,
+    vw_pool, v_scale_pool, v_zero_pool,
+    k_res, v_res,
+    page_table, pack_blocks, res_len,
+    *,
+    bits: int, block_n: int = 128, sm_scale: float | None = None,
+    k_gran: str = "channel", impl: str = "auto", return_lse: bool = False,
+):
+    b, h, g, d_k = q.shape
+    d_v = vw_pool.shape[-1]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d_k**0.5)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        out, lse = _ref.paged_bitdecode_attention_ref(
+            q, kw_pool, k_scale_pool, k_zero_pool, vw_pool, v_scale_pool,
+            v_zero_pool, k_res, v_res, page_table, pack_blocks, res_len,
+            bits=bits, block_n=block_n, sm_scale=sm_scale, k_gran=k_gran,
+        )
+        return (out, lse) if return_lse else out
+    if impl != "pallas":
+        raise ValueError(impl)
+
+    g_p, dk_p, dv_p = max(8, _round_up(g, 8)), _round_up(d_k, 128), _round_up(d_v, 128)
+
+    def pad(x, axis_pads):
+        cfg = [(0, 0)] * x.ndim
+        for ax, p in axis_pads:
+            cfg[ax] = (0, p)
+        return jnp.pad(x, cfg) if any(p for _, p in axis_pads) else x
+
+    q_p = pad(q, [(2, g_p - g), (3, dk_p - d_k)])
+    kw_p = pad(kw_pool, [(3, dk_p - d_k)])
+    if k_gran == "channel" and dk_p != d_k:
+        ones = jnp.ones(k_scale_pool.shape[:-1] + (dk_p - d_k,), k_scale_pool.dtype)
+        ks_p = jnp.concatenate([k_scale_pool, ones], axis=-1)
+        kz_p = pad(k_zero_pool, [(2, dk_p - d_k)])
+    else:
+        ks_p, kz_p = k_scale_pool, k_zero_pool
+    vw_p = pad(vw_pool, [(3, dv_p - d_v)])
+    kres_p = pad(k_res, [(3, dk_p - d_k)])
+    vres_p = pad(v_res, [(3, dv_p - d_v)])
+
+    out, lse = _kernel.paged_bitdecode_attention_pallas(
+        q_p, kw_p, ks_p, kz_p, vw_p, v_scale_pool, v_zero_pool,
+        kres_p, vres_p, page_table, pack_blocks, res_len,
+        bits=bits, block_n=block_n, sm_scale=float(sm_scale), k_gran=k_gran,
+        interpret=jax.default_backend() != "tpu",
+    )
+    out = out[:, :, :g, :d_v]
+    lse = lse[:, :, :g]
+    return (out, lse) if return_lse else out

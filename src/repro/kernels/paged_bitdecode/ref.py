@@ -1,0 +1,35 @@
+"""Oracle for paged low-bit decode attention: gather pages, then reuse the
+dense bitdecode reference."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.bitdecode import ref as bd_ref
+
+
+def _gather(pool, table):
+    """pool [P, H, ...] + table [B, nb] -> [B, H, nb, ...]."""
+    g = jnp.take(pool, table, axis=0)  # [B, nb, H, ...]
+    return jnp.moveaxis(g, 2, 1)
+
+
+def paged_bitdecode_attention_ref(
+    q,
+    kw_pool, k_scale_pool, k_zero_pool,   # [P,H,npr,dk], [P,H,dk|block]
+    vw_pool, v_scale_pool, v_zero_pool,
+    k_res, v_res,                          # dense residual per sequence
+    page_table,                            # int32 [B, nb_max]
+    pack_blocks, res_len,
+    *,
+    bits, block_n=128, sm_scale=None, k_gran="channel",
+):
+    kw = _gather(kw_pool, page_table)
+    ks = _gather(k_scale_pool, page_table)
+    kz = _gather(k_zero_pool, page_table)
+    vw = _gather(vw_pool, page_table)
+    vs = _gather(v_scale_pool, page_table)
+    vz = _gather(v_zero_pool, page_table)
+    return bd_ref.bitdecode_attention_ref(
+        q, kw, ks, kz, vw, vs, vz, k_res, v_res, pack_blocks, res_len,
+        bits=bits, block_n=block_n, sm_scale=sm_scale, k_gran=k_gran,
+    )

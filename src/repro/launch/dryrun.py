@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
+extract memory/cost/collective statistics for the roofline analysis.
+
+MUST set XLA_FLAGS before any other import (jax locks the device count on
+first init) — hence the two lines above.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+import argparse  # noqa: E402
+import gzip  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as PS  # noqa: E402
+
+from repro.configs.base import SHAPES, _REGISTRY, get_config  # noqa: E402
+from repro.core.attention import use_splitkv  # noqa: E402
+from repro.data.pipeline import batch_specs  # noqa: E402
+from repro.dist import sharding as shd  # noqa: E402
+from repro.dist.state_specs import decode_state_specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh, pick_batch_axes  # noqa: E402
+from repro.models.zoo import build_model  # noqa: E402
+from repro.optim import get_optimizer  # noqa: E402
+from repro.train.step import make_train_step, train_state_shapes  # noqa: E402
+from repro.utils import hlo_cost, roofline  # noqa: E402
+
+
+def _to_shardings(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, PS) else s,
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, PS) or x is None,
+    )
+
+
+def _opt_state_specs(defs, pspecs, optimizer_name):
+    from repro.models.params import P
+
+    if optimizer_name == "adamw":
+        return {"m": pspecs, "v": pspecs}
+
+    def leaf(p: P, spec: PS):
+        parts = list(spec) + [None] * (len(p.shape) - len(spec))
+        if len(p.shape) >= 2:
+            return {"row": PS(*parts[:-1]), "col": PS(*parts[:-2], parts[-1])}
+        return {"v": PS(*parts)}
+
+    return jax.tree.map(leaf, defs, pspecs, is_leaf=lambda x: isinstance(x, (P, PS)))
+
+
+def _train_state_specs(model, cfg, mesh, rules):
+    from repro.train.step import TrainState
+
+    defs = model.param_defs()
+    pspecs = shd.specs_for(defs, rules, mesh)
+    ospecs = _opt_state_specs(defs, pspecs, cfg.optimizer)
+    return TrainState(params=pspecs, opt_state=ospecs, step=PS())
+
+
+def _decode_inputs(model, cfg, mesh, shape):
+    b = shape.global_batch
+    max_seq = shape.seq_len
+    state_struct = jax.eval_shape(lambda: model.init_decode_state(b, max_seq))
+    seq_ax = "data" if pick_batch_axes(mesh, b) == () else None
+    state_specs = decode_state_specs(model, mesh, global_batch=b, seq_ax=seq_ax)
+    batch_ax = pick_batch_axes(mesh, b) or None
+    tok_struct = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tok_spec = PS(batch_ax)
+    return state_struct, state_specs, tok_struct, tok_spec, seq_ax
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             *, verbose: bool = True, overrides: dict | None = None,
+             tag_suffix: str = "", serve_state_auto: bool = False):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi" if multi_pod else "single"
+    tag = f"{cfg.name}__{shape_name}__{mesh_name}" + (f"__{tag_suffix}" if tag_suffix else "")
+    model = build_model(cfg)
+    rules = shd.base_rules(cfg)
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            optimizer = get_optimizer(cfg.optimizer)
+            step_fn = make_train_step(model, optimizer, microbatches=cfg.microbatches)
+            state_struct = train_state_shapes(model, optimizer)
+            state_specs = _train_state_specs(model, cfg, mesh, rules)
+            state_sh = _to_shardings(state_specs, mesh)
+            b_specs = batch_specs(cfg, shape, mesh=mesh)
+            metric_sh = {"loss": NamedSharding(mesh, PS()),
+                         "grad_norm": NamedSharding(mesh, PS())}
+            jitted = jax.jit(step_fn, in_shardings=(state_sh, None),
+                             out_shardings=(state_sh, metric_sh))
+            lowered = jitted.lower(state_struct, b_specs)
+        elif shape.kind == "prefill":
+            params_struct = model.param_shapes()
+            params_sh = _to_shardings(shd.specs_for(model.param_defs(), rules, mesh), mesh)
+            b_specs = batch_specs(cfg, shape, mesh=mesh)
+            max_seq = shape.seq_len + cfg.kv_block
+
+            def prefill_fn(params, batch):
+                return model.prefill(params, batch, max_seq)
+
+            jitted = jax.jit(prefill_fn, in_shardings=(params_sh, None))
+            lowered = jitted.lower(params_struct, b_specs)
+        else:  # decode
+            params_struct = model.param_shapes()
+            params_sh = _to_shardings(shd.specs_for(model.param_defs(), rules, mesh), mesh)
+            state_struct, state_specs, tok_struct, tok_spec, seq_ax = _decode_inputs(
+                model, cfg, mesh, shape
+            )
+            if serve_state_auto:
+                # compiler-placed decode state (§Perf iteration A2): forcing
+                # hand-written cache shardings made the partitioner re-gather
+                # the whole packed cache at entry; letting XLA choose the
+                # state placement (and pinning the state there between steps,
+                # via compiled.input_shardings) removes the round-trip.
+                state_sh = jax.tree.map(lambda _: None, state_specs,
+                                        is_leaf=lambda x: True)
+            else:
+                state_sh = _to_shardings(state_specs, mesh)
+            tok_sh = NamedSharding(mesh, tok_spec)
+
+            def serve_step(params, state, tokens):
+                return model.decode_step(params, state, tokens)
+
+            jitted = jax.jit(serve_step, in_shardings=(params_sh, state_sh, tok_sh),
+                             out_shardings=(None, state_sh))
+            ctx = use_splitkv(mesh) if seq_ax else _NullCtx()
+            with ctx:
+                lowered = jitted.lower(params_struct, state_struct, tok_struct)
+
+        compiled = lowered.compile()
+
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+
+    # trip-count-aware HLO cost model (XLA cost_analysis counts while bodies
+    # once — useless for scan-over-layers programs; see utils/hlo_cost.py)
+    hc = hlo_cost.analyze(hlo)
+    flops = hc["flops"]
+    bytes_acc = hc["bytes"]
+    coll = dict(hc["collectives"], total=hc["collective_bytes"])
+    terms = roofline.roofline_terms(flops, bytes_acc, coll["total"])
+    xla_raw = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+    }
+
+    n_total = roofline.count_params(model.param_shapes())
+    n_active = roofline.active_params(cfg, n_total)
+    n_chips = mesh.size
+    mflops = roofline.model_flops(cfg, shape, n_active, n_total)
+    useful_ratio = mflops / max(1.0, flops * n_chips)
+
+    mem_fields = {}
+    for f in ("temp_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        try:
+            mem_fields[f] = int(getattr(mem, f))
+        except Exception:
+            pass
+
+    rec = {
+        "arch": cfg.name, "shape": shape_name, "mesh": mesh_name,
+        "chips": n_chips, "kind": shape.kind,
+        "compile_s": round(compile_s, 1),
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": coll["total"],
+        "collectives": {k: v for k, v in coll.items() if k != "total"},
+        "memory_analysis": mem_fields,
+        "roofline": terms,
+        "n_params_total": n_total,
+        "n_params_active": n_active,
+        "model_flops": mflops,
+        "useful_flops_ratio": useful_ratio,
+        "xla_cost_analysis_raw": xla_raw,  # per-while-body-once (reference)
+        "hlo_bytes": len(hlo),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=2))
+    hlo_dir = out_dir / "hlo"
+    hlo_dir.mkdir(exist_ok=True)
+    with gzip.open(hlo_dir / f"{tag}.hlo.gz", "wt") as f:
+        f.write(hlo)
+    if verbose:
+        print(f"[dryrun] {tag}: compile ok in {compile_s:.0f}s")
+        print(f"  memory_analysis: {mem_fields}")
+        print(f"  cost_analysis: flops={flops:.3e} bytes={bytes_acc:.3e}")
+        print(f"  collective bytes/device: {coll['total']:.3e}")
+        print(f"  roofline: {terms}")
+    return rec
+
+
+class _NullCtx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--set", action="append", default=[], metavar="KEY=VAL",
+                    help="ArchConfig overrides for perf iterations, e.g. "
+                         "--set sharding_profile=tp --set kv_bits=2")
+    ap.add_argument("--tag", default="", help="suffix for artifact filenames")
+    ap.add_argument("--serve-state-auto", action="store_true",
+                    help="compiler-placed decode state (perf iteration)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    out = Path(args.out)
+    archs = [a for a in _REGISTRY if a != "llama2_7b"] if args.all else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cfg_name = get_config(arch).name
+                tag = f"{cfg_name}__{shape}__{'multi' if mp else 'single'}"
+                if args.skip_existing and (out / f"{tag}.json").exists():
+                    print(f"[dryrun] {tag}: cached, skipping")
+                    continue
+                try:
+                    run_cell(arch, shape, mp, out, overrides=overrides or None,
+                             tag_suffix=args.tag,
+                             serve_state_auto=args.serve_state_auto)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((tag, repr(e)))
+                    print(f"[dryrun] {tag}: FAILED: {e}")
+                    traceback.print_exc(limit=4)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print("\nall dry-run cells compiled successfully")
+
+
+if __name__ == "__main__":
+    main()

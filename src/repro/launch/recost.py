@@ -1,0 +1,45 @@
+"""Re-derive roofline terms from saved dry-run HLO artifacts without
+recompiling (cost-model iterations are decoupled from the compile sweep).
+
+  PYTHONPATH=src python -m repro.launch.recost [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+from pathlib import Path
+
+from repro.utils import hlo_cost, roofline
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    d = Path(args.dir)
+    for jf in sorted(d.glob("*.json")):
+        hf = d / "hlo" / (jf.stem + ".hlo.gz")
+        if not hf.exists():
+            print(f"[recost] {jf.stem}: no saved HLO, skipping")
+            continue
+        rec = json.loads(jf.read_text())
+        with gzip.open(hf, "rt") as f:
+            hc = hlo_cost.analyze(f.read())
+        rec["flops_per_device"] = hc["flops"]
+        rec["bytes_per_device"] = hc["bytes"]
+        rec["collective_bytes_per_device"] = hc["collective_bytes"]
+        rec["collectives"] = hc["collectives"]
+        rec["roofline"] = roofline.roofline_terms(
+            hc["flops"], hc["bytes"], hc["collective_bytes"]
+        )
+        rec["useful_flops_ratio"] = rec["model_flops"] / max(
+            1.0, hc["flops"] * rec["chips"]
+        )
+        jf.write_text(json.dumps(rec, indent=2))
+        print(f"[recost] {jf.stem}: flops={hc['flops']:.3e} bytes={hc['bytes']:.3e} "
+              f"coll={hc['collective_bytes']:.3e}")
+
+
+if __name__ == "__main__":
+    main()

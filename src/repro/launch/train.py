@@ -1,0 +1,123 @@
+"""Training launcher: pjit train loop with fault tolerance.
+
+Features: FSDP/TP sharding from logical rules, synthetic host-sharded data
+pipeline with background prefetch, checkpoint/restart (atomic, keep-k,
+resharding restore -> elastic scaling), step retry with rollback on transient
+failure, XLA latency-hiding-scheduler flags for compute/comm overlap.
+
+Multi-host note: on a real cluster each process calls
+``jax.distributed.initialize(coordinator, num_processes, process_id)`` before
+anything else; preemption of a host surfaces as a failed step -> the loop
+restores the latest checkpoint on the surviving mesh (make_elastic_mesh).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \
+      --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+# Latency-hiding scheduler: overlap FSDP all-gathers/reduce-scatters with
+# compute inside the scan-over-layers (no-op on CPU, essential on TPU).
+os.environ.setdefault(
+    "LIBTPU_INIT_ARGS",
+    "--xla_tpu_enable_async_collective_fusion=true "
+    "--xla_tpu_enable_latency_hiding_scheduler=true "
+    "--xla_tpu_overlap_compute_collective_tc=true",
+)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as PS  # noqa: E402
+
+from repro.checkpoint import CheckpointManager  # noqa: E402
+from repro.configs.base import SHAPES, ShapeSpec, get_config, smoke_config  # noqa: E402
+from repro.data.pipeline import Prefetcher, make_batch  # noqa: E402
+from repro.dist import sharding as shd  # noqa: E402
+from repro.launch.mesh import make_elastic_mesh  # noqa: E402
+from repro.models.zoo import build_model  # noqa: E402
+from repro.optim import get_optimizer  # noqa: E402
+from repro.train.step import init_train_state, make_train_step  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--max-failures", type=int, default=3)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    optimizer = get_optimizer(cfg.optimizer, total_steps=args.steps)
+    mesh = make_elastic_mesh(model_parallel=args.model_parallel)
+    rules = shd.base_rules(cfg)
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    mgr = CheckpointManager(args.ckpt_dir, keep=3)
+
+    train_step = make_train_step(model, optimizer, microbatches=cfg.microbatches)
+    param_sh = shd.shardings_for(model.param_defs(), rules, mesh)
+
+    with jax.set_mesh(mesh):
+        state = init_train_state(model, optimizer, jax.random.PRNGKey(0))
+        # place params on their shardings (optimizer states follow via jit)
+        state = state.__class__(
+            params=jax.device_put(state.params, param_sh),
+            opt_state=state.opt_state,
+            step=state.step,
+        )
+        start = 0
+        if args.resume and mgr.latest_step() is not None:
+            state, start = mgr.restore(None, state)
+            print(f"[train] resumed from step {start}")
+
+        jitted = jax.jit(train_step, donate_argnums=(0,))
+        pre = Prefetcher(cfg, shape, mesh=mesh, start_step=start)
+        failures = 0
+        t0 = time.time()
+        step = start
+        try:
+            while step < args.steps:
+                _, batch = pre.next()
+                try:
+                    state, metrics = jitted(state, batch)
+                except Exception as e:  # transient failure -> rollback
+                    failures += 1
+                    print(f"[train] step {step} failed ({e!r}); "
+                          f"failure {failures}/{args.max_failures}")
+                    if failures > args.max_failures or mgr.latest_step() is None:
+                        raise
+                    state, step = mgr.restore(None, state)
+                    print(f"[train] rolled back to step {step}")
+                    continue
+                step += 1
+                if step % args.log_every == 0:
+                    loss = float(metrics["loss"])
+                    gn = float(metrics["grad_norm"])
+                    dt = (time.time() - t0) / max(1, step - start)
+                    print(f"[train] step {step} loss={loss:.4f} gnorm={gn:.3f} "
+                          f"{dt*1e3:.0f} ms/step")
+                if step % args.ckpt_every == 0:
+                    mgr.save_async(step, state)
+            mgr.save(step, state)
+            print(f"[train] done at step {step}; final loss "
+                  f"{float(metrics['loss']):.4f}")
+        finally:
+            pre.close()
+            mgr.wait()
+
+
+if __name__ == "__main__":
+    main()

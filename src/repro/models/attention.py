@@ -1,0 +1,122 @@
+"""Model-level attention block: projections + RoPE + BitDecoding cache.
+
+Train/prefill path uses the blockwise flash attention; the decode path
+appends to the QuantKVCache and runs the fused low-bit kernel through the
+query transformation (core/attention.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as catt
+from repro.core import qcache
+from repro.models import layers
+from repro.models.params import P
+
+
+def _hq(cfg) -> int:
+    return max(cfg.n_heads, cfg.n_heads_pad or 0)
+
+
+def attn_def(cfg) -> dict:
+    d, hq, hkv, hd = cfg.d_model, _hq(cfg), cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        "wq": P((d, hq, hd), ("embed", "heads", "head_dim")),
+        "wk": P((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": P((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": P((hq, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.attn_bias:
+        defs["bq"] = P((hq, hd), ("heads", "head_dim"), "zeros", jnp.float32)
+        defs["bk"] = P((hkv, hd), ("kv_heads", "head_dim"), "zeros", jnp.float32)
+        defs["bv"] = P((hkv, hd), ("kv_heads", "head_dim"), "zeros", jnp.float32)
+    if cfg.qk_norm:
+        defs["qnorm"] = layers.rmsnorm_def(hd)
+        defs["knorm"] = layers.rmsnorm_def(hd)
+    return defs
+
+
+def _qkv(p, cfg, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.attn_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(p["qnorm"], q)
+        k = layers.rmsnorm(p["knorm"], k)
+    if cfg.rope:
+        q = layers.apply_rope(q, positions, theta=cfg.rope_theta, sections=cfg.mrope_sections)
+        k = layers.apply_rope(k, positions, theta=cfg.rope_theta, sections=cfg.mrope_sections)
+    return q, k, v
+
+
+def attn_train(p, cfg, x, positions, *, causal=True):
+    """x: [B, S, d] -> [B, S, d] (flash prefill/train attention)."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    out = catt.blockwise_attention(q, k, v, causal=causal, block_k=cfg.attn_block_k)
+    return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+
+
+def attn_prefill_cache(p, cfg, x, positions, max_seq: int, *, quant_impl="auto"):
+    """Run train attention AND build the quantized cache from the prefill K/V."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    out = catt.blockwise_attention(q, k, v, causal=True, block_k=cfg.attn_block_k)
+    cache = qcache.init_cache(
+        x.shape[0], cfg.n_kv_heads, cfg.head_dim, max_seq,
+        bits=cfg.kv_bits, block_n=cfg.kv_block, k_gran=cfg.kv_gran,
+    )
+    cache = qcache.prefill(
+        cache, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), quant_impl=quant_impl
+    )
+    return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"]), cache
+
+
+def attn_decode(p, cfg, x, positions, cache, *, impl="auto", append=True):
+    """x: [B, 1, d]; appends to cache (unless attending a static cross cache)
+    then runs the fused low-bit decode kernel."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    if append:
+        cache = qcache.append_decode(
+            cache, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+        )
+    out = catt.decode_attention(q, cache, impl=impl)  # [B,1,hq,hd]
+    return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"]), cache
+
+
+def cross_attn_def(cfg) -> dict:
+    return attn_def(cfg)
+
+
+def cross_attn_train(p, cfg, x, mem):
+    """Encoder-decoder cross attention (training): full-precision."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", mem, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", mem, p["wv"])
+    out = catt.blockwise_attention(q, k, v, causal=False, block_k=cfg.attn_block_k)
+    return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+
+
+def build_cross_cache(p, cfg, mem, *, quant_impl="auto"):
+    """Quantize the (static) encoder K/V once — the paper's Fig. 1a offline
+    case, handled by the same Residual-Kernel machinery with the tail held in
+    the residual buffer and never flushed."""
+    k = jnp.einsum("btd,dhk->bthk", mem, p["wk"]).transpose(0, 2, 1, 3)
+    v = jnp.einsum("btd,dhk->bthk", mem, p["wv"]).transpose(0, 2, 1, 3)
+    cache = qcache.init_cache(
+        mem.shape[0], cfg.n_kv_heads, cfg.head_dim, mem.shape[1],
+        bits=cfg.kv_bits, block_n=cfg.kv_block, k_gran=cfg.kv_gran,
+    )
+    return qcache.prefill(cache, k, v, quant_impl=quant_impl)
+
+
+def cross_attn_decode(p, cfg, x, cross_cache, *, impl="auto"):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    out = catt.decode_attention(q, cross_cache, impl=impl)
+    return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])

@@ -1,0 +1,200 @@
+"""Mamba2 (SSD) mixer: chunked parallel scan for training, O(1)-state
+recurrence for decode.  BitDecoding is inapplicable here (constant-size state,
+no growing KV cache) — see DESIGN.md §Arch-applicability.  Structure follows
+the minimal SSD formulation (Mamba2 paper, Listing 1), with a causal
+depthwise conv on the xBC stream and a gated RMSNorm output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers
+from repro.models.params import P
+
+CONV_K = 4
+
+
+def mamba2_def(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.mamba_d_inner
+    h = cfg.mamba_heads
+    n = cfg.ssm_state
+    g = cfg.mamba_groups
+    conv_dim = di + 2 * g * n
+    return {
+        "in_proj": P((d, 2 * di + 2 * g * n + h), ("embed", "mlp")),
+        "conv_w": P((CONV_K, conv_dim), (None, "mlp"), "normal", jnp.float32, 0.2),
+        "conv_b": P((conv_dim,), ("mlp",), "zeros", jnp.float32),
+        "a_log": P((h,), (None,), "zeros", jnp.float32),  # A = -exp(a_log)
+        "dt_bias": P((h,), (None,), "zeros", jnp.float32),
+        "d_skip": P((h,), (None,), "ones", jnp.float32),
+        "norm": layers.rmsnorm_def(di),
+        "out_proj": P((di, d), ("mlp", "embed")),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, g, n, h = cfg.mamba_d_inner, cfg.mamba_groups, cfg.ssm_state, cfg.mamba_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n :]
+    return z, xbc, dt
+
+
+def _conv_train(p, xbc):
+    """Causal depthwise conv along S: xbc [B, S, C]."""
+    w = p["conv_w"].astype(xbc.dtype)  # [K, C]
+    pad = jnp.pad(xbc, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1]] * w[i] for i in range(CONV_K))
+    return jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+
+
+def _segsum(x):
+    """Stable segment-sum: x [..., T] -> [..., T, T] lower-tri cumulative."""
+    t = x.shape[-1]
+    xc = jnp.cumsum(x, axis=-1)
+    ss = xc[..., :, None] - xc[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, *, chunk: int):
+    """Minimal SSD. x [B,S,H,P]; dt [B,S,H] (softplus'd); a_log [H];
+    b, c [B,S,G,N].  Returns y [B,S,H,P]."""
+    bsz, s, h, pdim = x.shape
+    g, n = b.shape[2], b.shape[3]
+    nc = s // chunk
+    assert s % chunk == 0
+    rep = h // g
+
+    a = -jnp.exp(a_log)  # [H]
+    da = dt * a[None, None, :]  # [B,S,H] log-decay per step
+    xdt = x * dt[..., None]
+
+    # reshape into chunks
+    da_c = da.reshape(bsz, nc, chunk, h)
+    x_c = xdt.reshape(bsz, nc, chunk, h, pdim)
+    b_c = b.reshape(bsz, nc, chunk, g, n)
+    c_c = c.reshape(bsz, nc, chunk, g, n)
+    b_ch = jnp.repeat(b_c, rep, axis=3)  # [B,nc,T,H,N]
+    c_ch = jnp.repeat(c_c, rep, axis=3)
+
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(da_c.transpose(0, 1, 3, 2)))  # [B,nc,H,T,T]
+    scores = jnp.einsum("bcthn,bcshn->bchts", c_ch, b_ch)  # [B,nc,H,T,S]
+    y_diag = jnp.einsum("bchts,bchts,bcshp->bcthp", scores, L, x_c.transpose(0, 1, 2, 3, 4))
+
+    # 2. chunk-final states
+    decay_tail = jnp.exp(jnp.cumsum(da_c, axis=2)[:, :, -1:, :] - jnp.cumsum(da_c, axis=2))
+    # decay from step t to end of chunk: [B,nc,T,H]
+    states = jnp.einsum("bcthn,bcth,bcthp->bchpn", b_ch, decay_tail, x_c)
+
+    # 3. inter-chunk recurrence over chunk states
+    da_sum = jnp.sum(da_c, axis=2)  # [B,nc,H]
+
+    def step(carry, inp):
+        st, dsum = inp
+        new = carry * jnp.exp(dsum)[:, :, None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    st0 = jnp.zeros((bsz, h, pdim, n), jnp.float32)
+    final_state, prev_states = lax.scan(
+        step, st0,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32), da_sum.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [B,nc,H,P,N]
+
+    # 4. contribution of entering state to each position
+    decay_in = jnp.exp(jnp.cumsum(da_c, axis=2))  # decay from chunk start to t
+    y_off = jnp.einsum("bcthn,bchpn,bcth->bcthp", c_ch, prev_states.astype(c_ch.dtype), decay_in)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, pdim)
+    return y, final_state
+
+
+def _mamba2_forward(p, cfg, x):
+    di, g, n, h = cfg.mamba_d_inner, cfg.mamba_groups, cfg.ssm_state, cfg.mamba_heads
+    pdim = di // h
+    z, xbc_raw, dt = _split_proj(cfg, jnp.einsum("bsd,df->bsf", x, p["in_proj"]))
+    xbc = _conv_train(p, xbc_raw)
+    xin = xbc[..., :di].reshape(*x.shape[:2], h, pdim)
+    b = xbc[..., di : di + g * n].reshape(*x.shape[:2], g, n)
+    c = xbc[..., di + g * n :].reshape(*x.shape[:2], g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    s = x.shape[1]
+    pad = (-s) % cfg.mamba_chunk
+    if pad:  # pad the tail chunk with zero-input steps (dt=0 -> identity)
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))  # noqa: E731
+        xin_p, dt_p, b_p, c_p = map(zpad, (xin, dt, b, c))
+    else:
+        xin_p, dt_p, b_p, c_p = xin, dt, b, c
+    y, final = ssd_chunked(
+        xin_p.astype(jnp.float32), dt_p, p["a_log"], b_p.astype(jnp.float32),
+        c_p.astype(jnp.float32), chunk=cfg.mamba_chunk,
+    )
+    y = y[:, :s]
+    y = y + xin.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(*x.shape[:2], di).astype(x.dtype)
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("bsf,fd->bsd", y, p["out_proj"])
+    return out, final, xbc_raw
+
+
+def mamba2_train(p, cfg, x):
+    """x [B,S,d] -> [B,S,d]."""
+    return _mamba2_forward(p, cfg, x)[0]
+
+
+def mamba2_prefill(p, cfg, x):
+    """Chunked-parallel prefill returning the decode state (SSD final state +
+    conv tail) — the SSM analogue of building the KV cache."""
+    out, final, xbc_raw = _mamba2_forward(p, cfg, x)
+    conv = xbc_raw[:, -(CONV_K - 1) :].astype(jnp.bfloat16)
+    # left-pad if the prompt is shorter than the conv window
+    short = CONV_K - 1 - xbc_raw.shape[1]
+    if short > 0:
+        conv = jnp.pad(conv, ((0, 0), (short, 0), (0, 0)))
+    return out, {"ssm": final, "conv": conv}
+
+
+def mamba2_init_state(cfg, batch: int):
+    di, g, n, h = cfg.mamba_d_inner, cfg.mamba_groups, cfg.ssm_state, cfg.mamba_heads
+    conv_dim = di + 2 * g * n
+    return {
+        "ssm": jnp.zeros((batch, h, di // h, n), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_K - 1, conv_dim), jnp.bfloat16),
+    }
+
+
+def mamba2_decode(p, cfg, x, state):
+    """x [B,1,d]; O(1) recurrent update."""
+    di, g, n, h = cfg.mamba_d_inner, cfg.mamba_groups, cfg.ssm_state, cfg.mamba_heads
+    pdim = di // h
+    z, xbc, dt = _split_proj(cfg, jnp.einsum("bsd,df->bsf", x, p["in_proj"]))
+    xbc = xbc[:, 0]  # [B, C]
+    # rolling conv buffer
+    hist = jnp.concatenate([state["conv"], xbc[:, None].astype(jnp.bfloat16)], axis=1)
+    w = p["conv_w"].astype(jnp.float32)
+    conv = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32), w) + p["conv_b"]
+    xbc_t = jax.nn.silu(conv)
+    new_conv = hist[:, 1:]
+
+    xin = xbc_t[:, :di].reshape(-1, h, pdim)
+    b = xbc_t[:, di : di + g * n].reshape(-1, g, n)
+    c = xbc_t[:, di + g * n :].reshape(-1, g, n)
+    rep = h // g
+    bh = jnp.repeat(b, rep, axis=1)  # [B,H,N]
+    ch = jnp.repeat(c, rep, axis=1)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dtv * a[None, :])  # [B,H]
+    ssm = state["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bhp,bhn,bh->bhpn", xin, bh, dtv
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", ssm, ch) + xin * p["d_skip"][None, :, None]
+    y = y.reshape(-1, 1, di).astype(x.dtype)
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("bsf,fd->bsd", y, p["out_proj"])
+    return out, {"ssm": ssm, "conv": new_conv}

@@ -1,0 +1,117 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3) with a quantized latent cache.
+
+Train uses the expanded form; decode uses the *absorbed* form, where queries
+are projected into the latent space (q @ W_uk) and attention runs directly
+against the cached latent stream ``[c_kv ; k_rope]``.  BitDecoding applies to
+the latent cache itself (shared_kv mode): one quantized stream feeds both the
+score and value sides, and g_q = n_heads (128) — the query transformation's
+best case, a fully-populated MXU M dimension.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as catt
+from repro.core import qcache
+from repro.models import layers
+from repro.models.params import P
+
+
+def mla_def(cfg) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    ql, kvl = cfg.q_lora, cfg.kv_lora
+    dn, dr, dv = cfg.qk_nope, cfg.qk_rope, cfg.v_head_dim
+    return {
+        "q_down": P((d, ql), ("embed", None)),
+        "q_norm": layers.rmsnorm_def(ql),
+        "q_up": P((ql, h, dn + dr), (None, "heads", "head_dim")),
+        "kv_down": P((d, kvl + dr), ("embed", None)),
+        "kv_norm": layers.rmsnorm_def(kvl),
+        "k_up": P((kvl, h, dn), (None, "heads", "head_dim")),
+        "v_up": P((kvl, h, dv), (None, "heads", "head_dim")),
+        "wo": P((h, dv, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _latent(p, cfg, x, positions):
+    """x [B,S,d] -> (c_kv [B,S,kv_lora], k_rope [B,S,qk_rope]) with RoPE."""
+    kvr = jnp.einsum("bsd,dl->bsl", x, p["kv_down"])
+    c_kv = layers.rmsnorm(p["kv_norm"], kvr[..., : cfg.kv_lora])
+    k_rope = kvr[..., cfg.kv_lora :]
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], positions, theta=cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def _queries(p, cfg, x, positions):
+    c_q = layers.rmsnorm(p["q_norm"], jnp.einsum("bsd,dl->bsl", x, p["q_down"]))
+    q = jnp.einsum("bsl,lhk->bshk", c_q, p["q_up"])
+    q_nope = q[..., : cfg.qk_nope]
+    q_rope = layers.apply_rope(q[..., cfg.qk_nope :], positions, theta=cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_train(p, cfg, x, positions):
+    """Expanded-form training attention."""
+    b, s, d = x.shape
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    c_kv, k_rope = _latent(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsl,lhk->bshk", c_kv, p["k_up"])
+    k_rope_h = jnp.broadcast_to(
+        k_rope[:, :, None, :], (b, s, cfg.n_heads, cfg.qk_rope)
+    ).astype(k_nope.dtype)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    v = jnp.einsum("bsl,lhk->bshk", c_kv, p["v_up"])
+    # §Perf iteration B2: the concat of differently-sharded parts (nope from
+    # the FSDP-sharded up-projection, rope replicated) otherwise makes the
+    # partitioner shard the score dot's CONTRACTION dim -> a partial-sum
+    # all-reduce of every (S x block) score tile, ~64 TB/device at 32K.
+    # Pin q/k/v to batch x head sharding before attention.
+    from repro.dist.sharding import constrain
+
+    q = constrain(q, ("pod", "data"), None, "model", None)
+    k = constrain(k, ("pod", "data"), None, "model", None)
+    v = constrain(v, ("pod", "data"), None, "model", None)
+    out = catt.blockwise_attention(
+        q, k, v, causal=True,
+        sm_scale=1.0 / (cfg.qk_nope + cfg.qk_rope) ** 0.5,
+        block_k=cfg.attn_block_k,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+
+
+def mla_init_cache(cfg, batch: int, max_seq: int):
+    """Latent cache: one KV 'head' of width kv_lora + qk_rope, shared_kv."""
+    return qcache.init_cache(
+        batch, 1, cfg.kv_lora + cfg.qk_rope, max_seq,
+        bits=cfg.kv_bits, block_n=cfg.kv_block, k_gran="channel", shared_kv=True,
+    )
+
+
+def mla_prefill_cache(p, cfg, x, positions, max_seq: int, *, quant_impl="auto"):
+    out = mla_train(p, cfg, x, positions)
+    c_kv, k_rope = _latent(p, cfg, x, positions)
+    lat = jnp.concatenate([c_kv, k_rope], axis=-1)[:, None]  # [B,1,S,kvl+dr]
+    cache = mla_init_cache(cfg, x.shape[0], max_seq)
+    cache = qcache.prefill(cache, lat, None, quant_impl=quant_impl)
+    return out, cache
+
+
+def mla_decode(p, cfg, x, positions, cache, *, impl="auto"):
+    """Absorbed-form decode against the quantized latent cache."""
+    b = x.shape[0]
+    q_nope, q_rope = _queries(p, cfg, x, positions)  # [B,1,h,*]
+    c_kv, k_rope = _latent(p, cfg, x, positions)
+    lat = jnp.concatenate([c_kv, k_rope], axis=-1)[:, None]  # [B, H=1, S=1, kvl+dr]
+    cache = qcache.append_decode(cache, lat, None)
+    # absorb: q_eff = [q_nope @ W_uk ; q_rope]  -> width kv_lora + qk_rope
+    q_lat = jnp.einsum("bshk,lhk->bshl", q_nope, p["k_up"])  # [B,1,h,kv_lora]
+    q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)
+    out_lat = catt.decode_attention(
+        q_eff, cache,
+        sm_scale=1.0 / (cfg.qk_nope + cfg.qk_rope) ** 0.5,
+        d_v=cfg.kv_lora, impl=impl,
+    )  # [B,1,h,kv_lora]
+    out = jnp.einsum("bshl,lhk->bshk", out_lat.astype(x.dtype), p["v_up"])
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache

@@ -1,0 +1,102 @@
+"""Token-choice top-k Mixture-of-Experts with capacity-based group-local
+dispatch.
+
+Tokens are processed in groups (one sequence = one group by default); the
+dispatch sort/positioning is *within-group* (vmapped), so under pjit with the
+group dimension sharded along (pod, data) the routing math is local to a data
+shard and the only cross-device movement is the dispatched activations being
+resharded onto the expert-parallel (model) axis — the all-to-all pattern,
+inserted by the SPMD partitioner at the sharding-constraint boundary.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.params import P
+
+
+def moe_def(cfg) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_expert
+    defs = {
+        "router": P((d, e), ("embed", None), "normal", jnp.float32),
+        # inner expert dims use 'expert_mlp' (replicated): the expert axis
+        # itself carries the model-parallel (EP) sharding
+        "wi": P((e, d, 2 * f), ("experts", "embed", "expert_mlp")),
+        "wo": P((e, f, d), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        defs["shared"] = layers.mlp_def(d, cfg.n_shared_experts * f, cfg.act)
+    return defs
+
+
+def _capacity(cfg, group_tokens: int) -> int:
+    c = max(1, int(group_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    # decode (1-token groups): a token's top-k experts are distinct, so
+    # capacity 1 is exact — the old floor of 8 inflated decode expert
+    # compute 8x.  Align to 8 sublanes only once the capacity warrants it.
+    return c if c < 8 else -(-c // 8) * 8
+
+
+def moe_ffn(p, cfg, x):
+    """x: [B, S, d] -> [B, S, d].  Groups = sequences (B is the group dim)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(cfg, s)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    if cfg.router_score == "sigmoid":  # DeepSeek-V3 style
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(scores, k)  # [B, S, k]
+    if cfg.router_norm_topk:
+        top_w = top_w / (jnp.sum(top_w, axis=-1, keepdims=True) + 1e-9)
+
+    def dispatch_one(xg, eg, wg):
+        # xg [S, d], eg [S, k] expert ids, wg [S, k] weights — one group.
+        flat_e = eg.reshape(-1)  # [S*k]
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # [S*k, E]
+        # position within the expert's capacity buffer (0-based)
+        pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1  # [S*k]
+        keep = (pos >= 0) & (pos < cap)
+        src = jnp.repeat(jnp.arange(s), k)  # token index per slot
+        # scatter tokens into [E, cap, d]
+        xe = jnp.zeros((e, cap, d), x.dtype)
+        xe = xe.at[flat_e, jnp.where(keep, pos, cap - 1)].add(
+            jnp.where(keep[:, None], xg[src], 0).astype(x.dtype)
+        )
+        return xe, (flat_e, pos, keep, src)
+
+    xe, meta = jax.vmap(dispatch_one)(x, top_e, top_w)  # [B, E, cap, d]
+
+    # expert-parallel resharding boundary: dispatched tokens move onto the
+    # expert (model) axis here — the all-to-all pattern — instead of letting
+    # the partitioner replicate the dispatch tensors (§Perf iteration B)
+    from repro.dist.sharding import constrain
+
+    xe = constrain(xe, ("pod", "data"), "model", None, None)
+    # expert FFN (SwiGLU), experts sharded on the model axis (EP)
+    h = jnp.einsum("becd,edf->becf", xe, p["wi"])
+    u, g = jnp.split(h, 2, axis=-1)
+    h = u * jax.nn.silu(g)
+    ye = jnp.einsum("becf,efd->becd", h, p["wo"])  # [B, E, cap, d]
+    ye = constrain(ye, ("pod", "data"), "model", None, None)
+
+    def combine_one(ye_g, wg, m):
+        flat_e, pos, keep, src = m
+        vals = ye_g[flat_e, jnp.clip(pos, 0, cap - 1)]  # [S*k, d]
+        vals = jnp.where(keep[:, None], vals, 0)
+        w = wg.reshape(-1)[:, None].astype(vals.dtype)
+        out = jnp.zeros((s, d), vals.dtype).at[src].add(vals * w)
+        return out
+
+    out = jax.vmap(combine_one)(ye, top_w, meta)
+    if cfg.n_shared_experts:
+        out = out + layers.mlp(p["shared"], x, cfg.act)
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(jax.nn.one_hot(top_e, e, dtype=jnp.float32), axis=(0, 1, 2))
+    pe = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=(0, 1))
+    aux = e * jnp.sum(me * pe)
+    return out.astype(x.dtype), aux

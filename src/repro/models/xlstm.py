@@ -1,0 +1,268 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory with
+recurrent gating).  Both are attention-free — no growing KV cache, so
+BitDecoding is inapplicable (DESIGN.md §Arch-applicability); decode state is
+O(1) in sequence length.
+
+Training uses a stabilized sequential scan over time (chunkwise-parallel
+forms exist but are a kernel-level optimization orthogonal to this paper);
+the scan keeps HLO size independent of sequence length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers
+from repro.models.params import P
+
+TIME_CHUNK = 64
+
+
+def _chunked_time_scan(cell, state, xs, chunk: int = TIME_CHUNK):
+    """lax.scan over time with sqrt-style remat: outer scan over chunks keeps
+    only chunk-boundary states for backward; each chunk recomputes its inner
+    steps (jax.checkpoint).  Without this, backprop through an S-step scan
+    stores S copies of the (large) mLSTM matrix memory."""
+    s = jax.tree.leaves(xs)[0].shape[0]
+    nc, rem = divmod(s, chunk)
+    ys_parts = []
+    if nc:
+        xs_main = jax.tree.map(
+            lambda a: a[: nc * chunk].reshape(nc, chunk, *a.shape[1:]), xs
+        )
+
+        @jax.checkpoint
+        def inner(st, xc):
+            return lax.scan(cell, st, xc)
+
+        def outer(st, xc):
+            st2, ys = inner(st, xc)
+            return st2, ys
+
+        state, ys_main = lax.scan(outer, state, xs_main)
+        ys_parts.append(
+            jax.tree.map(lambda a: a.reshape(nc * chunk, *a.shape[2:]), ys_main)
+        )
+    if rem:
+        xs_tail = jax.tree.map(lambda a: a[nc * chunk :], xs)
+        state, ys_tail = lax.scan(cell, state, xs_tail)
+        ys_parts.append(ys_tail)
+    if len(ys_parts) == 1:
+        return state, ys_parts[0]
+    return state, jax.tree.map(lambda *a: jnp.concatenate(a, axis=0), *ys_parts)
+
+
+# ------------------------------------------------------------------ mLSTM
+
+
+def mlstm_def(cfg) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    return {
+        "wqkv": P((d, 3, h, dh), ("embed", None, "heads", "head_dim")),
+        "wif": P((d, 2, h), ("embed", None, "heads"), "normal", jnp.float32),
+        "bif": P((2, h), (None, "heads"), "zeros", jnp.float32),
+        "wo_gate": P((d, d), ("embed", "mlp")),
+        "norm": layers.rmsnorm_def(d),
+        "wo": P((d, d), ("mlp", "embed")),
+    }
+
+
+def mlstm_init_state(cfg, batch: int):
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_cell(state, qkv_if):
+    """One timestep of the stabilized mLSTM recurrence."""
+    q, k, v, i_pre, f_pre = qkv_if  # q,k,v [B,H,dh]; i/f [B,H]
+    C, n, m = state["C"], state["n"], state["m"]
+    logf = -jax.nn.softplus(-f_pre)  # log sigmoid(f)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    C = f_g[..., None, None] * C + i_g[..., None, None] * (
+        v[..., :, None] * k[..., None, :]
+    )  # [B,H,dh,dh] (v k^T)
+    n = f_g[..., None] * n + i_g[..., None] * k
+    hv = jnp.einsum("bhvk,bhk->bhv", C, q)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    h_t = hv / denom[..., None]
+    return {"C": C, "n": n, "m": m_new}, h_t
+
+
+def _mlstm_inner(p, cfg, x, state):
+    """x [B,S,d] -> (y [B,S,d], state).  Scan over time."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    qkv = jnp.einsum("bsd,dthk->tbshk", x, p["wqkv"]).astype(jnp.float32)
+    q, k, v = qkv[0], qkv[1] / dh**0.5, qkv[2]
+    gates = jnp.einsum("bsd,dgh->gbsh", x.astype(jnp.float32), p["wif"]) + p["bif"][:, None, None, :]
+    i_pre, f_pre = gates[0], gates[1]
+
+    if getattr(cfg, "xlstm_chunkwise", False) and s % cfg.xlstm_time_chunk == 0:
+        y, state = mlstm_chunkwise(
+            q, k, v, i_pre, f_pre, state, chunk=cfg.xlstm_time_chunk
+        )
+        return y.reshape(b, s, d).astype(x.dtype), state
+
+    def step(st, inp):
+        return _mlstm_cell(st, inp)
+
+    xs = (
+        q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3), v.transpose(1, 0, 2, 3),
+        i_pre.transpose(1, 0, 2), f_pre.transpose(1, 0, 2),
+    )
+    state, ys = _chunked_time_scan(step, state, xs, cfg.xlstm_time_chunk)  # ys [S,B,H,dh]
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    return y, state
+
+
+def mlstm_block(p, cfg, x, state=None):
+    """Full mLSTM mixer with output gate + norm.  state=None -> fresh."""
+    if state is None:
+        state = mlstm_init_state(cfg, x.shape[0])
+    y, state = _mlstm_inner(p, cfg, x, state)
+    gate = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wo_gate"]))
+    y = layers.rmsnorm(p["norm"], y) * gate
+    return jnp.einsum("bsf,fd->bsd", y, p["wo"]), state
+
+
+def mlstm_chunkwise(q, k, v, i_pre, f_pre, state, *, chunk: int):
+    """Chunkwise-parallel mLSTM — mathematically EXACT vs the stabilized
+    sequential cell (tests/test_xlstm_chunkwise.py), but the matrix memory
+    C only materializes at chunk boundaries: per-chunk HBM traffic drops
+    from L·|C| to |C| + O(L·d), turning the memory-bound recurrence into
+    MXU matmuls (the SSD/GLA trick applied to mLSTM's stabilizer).
+
+    Key identity: with F_t = Σ_{r≤t} log f_r and g_s = i_s - F_s,
+      m_t = F_t + max(m_0 - 0, cummax_{s≤t} g_s)
+      W_ts = exp(F_t - F_s + i_s - m_t) = exp(F_t - m_t) · exp(g_s)
+    — the intra-chunk weight matrix is SEPARABLE (row x col scaling of the
+    plain q·k score matrix), so everything is masked matmuls.
+
+    q,k,v: [B,S,H,dh] (k pre-scaled by 1/sqrt(dh)); i_pre,f_pre: [B,S,H].
+    state: {"C": [B,H,dh,dh], "n": [B,H,dh], "m": [B,H]}.
+    Returns (h [B,S,H,dh], state').
+    """
+    b, s, hh, dh = q.shape
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    def re(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = re(q), re(k), re(v)          # [nc,B,L,H,dh]
+    ic, fc = re(i_pre), re(f_pre)             # [nc,B,L,H]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def one_chunk(st, xs):
+        qb, kb, vb, ib, fb = xs                # [B,L,H,*]
+        c0, n0, m0 = st["C"], st["n"], st["m"]
+        logf = -jax.nn.softplus(-fb)           # [B,L,H]
+        F = jnp.cumsum(logf, axis=1)
+        g = ib - F
+        m_run = jnp.maximum(jax.lax.cummax(g, axis=1), m0[:, None, :])
+        m_t = F + m_run                        # [B,L,H]
+        # per-pair log-weights (combined in log space so neither factor of
+        # the separable form can overflow on its own)
+        scores_log = (F[:, :, None, :] - m_t[:, :, None, :]) + g[:, None, :, :]
+        # [B, t, s, H] log-weights; masked lower-tri
+        w_ts = jnp.where(tri[None, :, :, None], jnp.exp(scores_log), 0.0)
+        qk = jnp.einsum("blhd,bshd->blsh", qb.astype(jnp.float32),
+                        kb.astype(jnp.float32))
+        y_intra = jnp.einsum("blsh,blsh,bshd->blhd", qk, w_ts,
+                             vb.astype(jnp.float32))
+        decay_in = jnp.exp(F + m0[:, None, :] - m_t)  # [B,L,H]
+        y_inter = decay_in[..., None] * jnp.einsum(
+            "blhk,bhvk->blhv", qb.astype(jnp.float32), c0)
+        n_t = decay_in[..., None] * n0[:, None] + jnp.einsum(
+            "blsh,bshd->blhd", w_ts, kb.astype(jnp.float32))
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("blhd,blhd->blh", qb.astype(jnp.float32), n_t)), 1.0
+        )
+        h = (y_intra + y_inter) / denom[..., None]
+
+        # chunk-end state (t = L-1)
+        mL = m_t[:, -1]
+        wL = jnp.exp(F[:, -1:, :] - mL[:, None] + g)     # [B,L,H] weight per s
+        cL = jnp.exp(F[:, -1] + m0 - mL)[..., None, None] * c0 + jnp.einsum(
+            "bshv,bshk,bsh->bhvk", vb.astype(jnp.float32),
+            kb.astype(jnp.float32), wL)
+        nL = jnp.exp(F[:, -1] + m0 - mL)[..., None] * n0 + jnp.einsum(
+            "bshk,bsh->bhk", kb.astype(jnp.float32), wL)
+        return {"C": cL, "n": nL, "m": mL}, h
+
+    state, hs = lax.scan(one_chunk, state, (qc, kc, vc, ic, fc))
+    return hs.swapaxes(0, 1).reshape(b, s, hh, dh), state
+
+
+# ------------------------------------------------------------------ sLSTM
+
+
+def slstm_def(cfg) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    return {
+        "wx": P((d, 4, h, dh), ("embed", None, "heads", "head_dim")),
+        "r": P((4, h, dh, dh), (None, "heads", "head_dim", None), "normal",
+              jnp.bfloat16, 0.02),  # block-diagonal hidden-hidden recurrence
+        "b": P((4, h, dh), (None, "heads", "head_dim"), "zeros", jnp.float32),
+        "norm": layers.rmsnorm_def(d),
+        "wo": P((d, d), ("mlp", "embed")),
+    }
+
+
+def slstm_init_state(cfg, batch: int):
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    z = lambda: jnp.zeros((batch, h, dh), jnp.float32)  # noqa: E731
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, h, dh), -1e30, jnp.float32)}
+
+
+def _slstm_cell(p, state, wx_t):
+    """wx_t [B,4,H,dh] precomputed input contribution."""
+    hprev = state["h"]
+    rec = jnp.einsum("bhk,ghvk->bghv", hprev.astype(jnp.bfloat16), p["r"]).astype(jnp.float32)
+    pre = wx_t.astype(jnp.float32) + rec.transpose(0, 1, 2, 3) + p["b"][None]
+    z_pre, i_pre, f_pre, o_pre = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    z_t = jnp.tanh(z_pre)
+    o_t = jax.nn.sigmoid(o_pre)
+    logf = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(logf + state["m"] - m_new)
+    c = f_g * state["c"] + i_g * z_t
+    n = f_g * state["n"] + i_g
+    h_t = o_t * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h_t, "m": m_new}, h_t
+
+
+def _slstm_inner(p, cfg, x, state):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    wx = jnp.einsum("bsd,dghk->bsghk", x, p["wx"]).astype(jnp.float32)
+
+    def step(st, wx_t):
+        return _slstm_cell(p, st, wx_t)
+
+    state, ys = _chunked_time_scan(step, state, wx.transpose(1, 0, 2, 3, 4),
+                                   cfg.xlstm_time_chunk)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    return y, state
+
+
+def slstm_block(p, cfg, x, state=None):
+    if state is None:
+        state = slstm_init_state(cfg, x.shape[0])
+    y, state = _slstm_inner(p, cfg, x, state)
+    y = layers.rmsnorm(p["norm"], y)
+    return jnp.einsum("bsf,fd->bsd", y, p["wo"]), state

@@ -1,0 +1,15 @@
+"""Model zoo: build the right backbone for an ArchConfig."""
+from __future__ import annotations
+
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import DecoderLM, HybridLM, XLSTMLM
+
+
+def build_model(cfg):
+    if cfg.encdec:
+        return EncDecLM(cfg)
+    if cfg.mixer == "mamba2":
+        return HybridLM(cfg)
+    if cfg.mixer == "xlstm":
+        return XLSTMLM(cfg)
+    return DecoderLM(cfg)

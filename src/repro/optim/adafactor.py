@@ -1,0 +1,58 @@
+"""Adafactor (factored second moments, no momentum) — the memory-frugal
+option for the 671B-class configs where AdamW fp32 states exceed the HBM
+budget (DESIGN.md §7)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer
+
+
+def adafactor(lr=1e-3, decay=0.8, eps=1e-30, clip_rms=1.0, weight_decay=0.0,
+              warmup=100, **_):
+    def lr_at(step):
+        s = jnp.asarray(step, jnp.float32)
+        return lr * jnp.minimum(1.0, s / max(1, warmup))
+
+    def init(params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return {
+                    "row": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(leaf, params)
+
+    def update(grads, state, params, step):
+        beta = 1.0 - (jnp.asarray(step + 1, jnp.float32)) ** (-decay)
+        lr_t = lr_at(step)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                row = beta * s["row"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                col = beta * s["col"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = row / jnp.mean(row, axis=-1, keepdims=True)
+                u = g / (jnp.sqrt(rfac)[..., None] * jnp.sqrt(col)[..., None, :] + 1e-12)
+                ns = {"row": row, "col": col}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g / (jnp.sqrt(v) + 1e-12)
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_rms)
+            if weight_decay and p.ndim >= 2:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype), ns
+
+        flat = jax.tree.map(upd, grads, state, params,
+                            is_leaf=lambda x: isinstance(x, dict) and ("row" in x or "v" in x))
+        updates = jax.tree.map(lambda o: o[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree.map(lambda o: o[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, new_state
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,55 @@
+"""AdamW with f32 moments.  States inherit the parameter shardings (params
+are themselves FSDP/TP-sharded), so moments are ZeRO-partitioned for free."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, opt_state, params, step) -> (updates, opt_state)
+
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1, warmup=100,
+          schedule: str = "cosine", total_steps: int = 10000):
+    def lr_at(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, s / max(1, warmup))
+        if schedule == "cosine":
+            t = jnp.clip((s - warmup) / max(1, total_steps - warmup), 0, 1)
+            base = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        else:
+            base = 1.0
+        return lr * warm * base
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        stepf = jnp.asarray(step + 1, jnp.float32)
+        lr_t = lr_at(step)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1**stepf)
+            vhat = v / (1 - b2**stepf)
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if p.ndim >= 2:  # no decay on norms/biases
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m, "v": v}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,45 @@
+"""Cross-pod gradient compression with error feedback.
+
+Within a pod the ICI fabric is fast — gradients reduce in full precision
+(implicit pjit all-reduce).  Across pods the DCI links are the bottleneck, so
+the pod-local-reduced gradient is quantized to int8 (per-tensor scale),
+exchanged with an all_gather over the ``pod`` axis (int8 on the wire: 4x
+fewer bytes than an f32 ring all-reduce over 2 pods, 8x counting both
+directions), summed locally, and dequantized.  The quantization residual is
+carried in an error-feedback buffer so the compression is unbiased over time
+(EF-SGD).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def compress_allreduce(g, err, axis_name: str = "pod"):
+    """One tensor: (grad f32-ish, error buffer f32) -> (reduced grad, new err).
+
+    Must run inside shard_map with ``axis_name`` in scope; the input is this
+    pod's (already pod-locally-reduced) gradient shard.
+    """
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale
+
+    qs = lax.all_gather(q, axis_name)            # int8 on the wire
+    scales = lax.all_gather(scale, axis_name)    # one f32 per pod
+    total = jnp.sum(qs.astype(jnp.float32) * scales.reshape(-1, *[1] * g.ndim), axis=0)
+    n = qs.shape[0]
+    return (total / n).astype(g.dtype), new_err
+
+
+def compress_allreduce_tree(grads, err_tree, axis_name: str = "pod"):
+    out = jax.tree.map(lambda g, e: compress_allreduce(g, e, axis_name), grads, err_tree)
+    red = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return red, err
+
+
+def init_error_buffers(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

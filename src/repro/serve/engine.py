@@ -1,0 +1,117 @@
+"""Slot-based batched serving engine (continuous-batching-lite).
+
+A fixed number of decode slots share one jitted decode_step (static shapes);
+finished sequences free their slot, which is refilled from the request queue
+on the next cycle.  Per-slot KV-cache occupancy lives in the QuantKVCache's
+per-sequence pack_blocks/res_len, so refilling a slot is just resetting its
+row — no reallocation.  Dead-slot eviction (straggler/failure mitigation):
+slots whose request exceeded max_new_tokens are forcibly retired each cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int = 32
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, slots: int = 8, max_seq: int = 2048,
+                 eos_id: int | None = None, impl: str = "auto"):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * slots
+        self.state = model.init_decode_state(slots, max_seq)
+        self.tokens = jnp.zeros((slots, 1), jnp.int32)
+        self._step = jax.jit(
+            lambda p, s, t: model.decode_step(p, s, t, impl=impl),
+            static_argnames=(),
+        )
+        self._prefill_cache: dict[int, object] = {}
+        self.stats = {"decoded_tokens": 0, "steps": 0, "evicted": 0}
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_slot(self, i: int, req: Request):
+        """Prefill one request into slot i (single-sequence prefill, then the
+        per-slot cache rows are spliced into the batched state)."""
+        batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+        logits, st = jax.jit(lambda p, b: self.model.prefill(p, b, self.max_seq))(
+            self.params, batch
+        )
+        # splice slot-0 rows of st into row i of the batched state
+        def splice(dst, src):
+            if dst is None:
+                return None
+            if not isinstance(dst, jax.Array) and not hasattr(dst, "ndim"):
+                return dst
+            # batch dim: caches are stacked (L, B, ...) -> dim 1; pos -> dim 0
+            bdim = 0 if dst.ndim == 1 else 1
+            idx = [slice(None)] * dst.ndim
+            idx[bdim] = i
+            src_idx = [slice(None)] * src.ndim
+            src_idx[bdim] = 0
+            return dst.at[tuple(idx)].set(src[tuple(src_idx)].astype(dst.dtype))
+
+        self.state = jax.tree.map(splice, self.state, st)
+        self.tokens = self.tokens.at[i, 0].set(int(np.argmax(np.asarray(logits)[0, -1])))
+        self.active[i] = req
+
+    def step(self):
+        """One engine cycle: refill free slots, one batched decode step,
+        collect outputs, retire finished/evicted requests."""
+        for i in range(self.slots):
+            if self.active[i] is None and self.queue:
+                self._fill_slot(i, self.queue.popleft())
+
+        if all(r is None for r in self.active):
+            return False
+
+        logits, self.state = self._step(self.params, self.state, self.tokens)
+        nxt = np.argmax(np.asarray(logits)[:, 0], axis=-1)
+        self.stats["steps"] += 1
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(self.tokens[i, 0])
+            req.out_tokens.append(tok)
+            self.stats["decoded_tokens"] += 1
+            hit_eos = self.eos_id is not None and tok == self.eos_id
+            if hit_eos or len(req.out_tokens) >= req.max_new_tokens:
+                if not hit_eos and len(req.out_tokens) >= req.max_new_tokens:
+                    self.stats["evicted"] += 1  # forced retirement
+                req.done = True
+                self.active[i] = None
+            else:
+                self.tokens = self.tokens.at[i, 0].set(int(nxt[i]))
+        return True
+
+    def run(self, max_cycles: int = 10_000):
+        t0 = time.time()
+        cycles = 0
+        while (self.queue or any(self.active)) and cycles < max_cycles:
+            self.step()
+            cycles += 1
+        dt = time.time() - t0
+        return {
+            **self.stats,
+            "wall_s": dt,
+            "tokens_per_s": self.stats["decoded_tokens"] / max(dt, 1e-9),
+        }

@@ -1,0 +1,94 @@
+"""Training step factory: microbatched grad accumulation (lax.scan), mixed
+precision (bf16 params/activations, f32 loss & optimizer math), optional
+gradient clipping.  Under pjit the FSDP all-gathers of step i+1 overlap the
+backprop of step i via XLA's latency-hiding scheduler (flags set in
+launch/train.py)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.sharding import constrain
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    TrainState, data_fields=["params", "opt_state", "step"], meta_fields=[]
+)
+
+
+def init_train_state(model, optimizer, rng):
+    params = model.init(rng)
+    return TrainState(params=params, opt_state=optimizer.init(params), step=jnp.zeros((), jnp.int32))
+
+
+def train_state_shapes(model, optimizer):
+    """Abstract TrainState for the dry-run (no allocation)."""
+    p_shapes = model.param_shapes()
+
+    def mk(rng):
+        params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), p_shapes)
+        return TrainState(
+            params=params, opt_state=optimizer.init(params),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    return jax.eval_shape(mk, jax.random.PRNGKey(0))
+
+
+def _split_microbatches(batch, n):
+    return jax.tree.map(lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch)
+
+
+def make_train_step(model, optimizer, *, microbatches: int = 1, clip_norm: float = 1.0):
+    cfg = model.cfg
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    def train_step(state: TrainState, batch):
+        batch = jax.tree.map(
+            lambda x: constrain(x, ("pod", "data")), batch
+        )
+        if microbatches > 1:
+            mbs = _split_microbatches(batch, microbatches)
+
+            def acc_body(carry, mb):
+                loss, grads = jax.value_and_grad(loss_fn)(state.params, mb)
+                g_acc, l_acc = carry
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / microbatches, g_acc, grads
+                )
+                return (g_acc, l_acc + loss / microbatches), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (grads, loss), _ = lax.scan(acc_body, (g0, 0.0), mbs)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        if clip_norm:
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+        updates, opt_state = optimizer.update(grads, state.opt_state, state.params, state.step)
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype), state.params, updates)
+        new_state = TrainState(params=params, opt_state=opt_state, step=state.step + 1)
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm}
+        return new_state, metrics
+
+    return train_step

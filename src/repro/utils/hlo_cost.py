@@ -1,0 +1,335 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE — for
+scan-over-layers models that undercounts FLOPs/bytes/collectives by ~L.  This
+module parses the optimized HLO, walks computations recursively, and
+multiplies while-body costs by the ``known_trip_count`` backend_config, giving
+per-device totals suitable for roofline analysis:
+
+  flops       — dot ops: 2 * numel(result) * contracted_size
+  bytes       — per top-level op: operand bytes + result bytes (fusion
+                internals excluded: a fused region reads its operands and
+                writes its result once — closer to real HBM traffic than
+                cost_analysis' per-op accounting)
+  collectives — wire bytes per collective kind (all-gather counts the
+                gathered output, reduce ops count the payload), multiplied
+                through enclosing loops
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+
+
+def _parse_line(line: str):
+    """'%name = TYPE opcode(rest' -> (name, type_str, opcode, rest) or None.
+
+    TYPE may be a tuple containing '/*index=k*/' comments, so it is scanned
+    with paren balancing rather than a regex.
+    """
+    nm = _NAME_RE.match(line)
+    if not nm:
+        return None
+    pos = nm.end()
+    if pos < len(line) and line[pos] == "(":
+        depth = 0
+        i = pos
+        while i < len(line):
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            i += 1
+        type_str = line[pos : i + 1]
+        rest_start = i + 1
+    else:
+        sp = line.find(" ", pos)
+        if sp < 0:
+            return None
+        type_str = line[pos:sp]
+        rest_start = sp
+    om = _OPCODE_RE.match(line, rest_start)
+    if not om:
+        return None
+    return nm.group(1), type_str, om.group(1), line[om.end() :]
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_numel_bytes(shape_str: str):
+    """Total (numel, bytes) over all array shapes in the string (tuples sum)."""
+    numel_total, bytes_total = 0, 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        numel_total += n
+        bytes_total += n * _DTYPE_BYTES[dt]
+    return numel_total, bytes_total
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    shape_str: str
+    opcode: str
+    rest: str  # operands + attributes (text after the opening paren)
+
+
+def _split_computations(hlo: str):
+    """name -> list[OpInfo]; also records computation parameter shapes."""
+    comps: dict[str, list[OpInfo]] = {}
+    params: dict[str, dict[str, str]] = {}
+    cur = None
+    header_re = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\((.*)\)\s*->")
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        hm = header_re.match(line.strip())
+        if hm and line.strip().endswith("{"):
+            cur = hm.group(1)
+            comps[cur] = []
+            params[cur] = {}
+            # parse "name: shape, name: shape"
+            for pm in re.finditer(r"([\w.\-]+):\s*((?:\([^)]*\))|[^,()]+)", hm.group(2)):
+                params[cur][pm.group(1)] = pm.group(2)
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_line(line)
+        if parsed:
+            comps[cur].append(OpInfo(*parsed))
+    return comps, params
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict | None = None
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {k: 0.0 for k in COLLECTIVE_KINDS}
+
+    def __iadd__(self, o):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k in COLLECTIVE_KINDS:
+            self.coll[k] += o.coll[k]
+        return self
+
+    def scaled(self, f):
+        return Cost(self.flops * f, self.bytes * f,
+                    {k: v * f for k, v in self.coll.items()})
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps, self.params = _split_computations(hlo_text)
+        self._memo: dict[str, Cost] = {}
+        self.entry = None
+        m = re.search(r"^ENTRY\s+%([\w.\-]+)", hlo_text, re.MULTILINE)
+        if m:
+            self.entry = m.group(1)
+        else:  # fall back to last computation
+            self.entry = list(self.comps)[-1] if self.comps else None
+
+    # ------------------------------------------------------------ helpers
+
+    def _symbol_shapes(self, comp: str):
+        table = dict(self.params.get(comp, {}))
+        for op in self.comps[comp]:
+            table[op.name] = op.shape_str
+        return table
+
+    def _dot_flops(self, op: OpInfo, table):
+        numel, _ = _shape_numel_bytes(op.shape_str)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+        contract = 1
+        if m:
+            ops = _OPERAND_RE.findall(op.rest.split(")", 1)[0])
+            if ops:
+                lhs_shape = table.get(ops[0], "")
+                sm = _SHAPE_RE.search(lhs_shape)
+                if sm:
+                    dims = [int(d) for d in sm.group(2).split(",") if d]
+                    for di in m.group(1).split(","):
+                        if di and int(di) < len(dims):
+                            contract *= dims[int(di)]
+        return 2.0 * numel * contract
+
+    def _op_bytes(self, op: OpInfo, table):
+        if op.opcode in _SKIP_BYTES_OPS:
+            return 0.0
+        _, out_b = _shape_numel_bytes(op.shape_str)
+        # windowed ops touch only the window, not the full operand — counting
+        # full operands would charge scan-body slicing O(L) per iteration
+        # (O(L^2) overall), wildly inflating scan-over-layers programs
+        if op.opcode == "dynamic-slice":
+            return 2.0 * out_b  # read window + write result
+        if op.opcode == "dynamic-update-slice":
+            ops = _OPERAND_RE.findall(op.rest.split("), ", 1)[0])
+            upd = _shape_numel_bytes(table.get(ops[1], ""))[1] if len(ops) > 1 else out_b
+            return 3.0 * upd  # read window + read update + write window
+        if op.opcode == "gather":
+            return 2.0 * out_b
+        in_b = 0.0
+        operand_str = op.rest.split("), ", 1)[0]
+        for name in _OPERAND_RE.findall(operand_str):
+            if name in table:
+                _, b = _shape_numel_bytes(table[name])
+                in_b += b
+        return out_b + in_b
+
+    def _fusion_bytes(self, op: OpInfo, table, called: str) -> float:
+        """Window-aware byte accounting at a fusion boundary.
+
+        A fusion's parameters that are only ever *windowed* inside (the
+        operand of a dynamic-slice, or the in-place target of a root
+        dynamic-update-slice) contribute window bytes, not full-array bytes —
+        otherwise scan-residual saving (fused DUS into an [L, ...] buffer)
+        gets charged the whole buffer every iteration, inflating train
+        programs ~50-100x.
+        """
+        inner_ops = self.comps.get(called)
+        if not inner_ops:
+            return self._op_bytes(op, table)
+        inner_table = self._symbol_shapes(called)
+        root = inner_ops[-1]
+
+        # uses of each symbol inside the fusion
+        uses: dict[str, list[tuple[OpInfo, int]]] = {}
+        for o in inner_ops:
+            operand_str = o.rest.split("), ", 1)[0]
+            for idx, nm in enumerate(_OPERAND_RE.findall(operand_str)):
+                uses.setdefault(nm, []).append((o, idx))
+
+        in_b = 0.0
+        for o in inner_ops:
+            if o.opcode != "parameter":
+                continue
+            _, full_b = _shape_numel_bytes(o.shape_str)
+            u = uses.get(o.name, [])
+            if u and all(uo.opcode == "dynamic-slice" and pos == 0 for uo, pos in u):
+                in_b += sum(_shape_numel_bytes(uo.shape_str)[1] for uo, _ in u)
+            elif (root.opcode == "dynamic-update-slice" and u
+                  and all(uo is root and pos == 0 for uo, pos in u)):
+                # in-place accumulation target: read the window only
+                ops_n = _OPERAND_RE.findall(root.rest.split("), ", 1)[0])
+                upd = inner_table.get(ops_n[1], "") if len(ops_n) > 1 else ""
+                in_b += _shape_numel_bytes(upd)[1]
+            else:
+                in_b += full_b
+
+        if root.opcode == "dynamic-update-slice":
+            ops_n = _OPERAND_RE.findall(root.rest.split("), ", 1)[0])
+            upd = inner_table.get(ops_n[1], "") if len(ops_n) > 1 else ""
+            out_b = _shape_numel_bytes(upd)[1]
+        else:
+            _, out_b = _shape_numel_bytes(op.shape_str)
+        return in_b + out_b
+
+    # ------------------------------------------------------------ walk
+
+    def comp_cost(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = Cost()  # break cycles defensively
+        total = Cost()
+        table = self._symbol_shapes(comp)
+        for op in self.comps.get(comp, []):
+            oc = op.opcode
+            if oc == "while":
+                trip = 1
+                tm = _TRIP_RE.search(op.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                bm = _BODY_RE.search(op.rest)
+                if bm:
+                    total += self.comp_cost(bm.group(1)).scaled(trip)
+                cm = _COND_RE.search(op.rest)
+                if cm:
+                    total += self.comp_cost(cm.group(1)).scaled(trip)
+                continue
+            if oc in ("fusion", "call", "async-start", "custom-call"):
+                cm = _CALLS_RE.search(op.rest)
+                inner = Cost()
+                if cm and cm.group(1) in self.comps:
+                    inner = self.comp_cost(cm.group(1))
+                    byts = self._fusion_bytes(op, table, cm.group(1))
+                else:
+                    byts = self._op_bytes(op, table)
+                # fusion: flops from the fused computation, bytes at the
+                # fusion boundary only (window-aware)
+                total += Cost(inner.flops, byts, inner.coll)
+                continue
+            if oc == "conditional":
+                for cname in re.findall(r"(?:branch_computations=\{|true_computation=%|false_computation=%)([\w.\-]+)", op.rest):
+                    if cname in self.comps:
+                        total += self.comp_cost(cname)
+                continue
+            base = oc.replace("-start", "") if oc.endswith("-start") else oc
+            if base in COLLECTIVE_KINDS:
+                _, b = _shape_numel_bytes(op.shape_str)
+                c = Cost(0.0, self._op_bytes(op, table))
+                c.coll[base] += b
+                total += c
+                continue
+            if oc.endswith("-done"):
+                continue
+            if oc == "dot" or oc == "convolution":
+                total += Cost(self._dot_flops(op, table), self._op_bytes(op, table))
+                continue
+            total += Cost(0.0, self._op_bytes(op, table))
+        self._memo[comp] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.comp_cost(self.entry)
+
+
+def analyze(hlo_text: str) -> dict:
+    c = HloCostModel(hlo_text).entry_cost()
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "collective_bytes": sum(c.coll.values()),
+        "collectives": dict(c.coll),
+    }

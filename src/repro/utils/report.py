@@ -1,0 +1,100 @@
+"""Aggregate dry-run artifacts into the EXPERIMENTS.md §Dry-run/§Roofline
+markdown tables.
+
+  PYTHONPATH=src python -m repro.utils.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_b(x):
+    for unit, s in ((1e12, "TB"), (1e9, "GB"), (1e6, "MB"), (1e3, "KB")):
+        if abs(x) >= unit:
+            return f"{x/unit:.2f}{s}"
+    return f"{x:.0f}B"
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def load(dir_, include_tagged=False):
+    recs = []
+    for f in sorted(Path(dir_).glob("*.json")):
+        if not include_tagged and "__h_" in f.stem:
+            continue  # hillclimb artifacts live in §Perf, not the baseline
+        rec = json.loads(f.read_text())
+        rec["_tag"] = f.stem.split("__")[3] if f.stem.count("__") >= 3 else ""
+        recs.append(rec)
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]), r["mesh"]))
+    return recs
+
+
+def dryrun_table(recs):
+    out = ["| arch | shape | mesh | bytes/dev (args+out+temp) | HLO GFLOP/dev | HLO bytes/dev | coll bytes/dev (ag/ar/rs/a2a/cp) | compile |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        m = r["memory_analysis"]
+        resident = m.get("argument_size_in_bytes", 0) + m.get("output_size_in_bytes", 0)
+        temp = m.get("temp_size_in_bytes", 0)
+        c = r["collectives"]
+        cstr = "/".join(fmt_b(c.get(k, 0)) for k in
+                        ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {fmt_b(resident)} + {fmt_b(temp)} temp "
+            f"| {r['flops_per_device']/1e9:.1f} "
+            f"| {fmt_b(r['bytes_per_device'])} "
+            f"| {fmt_b(r['collective_bytes_per_device'])} ({cstr}) "
+            f"| {r['compile_s']:.0f}s |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(recs, mesh="single"):
+    out = ["| arch | shape | compute | memory | collective | dominant | MODEL_FLOPS | useful ratio | note |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    notes = {
+        "compute": "more MXU-efficient layout / larger tiles",
+        "memory": "cut HBM traffic: lower bits, fuse dequant, better remat",
+        "collective": "reshape sharding: fewer/smaller gathers or overlap",
+    }
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        t = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['compute_s'])} "
+            f"| {fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} "
+            f"| **{t['dominant']}** | {r['model_flops']:.2e} "
+            f"| {r['useful_flops_ratio']:.2f} | {notes[t['dominant']]} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print(f"# {len(recs)} cells\n")
+    print("## Dry-run table\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(recs, "single"))
+    print("\n## Roofline (multi-pod)\n")
+    print(roofline_table(recs, "multi"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Roofline-term extraction from compiled XLA artifacts (TPU v5e model).
+
+compute_s   = HLO_FLOPs(per device) / peak_FLOPs
+memory_s    = HLO_bytes(per device) / HBM_bw
+collective_s= collective bytes (per device, parsed from optimized HLO) / ICI_bw
+
+cost_analysis() reports per-device numbers for SPMD-partitioned programs;
+collective bytes are NOT in cost_analysis, so we parse the optimized HLO text
+and sum operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops (async *-start forms counted once).
+"""
+from __future__ import annotations
+
+import re
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 0.5, "u4": 0.5,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[^\s(]+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(",
+    re.MULTILINE,
+)
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes per collective kind from optimized HLO text.
+
+    Output-shape bytes are the wire-relevant payload for gather/reduce ops
+    ('-done' ops and fused regions are skipped; '-start' counted once).
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_str)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float, coll_bytes: float) -> dict:
+    comp = flops / PEAK_FLOPS_BF16
+    mem = bytes_accessed / HBM_BW
+    coll = coll_bytes / ICI_BW
+    dominant = max(("compute", comp), ("memory", mem), ("collective", coll),
+                   key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": comp,
+        "memory_s": mem,
+        "collective_s": coll,
+        "dominant": dominant,
+        "bound_s": max(comp, mem, coll),
+    }
+
+
+def model_flops(cfg, shape, n_params_active: float, n_params_total: float) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D for training, 2·N·B per decoded token,
+    2·N·(B·S) for prefill (forward only)."""
+    if shape.kind == "train":
+        return 6.0 * n_params_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_params_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_params_active * shape.global_batch  # one decode step
+
+
+def count_params(shapes_tree) -> float:
+    import jax
+
+    return float(sum(s.size for s in jax.tree.leaves(shapes_tree)))
+
+
+def active_params(cfg, total: float) -> float:
+    """MoE: approximate active params = total - (inactive expert fraction)."""
+    if not cfg.n_experts:
+        return total
+    import jax
+
+    # expert weights: wi + wo per layer
+    moe_layers = cfg.n_layers - cfg.first_dense_layers
+    expert_p = moe_layers * cfg.n_experts * (cfg.d_model * 2 * cfg.d_expert + cfg.d_expert * cfg.d_model)
+    active_expert_p = expert_p * cfg.top_k / cfg.n_experts
+    return total - expert_p + active_expert_p

@@ -1,0 +1,71 @@
+"""Per-kernel allclose tests: kv_quant Pallas kernel vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import layout, quantizer
+from repro.kernels.kv_quant import kernel as kq_kernel
+from repro.kernels.kv_quant import ref as kq_ref
+
+
+def _rand(key, shape, dtype=jnp.bfloat16):
+    # heavy-tailed, per-channel offset — realistic K statistics (outlier channels)
+    k1, k2 = jax.random.split(key)
+    base = jax.random.normal(k1, shape, jnp.float32)
+    chan = 4.0 * jax.random.normal(k2, shape[-1:], jnp.float32)
+    return (base + chan).astype(dtype)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("granularity", ["channel", "tensor"])
+@pytest.mark.parametrize("d", [64, 128, 256])
+@pytest.mark.parametrize("block_n", [128, 256])
+def test_kvquant_matches_ref(bits, granularity, d, block_n):
+    b, h, nb = 2, 3, 2
+    s = nb * block_n
+    x = _rand(jax.random.PRNGKey(42), (b, h, s, d))
+    w_k, s_k, z_k = kq_kernel.quantize_kv_pallas(
+        x, bits=bits, granularity=granularity, block_n=block_n, interpret=True
+    )
+    ref_jit = jax.jit(
+        kq_ref.quantize_kv_ref, static_argnums=(1, 2), static_argnames=("block_n",)
+    )
+    w_r, s_r, z_r = ref_jit(x, bits, granularity, block_n=block_n)
+    np.testing.assert_array_equal(np.asarray(w_k), np.asarray(w_r))
+    np.testing.assert_allclose(
+        np.asarray(s_k, np.float32), np.asarray(s_r, np.float32), rtol=1e-2, atol=1e-3
+    )
+    np.testing.assert_allclose(
+        np.asarray(z_k, np.float32), np.asarray(z_r, np.float32), rtol=1e-2, atol=1e-3
+    )
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+@pytest.mark.parametrize("granularity", ["channel", "tensor"])
+def test_roundtrip_error_bound(bits, granularity):
+    """Dequantized values are within scale/2 of the originals (+param rounding)."""
+    b, h, s, d = 1, 2, 256, 128
+    x = _rand(jax.random.PRNGKey(0), (b, h, s, d))
+    w, sc, zp = kq_ref.quantize_kv_ref(x, bits, granularity, param_dtype=jnp.float32)
+    x_hat = kq_ref.dequantize_kv_ref(w, sc, zp, bits, granularity, dtype=jnp.float32)
+    xf = np.asarray(x, np.float32)
+    err = np.abs(np.asarray(x_hat) - xf)
+    if granularity == "channel":
+        bound = np.asarray(sc, np.float32).reshape(b, h, -1, 1, d)
+        bound = np.broadcast_to(bound, (b, h, s // 128, 128, d)).reshape(b, h, s, d)
+    else:
+        bound = np.asarray(sc, np.float32).reshape(b, h, s, 1)
+        bound = np.broadcast_to(bound, (b, h, s, d))
+    # round-to-nearest: |err| <= scale/2 (+ bf16 rounding of inputs)
+    assert np.all(err <= 0.5 * bound + 0.05 * np.abs(xf) + 1e-2)
+
+
+def test_strided_pack_natural_order():
+    """Unpack(pack(q)) is the identity — the induced-layout property."""
+    rng = np.random.default_rng(7)
+    for bits in (2, 4, 8):
+        q = jnp.asarray(rng.integers(0, layout.qmax(bits) + 1, (3, 128, 64)), jnp.int32)
+        w = layout.pack_strided(q, bits)
+        assert w.shape == (3, 128 // layout.packing_ratio(bits), 64)
+        np.testing.assert_array_equal(np.asarray(layout.unpack_strided(w, bits)), np.asarray(q))

@@ -1,0 +1,122 @@
+"""Cache invariants: append/flush/prefill vs a plain fp16 history oracle.
+
+Property tests (hypothesis) over lengths: for any number of appended tokens,
+attention through the quantized cache tracks exact attention over the same
+history, and the packed/residual partition always satisfies the paper's
+invariants (res_len < N_r, length = pack_blocks * N_r + res_len).
+"""
+import functools
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attention as catt
+from repro.core import qcache
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, H, D, BLOCK = 2, 2, 64, 128
+MAXSEQ = 4 * BLOCK
+
+
+def _history(key, n):
+    ks = jax.random.split(key, 2)
+    k = jax.random.normal(ks[0], (B, H, n, D), jnp.float32).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[1], (B, H, n, D), jnp.float32).astype(jnp.bfloat16)
+    return k, v
+
+
+def _oracle(q, k, v):
+    s = jnp.einsum("bhgd,bhtd->bhgt", q.astype(jnp.float32), k.astype(jnp.float32))
+    p = jax.nn.softmax(s / q.shape[-1] ** 0.5, axis=-1)
+    return jnp.einsum("bhgt,bhtd->bhgd", p, v.astype(jnp.float32))
+
+
+@jax.jit
+def _append_all(cache, k, v):
+    def body(c, kv):
+        kn, vn = kv
+        return qcache.append_decode(c, kn[:, :, None], vn[:, :, None]), None
+
+    cache, _ = jax.lax.scan(body, cache, (k.transpose(2, 0, 1, 3), v.transpose(2, 0, 1, 3)))
+    return cache
+
+
+@hypothesis.given(n=st.integers(min_value=1, max_value=3 * BLOCK + 17))
+@hypothesis.settings(max_examples=12, deadline=None)
+def test_append_matches_history_oracle(n):
+    k, v = _history(jax.random.PRNGKey(n), n)
+    cache = qcache.init_cache(B, H, D, MAXSEQ, bits=8, block_n=BLOCK)
+    cache = _append_all(cache, k, v)
+
+    # occupancy invariants (paper partition X = X_pack ∪ X_res)
+    assert int(cache.res_len[0]) < BLOCK or BLOCK == int(cache.res_len[0]) == 0
+    np.testing.assert_array_equal(np.asarray(cache.length), n)
+    assert int(cache.pack_blocks[0]) == n // BLOCK
+
+    q = (jax.random.normal(jax.random.PRNGKey(7 * n + 1), (B, 1, H * 2, D))).astype(jnp.bfloat16)
+    out = catt.decode_attention(q, cache, impl="xla")
+    # oracle over the exact same history, GQA expanded (g_q = 2)
+    qt = q.reshape(B, H, 2, D)
+    ref = _oracle(qt, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out.reshape(B, H, 2, D)), np.asarray(ref), rtol=0.08, atol=0.08
+    )
+
+
+@hypothesis.given(n=st.integers(min_value=1, max_value=MAXSEQ - BLOCK))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_prefill_equals_incremental_append(n):
+    """prefill(L) and L × append produce identical attention outputs."""
+    k, v = _history(jax.random.PRNGKey(1000 + n), n)
+    c_inc = _append_all(qcache.init_cache(B, H, D, MAXSEQ, bits=4, block_n=BLOCK), k, v)
+    c_pre = qcache.prefill(
+        qcache.init_cache(B, H, D, MAXSEQ, bits=4, block_n=BLOCK), k, v, quant_impl="xla"
+    )
+    np.testing.assert_array_equal(np.asarray(c_inc.pack_blocks), np.asarray(c_pre.pack_blocks))
+    np.testing.assert_array_equal(np.asarray(c_inc.res_len), np.asarray(c_pre.res_len))
+    q = jax.random.normal(jax.random.PRNGKey(3), (B, 1, H, D)).astype(jnp.bfloat16)
+    o_inc = catt.decode_attention(q, c_inc, impl="xla")
+    o_pre = catt.decode_attention(q, c_pre, impl="xla")
+    np.testing.assert_allclose(np.asarray(o_inc), np.asarray(o_pre), rtol=1e-5, atol=1e-5)
+
+
+def test_blockwise_attention_matches_naive():
+    b, s, hq, hkv, d = 2, 192, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32)
+    out = catt.blockwise_attention(q, k, v, causal=True, block_k=64)
+    # naive causal reference with GQA expansion
+    kx = jnp.repeat(k, hq // hkv, axis=2)
+    vx = jnp.repeat(v, hq // hkv, axis=2)
+    scores = jnp.einsum("bshd,bthd->bhst", q, kx) / d**0.5
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, -1e37)
+    ref = jnp.einsum("bhst,bthd->bshd", jax.nn.softmax(scores, axis=-1), vx)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-2, atol=2e-2)
+
+
+def test_mla_shared_cache_roundtrip():
+    """Latent (shared_kv) cache: decode matches oracle on the latent stream."""
+    d_lat, d_v, n = 128, 128, 200
+    k = jax.random.normal(
+        jax.random.PRNGKey(5), (B, H, n, d_lat), jnp.float32
+    ).astype(jnp.bfloat16)
+    cache = qcache.init_cache(B, H, d_lat, MAXSEQ, bits=8, block_n=BLOCK, shared_kv=True)
+
+    def body(c, kn):
+        return qcache.append_decode(c, kn[:, :, None], None), None
+
+    cache, _ = jax.lax.scan(body, cache, k.transpose(2, 0, 1, 3))
+    q = jax.random.normal(jax.random.PRNGKey(6), (B, 1, H * 4, d_lat)).astype(jnp.bfloat16)
+    out = catt.decode_attention(q, cache, d_v=d_v, impl="xla")
+    qt = q.reshape(B, H, 4, d_lat)
+    ref = _oracle(qt, k, k[..., :d_v])
+    np.testing.assert_allclose(
+        np.asarray(out.reshape(B, H, 4, d_v)), np.asarray(ref), rtol=0.08, atol=0.08
+    )
