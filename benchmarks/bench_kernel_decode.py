@@ -1,14 +1,21 @@
 """Paper Fig. 8/9/10 analogue: decode-kernel performance across serving
-settings (Single / Batches) × bits {16,4,2} × attention variants (MHA/GQA).
+settings (Single / Batches) × bits {16,4,2} × attention variants (MHA/GQA),
+plus the split-KV (FlashDecoding) num_splits sweep at the single-batch
+long-context setting.
 
 On CPU we report (a) measured XLA-path wall time at reduced sizes and (b) the
 modeled HBM-bytes speedup vs the fp16 baseline at paper-scale sizes — decode
 is bandwidth-bound (paper §II), so bytes-moved ratio is the TPU roofline
-prediction of the kernel speedup the paper measures on GPUs.
+prediction of the kernel speedup the paper measures on GPUs.  The split-KV
+sweep additionally records the roofline parallel-work model (exposed parallel
+grid cells and per-core sequential depth) and appends each run to
+BENCH_splitkv.json so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import functools
+import json
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +23,9 @@ import jax.numpy as jnp
 from benchmarks.common import (emit, kv_bytes_fp16, kv_bytes_quant,
                                make_decode_case, timeit)
 from repro.core import attention as catt
+from repro.kernels.bitdecode import ops as bd_ops
+
+_BENCH_SPLITKV = Path(__file__).resolve().parent.parent / "BENCH_splitkv.json"
 
 
 def _fp16_decode(q, k, v):
@@ -25,7 +35,64 @@ def _fp16_decode(q, k, v):
     return jnp.einsum("bhgt,bhtd->bhgd", p, v.astype(jnp.float32))
 
 
+def run_splitkv_sweep(*, s=8192, out_path: Path | None = None):
+    """num_splits sweep at the paper's headline regime: b=1, GQA h_kv=2,
+    long context (nb = s / block_n packed blocks).
+
+    Measured: XLA split-path wall time per num_splits (the CPU harness; on
+    TPU the same sweep times the Pallas grid).  Modeled: bandwidth-bound
+    roofline — a split-KV grid exposes ``b * h_kv * num_splits`` independent
+    cells whose per-core sequential depth is ``ceil(nb/num_splits) + 1``
+    blocks, so with >= num_splits cores the streaming time shrinks by
+    (nb + 1) / depth while total bytes moved stay constant.
+    """
+    d, block_n, bits = 128, 128, 4
+    b, h_kv, g_q = 1, 2, 4
+    nb = s // block_n
+    q, cache, _ = make_decode_case(b=b, h_kv=h_kv, g_q=g_q, d=d, s=s,
+                                   bits=bits, block_n=block_n)
+    records = []
+    us_unsplit = None
+    for ns in (1, 2, 4, 8):
+        fn = jax.jit(functools.partial(
+            catt.decode_attention, impl="xla", num_splits=ns))
+        us = timeit(fn, q, cache)
+        if ns == 1:
+            us_unsplit = us
+        depth = -(-nb // ns) + 1
+        exposure = b * h_kv * ns
+        modeled_speedup = (nb + 1) / depth
+        rec = {
+            "setting": f"single-gqa-long.b{b}.hkv{h_kv}.s{s}",
+            "bits": bits,
+            "num_splits": ns,
+            "auto_num_splits": bd_ops.auto_num_splits(b, h_kv, nb),
+            "measured_us": round(us, 1),
+            "measured_speedup_vs_unsplit": round(us_unsplit / us, 3),
+            "parallel_exposure": exposure,  # independent grid cells
+            "sequential_depth_blocks": depth,
+            "modeled_speedup_cores_ge_splits": round(modeled_speedup, 3),
+        }
+        records.append(rec)
+        emit(
+            f"kernel_decode.splitkv.s{s}.ns{ns}", us,
+            f"exposure={exposure};depth={depth};"
+            f"modeled_speedup={modeled_speedup:.2f}x",
+        )
+    out_path = _BENCH_SPLITKV if out_path is None else out_path
+    history = []
+    if out_path.exists():
+        try:
+            history = json.loads(out_path.read_text())
+        except json.JSONDecodeError:
+            history = []
+    history.append({"backend": jax.default_backend(), "records": records})
+    out_path.write_text(json.dumps(history, indent=2) + "\n")
+    return records
+
+
 def run():
+    run_splitkv_sweep()
     d, block_n = 128, 128
     settings = [
         ("single-mha", dict(b=1, h_kv=8, g_q=1, s=4096)),

@@ -64,15 +64,31 @@ def decode_attention(
     sm_scale: float | None = None,
     d_v: int | None = None,
     impl: str = "auto",
+    num_splits: int | str | None = "auto",
     return_lse: bool = False,
 ):
-    """Low-bit fused decode attention against a QuantKVCache."""
+    """Low-bit fused decode attention against a QuantKVCache.
+
+    Split-KV decode is two-level:
+
+    * **in-kernel** (``num_splits``): the packed-block walk becomes an extra
+      parallel grid dimension with per-split (o, lse) partials and a fused
+      logsumexp merge.  ``"auto"`` applies the heuristic in
+      ``kernels/bitdecode/ops.auto_num_splits``: split only when ``B x H_kv``
+      underfills the chip's parallel grid slots (the single-batch
+      long-context regime — e.g. B=1, H_kv=2 at 128K) AND the sequence is
+      long enough that each split owns >= 2 packed blocks; batch-heavy
+      serving shapes keep ``num_splits = 1`` and pay nothing.
+    * **cross-chip** (:class:`use_splitkv`): the packed cache is sharded
+      along a mesh axis and per-chip partials merge with the same lse math
+      (repro.dist.splitkv).  Both levels compose.
+    """
     if _SPLITKV["mesh"] is not None and not return_lse:
         from repro.dist import splitkv as _sk
 
         return _sk.splitkv_decode_attention(
             q, cache, _SPLITKV["mesh"], axis=_SPLITKV["axis"],
-            sm_scale=sm_scale, d_v=d_v, impl=impl,
+            sm_scale=sm_scale, d_v=d_v, impl=impl, num_splits=num_splits,
         )
     h_kv = cache.kw.shape[1]
     qt = query_transform(q, h_kv)
@@ -82,7 +98,7 @@ def decode_attention(
         cache.k_res, cache.v_res, cache.pack_blocks, cache.res_len,
         bits=cache.bits, block_n=cache.block_n, sm_scale=sm_scale,
         k_gran=cache.k_gran, shared_kv=cache.shared_kv, d_v=d_v,
-        impl=impl, return_lse=return_lse,
+        impl=impl, num_splits=num_splits, return_lse=return_lse,
     )
     if return_lse:
         o, lse = out

@@ -1,0 +1,28 @@
+"""Distributed layer: sharding rules, decode-state placement, and the
+cross-chip split-KV decode path.
+
+Modules:
+  * :mod:`repro.dist.sharding`    — logical-axis rules -> PartitionSpecs,
+    plus :func:`constrain`, the activation sharding-constraint helper used
+    by the models and the train step;
+  * :mod:`repro.dist.state_specs` — PartitionSpec trees for decode state
+    (QuantKVCache placement, incl. the split-KV block-axis sharding);
+  * :mod:`repro.dist.splitkv`     — sequence-parallel decode across a mesh
+    axis with the logsumexp partials merge (FlashDecoding across chips).
+
+Compat: older jax (< 0.6) has no ``jax.set_mesh``; ``Mesh`` itself is the
+context manager that installs the active mesh.  The launchers and tests use
+the modern spelling, so install a minimal shim when it is missing.
+"""
+from __future__ import annotations
+
+import jax
+
+if not hasattr(jax, "set_mesh"):  # pragma: no cover - depends on jax version
+    def _set_mesh_compat(mesh):
+        """``with jax.set_mesh(m):`` == ``with m:`` on legacy jax."""
+        return mesh
+
+    jax.set_mesh = _set_mesh_compat
+
+from repro.dist import sharding, splitkv, state_specs  # noqa: E402,F401

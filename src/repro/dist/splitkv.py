@@ -1,0 +1,137 @@
+"""Cross-chip split-KV decode: FlashDecoding partitioning across a mesh axis.
+
+The single-chip kernel already splits the packed-block walk across its grid
+(kernels/bitdecode, ``num_splits``); this module is the level above: the
+packed cache is sharded *across chips* along the block axis of a mesh axis
+(normally "data", which carries no batch at the long-context small-batch
+shapes — see launch/mesh.pick_batch_axes), every chip runs the local fused
+kernel over its shard, and the per-chip partials are combined with the
+logsumexp merge specified by tests/test_splitkv_math.py:
+
+    m = max_i lse_i;  w_i = exp(lse_i - m);  out = sum_i w_i o_i / sum_i w_i
+
+A shard whose block range lies beyond ``pack_blocks[b]`` computes no valid
+tokens; the kernel's finalize l=0 guard emits lse ~ -inf, so its weight
+underflows to exactly 0 and the merge is unaffected.  The bf16 residual tail
+is replicated and processed by the *last* shard only (it usually owns the
+fewest valid blocks, so the extra block balances the walk).
+
+Wired in through :class:`repro.core.attention.use_splitkv`, which the
+launchers enter around lowering the long-context decode cells.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as PS
+
+from repro.kernels.bitdecode import ops as bd_ops
+
+
+def merge_collective(o, lse, axis: str):
+    """lse-merge of per-shard flash partials across mesh axis ``axis``.
+
+    o: [..., g, d_v] normalized per-shard output; lse: [..., g].  Returns the
+    merged output, replicated along ``axis``.
+    """
+    m = lax.pmax(lse, axis)
+    w = jnp.exp(lse - m)
+    num = lax.psum(w[..., None] * o, axis)
+    den = lax.psum(w, axis)
+    return num / jnp.maximum(den, 1e-30)[..., None]
+
+
+def _pad_block_axis(x, pad: int):
+    """Zero-pad the packed-block axis (dim 2 of [B, H, nb, ...]) so it splits
+    evenly across the mesh axis.  Padded blocks sit beyond pack_blocks and
+    are never read as valid.
+
+    NB: when nb is not already a multiple of the axis size this copies the
+    cache every call — size caches so nb divides the split axis (ROADMAP:
+    mesh-aligned cache allocation)."""
+    if not pad or x is None:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[2] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def splitkv_decode_attention(
+    q,
+    cache,
+    mesh,
+    *,
+    axis: str = "data",
+    sm_scale: float | None = None,
+    d_v: int | None = None,
+    impl: str = "auto",
+    num_splits: int | str | None = "auto",
+):
+    """Sequence-parallel decode attention against a block-sharded QuantKVCache.
+
+    q: [B, 1, h_q, d_k] (model layout; the query transformation happens
+    here).  Returns [B, 1, h_q, d_v], replicated along ``axis``.  Composes
+    with the in-kernel split: each shard's local kernel may further split its
+    block range (``num_splits``), giving mesh x grid sequence parallelism.
+    """
+    from repro.core.attention import inverse_query_transform, query_transform
+
+    if axis not in mesh.axis_names:
+        raise ValueError(
+            f"mesh has no axis {axis!r}; available: {tuple(mesh.axis_names)}"
+        )
+    n = mesh.shape[axis]
+    h_kv = cache.kw.shape[1]
+    qt = query_transform(q, h_kv)
+    nb = cache.kw.shape[2]
+    pad = -(-nb // n) * n - nb
+
+    shared = cache.shared_kv
+    blk = PS(None, None, axis)  # shard dim 2 (packed blocks) of [B,H,nb,...]
+    rep = PS()
+
+    operands = [
+        qt,
+        _pad_block_axis(cache.kw, pad),
+        _pad_block_axis(cache.k_scale, pad),
+        _pad_block_axis(cache.k_zero, pad),
+    ]
+    in_specs = [rep, blk, blk, blk]
+    if not shared:
+        operands += [
+            _pad_block_axis(cache.vw, pad),
+            _pad_block_axis(cache.v_scale, pad),
+            _pad_block_axis(cache.v_zero, pad),
+        ]
+        in_specs += [blk, blk, blk]
+    operands += [cache.k_res, cache.v_res, cache.pack_blocks, cache.res_len]
+    in_specs += [rep] + ([rep] if not shared else []) + [rep, rep]
+    if shared:
+        operands = [x for x in operands if x is not None]
+
+    def local(*args):
+        if shared:
+            qt_, kw_, ks_, kz_, kres_, pb_, rl_ = args
+            vw_ = vs_ = vz_ = vres_ = None
+        else:
+            qt_, kw_, ks_, kz_, vw_, vs_, vz_, kres_, vres_, pb_, rl_ = args
+        idx = lax.axis_index(axis)
+        nb_local = kw_.shape[2]
+        lo = idx * nb_local
+        pb_local = jnp.clip(pb_ - lo, 0, nb_local)
+        rl_local = jnp.where(idx == n - 1, rl_, 0)
+        o, lse = bd_ops.bitdecode_attention(
+            qt_, kw_, ks_, kz_, vw_, vs_, vz_, kres_, vres_,
+            pb_local, rl_local,
+            bits=cache.bits, block_n=cache.block_n, sm_scale=sm_scale,
+            k_gran=cache.k_gran, shared_kv=shared, d_v=d_v,
+            impl=impl, num_splits=num_splits, return_lse=True,
+        )
+        return merge_collective(o, lse, axis)
+
+    out = shard_map(
+        local, mesh=mesh, in_specs=tuple(in_specs), out_specs=rep,
+        check_rep=False,
+    )(*operands)
+    return inverse_query_transform(out)

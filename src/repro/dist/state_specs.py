@@ -1,0 +1,110 @@
+"""PartitionSpec trees for decode state (the serving-side face of sharding).
+
+Decode state is a pytree of stacked QuantKVCache dataclasses plus per-model
+recurrent state (SSM/xLSTM) and a position vector.  Placement policy:
+
+  * batch dims shard over the largest ("pod", "data") group that divides the
+    global batch (mirrors launch/mesh.pick_batch_axes);
+  * the KV-head dim of caches shards over "model" (TP decode);
+  * when ``seq_ax`` is given (long-context small-batch shapes, where the
+    batch group is empty), the *packed-block* axis of every QuantKVCache
+    shards along it — the at-rest layout matching repro.dist.splitkv, so the
+    sequence-parallel decode reads its shard locally instead of re-gathering
+    the cache every step.
+
+Leaves that are not cache fields (pos, SSM states, ...) shard their batch
+dim, identified as the first dim equal to ``global_batch`` — a heuristic,
+but a safe one: specs only place data, they never change semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+from jax.sharding import PartitionSpec as PS
+
+from repro.core.qcache import QuantKVCache
+
+# field -> (base rank without stacking dims, {base-dim index: role})
+_CACHE_FIELD_ROLES = {
+    "kw": (5, {0: "batch", 1: "heads", 2: "blocks"}),
+    "k_scale": (4, {0: "batch", 1: "heads", 2: "blocks"}),
+    "k_zero": (4, {0: "batch", 1: "heads", 2: "blocks"}),
+    "vw": (5, {0: "batch", 1: "heads", 2: "blocks"}),
+    "v_scale": (4, {0: "batch", 1: "heads", 2: "blocks"}),
+    "v_zero": (4, {0: "batch", 1: "heads", 2: "blocks"}),
+    "k_res": (4, {0: "batch", 1: "heads"}),
+    "v_res": (4, {0: "batch", 1: "heads"}),
+    "pack_blocks": (1, {0: "batch"}),
+    "res_len": (1, {0: "batch"}),
+}
+
+
+def _batch_axes(mesh, global_batch: int) -> tuple:
+    """Largest batch-sharding axis group that divides the global batch."""
+    for axes in (("pod", "data"), ("data",), ()):
+        if all(a in mesh.axis_names for a in axes):
+            size = math.prod(mesh.shape[a] for a in axes)
+            if size and global_batch % size == 0:
+                return axes
+    return ()
+
+
+def _entry(names, mesh, dim: int):
+    names = tuple(n for n in names if n in mesh.axis_names and mesh.shape[n] > 1)
+    if not names or dim % math.prod(mesh.shape[n] for n in names):
+        return None
+    return names if len(names) > 1 else names[0]
+
+
+def _cache_specs(c: QuantKVCache, mesh, batch_axes, seq_ax):
+    role_axes = {
+        "batch": batch_axes,
+        "heads": ("model",),
+        "blocks": (seq_ax,) if seq_ax else (),
+    }
+
+    def field_spec(name: str, arr):
+        if arr is None:
+            return None
+        base_rank, roles = _CACHE_FIELD_ROLES[name]
+        lead = arr.ndim - base_rank  # stacked layer dims stay replicated
+        parts = [None] * arr.ndim
+        for i, role in roles.items():
+            parts[lead + i] = _entry(role_axes[role], mesh, arr.shape[lead + i])
+        return PS(*parts)
+
+    kwargs = {
+        name: field_spec(name, getattr(c, name)) for name in _CACHE_FIELD_ROLES
+    }
+    return dataclasses.replace(c, **kwargs)
+
+
+def decode_state_specs(model, mesh, *, global_batch: int, seq_ax: str | None = None):
+    """PartitionSpec tree matching ``model.init_decode_state`` structure."""
+    cfg = model.cfg
+    batch_axes = _batch_axes(mesh, global_batch)
+    # structure only — nb just has to be positive; actual decode states may
+    # have any block count, specs are rank/dim-role based
+    max_seq = 4 * getattr(cfg, "kv_block", 128)
+    # closure (not args) so batch/max_seq stay concrete python ints
+    state = jax.eval_shape(lambda: model.init_decode_state(global_batch, max_seq))
+
+    def generic(arr):
+        parts = [None] * arr.ndim
+        if batch_axes:
+            for i, d in enumerate(arr.shape):
+                if d == global_batch:
+                    parts[i] = _entry(batch_axes, mesh, d)
+                    break
+        return PS(*parts)
+
+    def node(x):
+        if isinstance(x, QuantKVCache):
+            return _cache_specs(x, mesh, batch_axes, seq_ax)
+        return generic(x)
+
+    return jax.tree.map(
+        node, state, is_leaf=lambda x: isinstance(x, QuantKVCache)
+    )

@@ -1,8 +1,25 @@
-"""Pallas TPU kernel: fused low-bit flash-decode attention (Packing Kernel).
+"""Pallas TPU kernel: fused low-bit flash-decode attention (Packing Kernel),
+with FlashDecoding-style split-KV sequence parallelism.
 
-Grid = (B, H_kv, nb + 1): FlashDecoding-style iteration over packed KV blocks
-with online-softmax carries in VMEM scratch; the final grid step processes the
-half-precision *residual* buffer (paper §IV-A(2)) and normalizes.
+Two-phase reduction
+-------------------
+Phase 1 — grid = (B, H_kv, num_splits, bps + 1), bps = ceil(nb / num_splits):
+each split owns a contiguous range of ``bps`` packed KV blocks and walks them
+with online-softmax carries in VMEM scratch; the final grid step of the LAST
+split additionally processes the half-precision *residual* buffer (paper
+§IV-A(2)).  Every split finalizes into its own slot of the partials outputs
+``o[num_splits, B, H, g, d_v]`` / ``lse[num_splits, B, H, g]`` — the first
+three grid dimensions are independent ("parallel"), so a single-batch
+long-context decode exposes ``B x H_kv x num_splits``-way parallelism instead
+of the ``B x H_kv`` of the unsplit kernel (the FlashDecoding-v2 trick the
+paper benchmarks against).
+
+Phase 2 — :func:`merge_partials`, a small XLA epilogue: a logsumexp-weighted
+combine of the per-split partials.  A split whose block range is entirely
+beyond ``pack_blocks[b]`` never updates its carries, so ``finalize``'s l=0
+guard emits lse ~ -inf and the merge weights it out *exactly* (the same
+contract tests/test_splitkv_math.py pins for the cross-chip merge in
+repro.dist.splitkv, which reuses this math over a mesh axis).
 
 Cooperative-unit mapping (paper §III-A):
   * unpack + dequant: shift/mask/FMA on the VPU — the CUDA-core role;
@@ -12,9 +29,8 @@ Cooperative-unit mapping (paper §III-A):
     against the compute of block i — the paper's cp.async/wgmma software
     pipeline (§V-C(2)) falls out of the BlockSpec machinery;
   * the online-softmax carry in VMEM scratch across sequential grid steps
-    replaces the multi-warp cooperative softmax (§IV-B(2)): on TPU the KV
-    blocks of one (b, h) are visited by one core, so cross-warp shared-memory
-    reduction is structural rather than synchronized.
+    replaces the multi-warp cooperative softmax (§IV-B(2)); the split axis
+    replaces FlashDecoding's inter-CTA partials+combine.
 
 The strided packed layout (core/layout.py) makes the unpack a handful of
 full-width vector ops whose output is already in natural token order inside
@@ -92,17 +108,39 @@ def dequant_tile(wq, scale, zero, k_gran):
 
 
 def finalize(o_ref, lse_ref, m_scr, l_scr, acc_scr):
-    # guard l=0 (all tokens masked, e.g. an empty split-KV shard): output
-    # zeros with lse ~ -inf so the cross-chip merge weights it out exactly
+    # guard l=0 (all tokens masked — e.g. a split whose block range lies
+    # beyond pack_blocks, or an empty split-KV shard): output zeros with
+    # lse ~ -inf so merge_partials / the cross-chip merge weights it out
+    # exactly
     l = jnp.maximum(l_scr[...], 1e-30)
-    o_ref[0, 0] = (acc_scr[...] / l[:, :1]).astype(o_ref.dtype)
-    lse_ref[0, 0] = m_scr[:, 0] + jnp.log(l[:, 0])
+    o_ref[0, 0, 0] = (acc_scr[...] / l[:, :1]).astype(o_ref.dtype)
+    lse_ref[0, 0, 0] = m_scr[:, 0] + jnp.log(l[:, 0])
 
 
 def init_carries(m_scr, l_scr, acc_scr):
     m_scr[...] = jnp.full(m_scr.shape, MASK_VALUE, jnp.float32)
     l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
     acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+
+def merge_partials(o_parts, lse_parts, *, return_lse: bool = True):
+    """Phase-2 combine of per-split flash partials (XLA epilogue).
+
+    o_parts: [S, ..., g, d_v] per-split normalized outputs;
+    lse_parts: [S, ..., g] per-split logsumexps.  Splits with no valid
+    tokens carry lse ~ -inf (finalize's l=0 guard) and get weight exp(-inf)=0,
+    so empty splits drop out exactly — the same lse-merge the distributed
+    layer (repro.dist.splitkv) runs across a mesh axis, specified by
+    tests/test_splitkv_math.py.
+    """
+    m = jnp.max(lse_parts, axis=0)
+    w = jnp.exp(lse_parts - m[None])  # [S, ..., g]
+    den = jnp.maximum(jnp.sum(w, axis=0), 1e-30)
+    num = jnp.sum(w[..., None] * o_parts, axis=0)
+    out = num / den[..., None]
+    if not return_lse:
+        return out
+    return out, m + jnp.log(den)
 
 
 def _body(
@@ -125,7 +163,8 @@ def _body(
     *,
     bits,
     block_n,
-    nb,
+    bps,
+    num_splits,
     res_n,
     sm_scale,
     k_gran,
@@ -133,8 +172,9 @@ def _body(
     d_v,
 ):
     b = pl.program_id(0)
-    j = pl.program_id(2)
-    n_steps = nb + 1
+    s = pl.program_id(2)
+    j = pl.program_id(3)
+    jj = s * bps + j  # global packed-block index owned by this grid step
 
     @pl.when(j == 0)
     def _init():
@@ -143,7 +183,7 @@ def _body(
     q = q_ref[0, 0].astype(jnp.bfloat16)  # (g, d_k)
     update = make_flash_update(q, m_scr, l_scr, acc_scr, sm_scale)
 
-    @pl.when(jnp.logical_and(j < n_steps - 1, j < pb_ref[b]))
+    @pl.when(jnp.logical_and(j < bps, jj < pb_ref[b]))
     def _packed_block():
         kw = kw_ref[0, 0, 0]  # (npr, d_k) int32
         kq = _unpack(kw, bits)  # (block_n, d_k) — VPU
@@ -155,8 +195,10 @@ def _body(
             v_hat = dequant_tile(vq, vs_ref[0, 0, 0], vz_ref[0, 0, 0], "tensor")
         update(k_hat, v_hat)
 
-    @pl.when(j == n_steps - 1)
-    def _residual_and_finalize():
+    # residual tail belongs to the LAST split only; every split finalizes
+    # its own partials slot at its last grid step
+    @pl.when(jnp.logical_and(j == bps, s == num_splits - 1))
+    def _residual():
         kr = kres_ref[0, 0].astype(jnp.bfloat16)  # (res_n, d_k)
         if shared_kv:
             vr = kres_ref[0, 0, :, :d_v].astype(jnp.bfloat16)
@@ -164,6 +206,9 @@ def _body(
             vr = vres_ref[0, 0].astype(jnp.bfloat16)
         mask = lax.broadcasted_iota(jnp.int32, (1, res_n), 1) < rl_ref[b]
         update(kr, vr, row_mask=mask)
+
+    @pl.when(j == bps)
+    def _finalize():
         finalize(o_ref, lse_ref, m_scr, l_scr, acc_scr)
 
 
@@ -180,7 +225,8 @@ def _kernel_shared(pb, rl, q, kw, ks, kz, kres, o, lse, m, l, acc, **kwargs):
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "bits", "block_n", "sm_scale", "k_gran", "shared_kv", "d_v", "interpret",
+        "bits", "block_n", "sm_scale", "k_gran", "shared_kv", "d_v",
+        "num_splits", "interpret",
     ),
 )
 def bitdecode_attention_pallas(
@@ -202,39 +248,45 @@ def bitdecode_attention_pallas(
     k_gran: str,
     shared_kv: bool,
     d_v: int,
+    num_splits: int = 1,
     interpret: bool,
 ):
     """Inputs must be pre-padded: g % 8 == 0, d_k % 128 == 0, d_v % 128 == 0.
 
-    Returns (out [B,H,g,d_v] f32, lse [B,H,g] f32).
+    Returns per-split partials (o [S,B,H,g,d_v] f32, lse [S,B,H,g] f32) with
+    S = num_splits; combine with :func:`merge_partials` (exact for S = 1).
     """
     b, h, g, d_k = q.shape
     nb, npr = kw.shape[2], kw.shape[3]
     res_n = k_res.shape[2]
-    n_steps = nb + 1
+    num_splits = max(1, min(num_splits, nb))
+    bps = -(-nb // num_splits)  # packed blocks per split
+    n_steps = bps + 1
 
-    def last_blk(j):
-        return jnp.minimum(j, nb - 1)
+    def blk(s, j):
+        # block fetched at step (s, j); clamped so the residual/tail steps
+        # DMA an in-range (ignored) block
+        return jnp.minimum(s * bps + j, nb - 1)
 
-    q_spec = pl.BlockSpec((1, 1, g, d_k), lambda i, hh, j, *_: (i, hh, 0, 0))
+    q_spec = pl.BlockSpec((1, 1, g, d_k), lambda i, hh, s, j, *_: (i, hh, 0, 0))
     kw_spec = pl.BlockSpec(
-        (1, 1, 1, npr, d_k), lambda i, hh, j, *_: (i, hh, last_blk(j), 0, 0)
+        (1, 1, 1, npr, d_k), lambda i, hh, s, j, *_: (i, hh, blk(s, j), 0, 0)
     )
     kp_shape = (1, 1, 1, d_k) if k_gran == "channel" else (1, 1, 1, block_n)
-    kp_spec = pl.BlockSpec(kp_shape, lambda i, hh, j, *_: (i, hh, last_blk(j), 0))
-    kres_spec = pl.BlockSpec((1, 1, res_n, d_k), lambda i, hh, j, *_: (i, hh, 0, 0))
+    kp_spec = pl.BlockSpec(kp_shape, lambda i, hh, s, j, *_: (i, hh, blk(s, j), 0))
+    kres_spec = pl.BlockSpec((1, 1, res_n, d_k), lambda i, hh, s, j, *_: (i, hh, 0, 0))
 
     in_specs = [q_spec, kw_spec, kp_spec, kp_spec]
     operands = [q, kw, k_scale, k_zero]
     if not shared_kv:
         vw_spec = pl.BlockSpec(
-            (1, 1, 1, npr, d_v), lambda i, hh, j, *_: (i, hh, last_blk(j), 0, 0)
+            (1, 1, 1, npr, d_v), lambda i, hh, s, j, *_: (i, hh, blk(s, j), 0, 0)
         )
         vp_spec = pl.BlockSpec(
-            (1, 1, 1, block_n), lambda i, hh, j, *_: (i, hh, last_blk(j), 0)
+            (1, 1, 1, block_n), lambda i, hh, s, j, *_: (i, hh, blk(s, j), 0)
         )
         vres_spec = pl.BlockSpec(
-            (1, 1, res_n, d_v), lambda i, hh, j, *_: (i, hh, 0, 0)
+            (1, 1, res_n, d_v), lambda i, hh, s, j, *_: (i, hh, 0, 0)
         )
         in_specs += [vw_spec, vp_spec, vp_spec, kres_spec, vres_spec]
         operands += [vw, v_scale, v_zero, k_res, v_res]
@@ -245,12 +297,12 @@ def bitdecode_attention_pallas(
         kernel = _kernel_shared
 
     out_specs = [
-        pl.BlockSpec((1, 1, g, d_v), lambda i, hh, j, *_: (i, hh, 0, 0)),
-        pl.BlockSpec((1, 1, g), lambda i, hh, j, *_: (i, hh, 0)),
+        pl.BlockSpec((1, 1, 1, g, d_v), lambda i, hh, s, j, *_: (s, i, hh, 0, 0)),
+        pl.BlockSpec((1, 1, 1, g), lambda i, hh, s, j, *_: (s, i, hh, 0)),
     ]
     out_shape = [
-        jax.ShapeDtypeStruct((b, h, g, d_v), jnp.float32),
-        jax.ShapeDtypeStruct((b, h, g), jnp.float32),
+        jax.ShapeDtypeStruct((num_splits, b, h, g, d_v), jnp.float32),
+        jax.ShapeDtypeStruct((num_splits, b, h, g), jnp.float32),
     ]
     scratch = [
         pltpu.VMEM((g, 128), jnp.float32),
@@ -259,7 +311,7 @@ def bitdecode_attention_pallas(
     ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(b, h, n_steps),
+        grid=(b, h, num_splits, n_steps),
         in_specs=in_specs,
         out_specs=out_specs,
         scratch_shapes=scratch,
@@ -268,7 +320,8 @@ def bitdecode_attention_pallas(
         kernel,
         bits=bits,
         block_n=block_n,
-        nb=nb,
+        bps=bps,
+        num_splits=num_splits,
         res_n=res_n,
         sm_scale=sm_scale,
         k_gran=k_gran,
@@ -281,7 +334,7 @@ def bitdecode_attention_pallas(
         out_shape=out_shape,
         interpret=interpret,
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
         ),
     )(pack_blocks.astype(jnp.int32), res_len.astype(jnp.int32), *operands)
     return out, lse

@@ -4,6 +4,11 @@ Also serves as the XLA fallback path on CPU and the dry-run lowering target:
 it performs the *same* work (unpack, dequant, QK^T, online-softmax-equivalent
 masked softmax, PV) as the Pallas kernel, so ``cost_analysis()`` of a program
 built on this path reflects the mixed-precision pipeline honestly.
+
+``num_splits > 1`` runs the split-KV (FlashDecoding) semantics: per-split
+masked-softmax partials over contiguous packed-block ranges (residual tail
+owned by the last split), combined with the logsumexp merge — the oracle for
+both the in-kernel split grid and the cross-chip repro.dist.splitkv layer.
 """
 from __future__ import annotations
 
@@ -20,6 +25,25 @@ def _dequant_blocks(words, scale, zero, bits, granularity, dtype=jnp.bfloat16):
     x = quantizer.unpack_and_dequantize(words, scale, zero, bits, granularity, dtype=dtype)
     b, h, nb, n, d = x.shape
     return x.reshape(b, h, nb * n, d)
+
+
+def _softmax_partial(scores, v_all):
+    """Masked-softmax partial over the last (token) axis: (o, lse).
+
+    Fully-masked rows (empty split) produce o = 0 and lse ~ -inf — the same
+    l=0 guard the Pallas ``finalize`` applies, so the merge drops them."""
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = lax.dot_general(
+        p.astype(jnp.bfloat16),
+        v_all,
+        (((3,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32,
+    )
+    out = out / l.astype(jnp.float32)
+    lse = (m + jnp.log(l))[..., 0]
+    return out, lse
 
 
 def bitdecode_attention_ref(
@@ -41,6 +65,7 @@ def bitdecode_attention_ref(
     k_gran: str = "channel",
     shared_kv: bool = False,
     d_v: int | None = None,
+    num_splits: int = 1,
 ):
     """Low-bit flash-decode attention, reference semantics.
 
@@ -50,6 +75,7 @@ def bitdecode_attention_ref(
         (ignored when shared_kv: V is the first d_v channels of dequant K —
         the MLA latent-cache mode).
     k_res/v_res: bf16 [B, H_kv, N_r, d_k/d_v]; pack_blocks/res_len: int32 [B].
+    num_splits: split-KV partition count (1 = classic single-pass softmax).
 
     Returns (out [B,H,g,d_v] f32, lse [B,H,g] f32).
     """
@@ -87,17 +113,28 @@ def bitdecode_attention_ref(
         (((3,), (3,)), ((0, 1), (0, 1))),
         preferred_element_type=jnp.float32,
     ) * sm_scale  # [B,H,g,S_tot]
-    scores = jnp.where(valid[:, None, None, :], scores, MASK_VALUE)
 
-    m = jnp.max(scores, axis=-1, keepdims=True)
-    p = jnp.exp(scores - m)
-    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
-    out = lax.dot_general(
-        p.astype(jnp.bfloat16),
-        v_all,
-        (((3,), (2,)), ((0, 1), (0, 1))),
-        preferred_element_type=jnp.float32,
-    )
-    out = out / l.astype(jnp.float32)
-    lse = (m + jnp.log(l))[..., 0]
-    return out, lse
+    num_splits = max(1, min(num_splits, nb))
+    if num_splits == 1:
+        scores = jnp.where(valid[:, None, None, :], scores, MASK_VALUE)
+        return _softmax_partial(scores, v_all)
+
+    # split-KV oracle: split i owns packed blocks [i*bps, (i+1)*bps); the
+    # residual tail rides with the last split.  Partials per split, then the
+    # logsumexp merge (identical math to kernel.merge_partials).
+    bps = -(-nb // num_splits)
+    parts_o, parts_lse = [], []
+    for i in range(num_splits):
+        lo, hi = i * bps * block_n, min((i + 1) * bps, nb) * block_n
+        own = (t[None, :] >= lo) & (t[None, :] < hi)
+        if i == num_splits - 1:
+            own = own | in_res
+        mask = valid & own
+        s_i = jnp.where(mask[:, None, None, :], scores, MASK_VALUE)
+        o_i, lse_i = _softmax_partial(s_i, v_all)
+        parts_o.append(o_i)
+        parts_lse.append(lse_i)
+
+    from repro.kernels.bitdecode.kernel import merge_partials
+
+    return merge_partials(jnp.stack(parts_o), jnp.stack(parts_lse))

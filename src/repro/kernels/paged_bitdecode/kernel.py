@@ -1,11 +1,17 @@
 """Pallas TPU kernel: paged low-bit flash-decode attention (paper's Page
-setting, §VI-A).
+setting, §VI-A), with the same split-KV grid as kernels/bitdecode.
 
 TPU-idiomatic paging: instead of a scalar-core page-table walk (vLLM/GPU),
 the page table is a *scalar-prefetch* operand — BlockSpec index_maps read
-``page_table[b, j]`` to pick which page of the global pool the next grid
+``page_table[b, jj]`` to pick which page of the global pool the next grid
 step's DMA fetches, so page indirection rides the same double-buffered
 HBM→VMEM pipeline as the dense kernel (zero extra kernels, zero gathers).
+
+Split-KV: grid = (B, H, num_splits, bps + 1); split ``s`` walks page-table
+entries [s*bps, (s+1)*bps), writes its own slot of the per-split partials
+(o [S,B,H,g,d_v], lse [S,B,H,g]); the residual tail rides with the last
+split and the partials are combined by the shared logsumexp merge epilogue
+(bitdecode.kernel.merge_partials).
 
 Pools are [n_pages, H, ...]; everything else matches kernels/bitdecode.
 """
@@ -19,7 +25,6 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from jax import lax
-from jax.experimental import pallas as pl
 
 from repro.kernels.bitdecode.kernel import (_CompilerParams, _unpack,
                                             dequant_tile, finalize,
@@ -29,10 +34,11 @@ from repro.kernels.bitdecode.kernel import (_CompilerParams, _unpack,
 def _kernel(pt_ref, pb_ref, rl_ref, q_ref, kw_ref, ks_ref, kz_ref,
             vw_ref, vs_ref, vz_ref, kres_ref, vres_ref,
             o_ref, lse_ref, m_scr, l_scr, acc_scr,
-            *, bits, block_n, nb, res_n, sm_scale, k_gran):
+            *, bits, block_n, bps, num_splits, res_n, sm_scale, k_gran):
     b = pl.program_id(0)
-    j = pl.program_id(2)
-    n_steps = nb + 1
+    s = pl.program_id(2)
+    j = pl.program_id(3)
+    jj = s * bps + j  # global page-table slot owned by this grid step
 
     @pl.when(j == 0)
     def _init():
@@ -41,7 +47,7 @@ def _kernel(pt_ref, pb_ref, rl_ref, q_ref, kw_ref, ks_ref, kz_ref,
     q = q_ref[0, 0].astype(jnp.bfloat16)
     update = make_flash_update(q, m_scr, l_scr, acc_scr, sm_scale)
 
-    @pl.when(jnp.logical_and(j < n_steps - 1, j < pb_ref[b]))
+    @pl.when(jnp.logical_and(j < bps, jj < pb_ref[b]))
     def _packed_page():
         kq = _unpack(kw_ref[0, 0], bits)  # pool block (1,1,npr,dk) -> [0,0]
         k_hat = dequant_tile(kq, ks_ref[0, 0], kz_ref[0, 0], k_gran)
@@ -49,18 +55,22 @@ def _kernel(pt_ref, pb_ref, rl_ref, q_ref, kw_ref, ks_ref, kz_ref,
         v_hat = dequant_tile(vq, vs_ref[0, 0], vz_ref[0, 0], "tensor")
         update(k_hat, v_hat)
 
-    @pl.when(j == n_steps - 1)
-    def _residual_and_finalize():
+    @pl.when(jnp.logical_and(j == bps, s == num_splits - 1))
+    def _residual():
         kr = kres_ref[0, 0].astype(jnp.bfloat16)
         vr = vres_ref[0, 0].astype(jnp.bfloat16)
         mask = lax.broadcasted_iota(jnp.int32, (1, res_n), 1) < rl_ref[b]
         update(kr, vr, row_mask=mask)
+
+    @pl.when(j == bps)
+    def _finalize():
         finalize(o_ref, lse_ref, m_scr, l_scr, acc_scr)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bits", "block_n", "sm_scale", "k_gran", "interpret"),
+    static_argnames=("bits", "block_n", "sm_scale", "k_gran", "num_splits",
+                     "interpret"),
 )
 def paged_bitdecode_attention_pallas(
     q,             # [B, H, g, d_k]  (pre-padded)
@@ -74,45 +84,50 @@ def paged_bitdecode_attention_pallas(
     page_table,    # int32 [B, nb_max]
     pack_blocks, res_len,
     *,
-    bits: int, block_n: int, sm_scale: float, k_gran: str, interpret: bool,
+    bits: int, block_n: int, sm_scale: float, k_gran: str,
+    num_splits: int = 1, interpret: bool,
 ):
+    """Returns per-split partials (o [S,B,H,g,d_v], lse [S,B,H,g])."""
     b, h, g, d_k = q.shape
     _, _, npr, _ = kw_pool.shape
     d_v = vw_pool.shape[-1]
     nb = page_table.shape[1]
     res_n = k_res.shape[2]
-    n_steps = nb + 1
+    num_splits = max(1, min(num_splits, nb))
+    bps = -(-nb // num_splits)
+    n_steps = bps + 1
 
-    def page(j, pt_ref, b_):
-        # page id for grid step j of sequence b (clamped for residual step)
-        return pt_ref[b_, jnp.minimum(j, nb - 1)]
+    def page(s, j, pt_ref, b_):
+        # page id for grid step (s, j) of sequence b (clamped for the
+        # residual/tail steps so the prefetch DMA stays in range)
+        return pt_ref[b_, jnp.minimum(s * bps + j, nb - 1)]
 
-    q_spec = pl.BlockSpec((1, 1, g, d_k), lambda i, hh, j, pt, pb, rl: (i, hh, 0, 0))
+    q_spec = pl.BlockSpec((1, 1, g, d_k), lambda i, hh, s, j, *_: (i, hh, 0, 0))
     kw_spec = pl.BlockSpec(
-        (1, 1, npr, d_k), lambda i, hh, j, pt, pb, rl: (page(j, pt, i), hh, 0, 0)
+        (1, 1, npr, d_k), lambda i, hh, s, j, pt, pb, rl: (page(s, j, pt, i), hh, 0, 0)
     )
     kp_last = d_k if k_gran == "channel" else block_n
     kp_spec = pl.BlockSpec(
-        (1, 1, kp_last), lambda i, hh, j, pt, pb, rl: (page(j, pt, i), hh, 0)
+        (1, 1, kp_last), lambda i, hh, s, j, pt, pb, rl: (page(s, j, pt, i), hh, 0)
     )
     vw_spec = pl.BlockSpec(
-        (1, 1, npr, d_v), lambda i, hh, j, pt, pb, rl: (page(j, pt, i), hh, 0, 0)
+        (1, 1, npr, d_v), lambda i, hh, s, j, pt, pb, rl: (page(s, j, pt, i), hh, 0, 0)
     )
     vp_spec = pl.BlockSpec(
-        (1, 1, block_n), lambda i, hh, j, pt, pb, rl: (page(j, pt, i), hh, 0)
+        (1, 1, block_n), lambda i, hh, s, j, pt, pb, rl: (page(s, j, pt, i), hh, 0)
     )
     res_spec_k = pl.BlockSpec(
-        (1, 1, res_n, d_k), lambda i, hh, j, pt, pb, rl: (i, hh, 0, 0))
+        (1, 1, res_n, d_k), lambda i, hh, s, j, *_: (i, hh, 0, 0))
     res_spec_v = pl.BlockSpec(
-        (1, 1, res_n, d_v), lambda i, hh, j, pt, pb, rl: (i, hh, 0, 0))
+        (1, 1, res_n, d_v), lambda i, hh, s, j, *_: (i, hh, 0, 0))
 
     out_specs = [
-        pl.BlockSpec((1, 1, g, d_v), lambda i, hh, j, pt, pb, rl: (i, hh, 0, 0)),
-        pl.BlockSpec((1, 1, g), lambda i, hh, j, pt, pb, rl: (i, hh, 0)),
+        pl.BlockSpec((1, 1, 1, g, d_v), lambda i, hh, s, j, *_: (s, i, hh, 0, 0)),
+        pl.BlockSpec((1, 1, 1, g), lambda i, hh, s, j, *_: (s, i, hh, 0)),
     ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(b, h, n_steps),
+        grid=(b, h, num_splits, n_steps),
         in_specs=[q_spec, kw_spec, kp_spec, kp_spec, vw_spec, vp_spec, vp_spec,
                   res_spec_k, res_spec_v],
         out_specs=out_specs,
@@ -123,19 +138,19 @@ def paged_bitdecode_attention_pallas(
         ],
     )
     body = functools.partial(
-        _kernel, bits=bits, block_n=block_n, nb=nb, res_n=res_n,
-        sm_scale=sm_scale, k_gran=k_gran,
+        _kernel, bits=bits, block_n=block_n, bps=bps,
+        num_splits=num_splits, res_n=res_n, sm_scale=sm_scale, k_gran=k_gran,
     )
     out, lse = pl.pallas_call(
         body,
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((b, h, g, d_v), jnp.float32),
-            jax.ShapeDtypeStruct((b, h, g), jnp.float32),
+            jax.ShapeDtypeStruct((num_splits, b, h, g, d_v), jnp.float32),
+            jax.ShapeDtypeStruct((num_splits, b, h, g), jnp.float32),
         ],
         interpret=interpret,
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
         ),
     )(page_table.astype(jnp.int32), pack_blocks.astype(jnp.int32),
       res_len.astype(jnp.int32), q,

@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.bitdecode import kernel as bd_kernel
+from repro.kernels.bitdecode import ops as bd_ops
 from repro.kernels.paged_bitdecode import kernel as _kernel
 from repro.kernels.paged_bitdecode import ref as _ref
 
@@ -20,7 +22,8 @@ def paged_bitdecode_attention(
     page_table, pack_blocks, res_len,
     *,
     bits: int, block_n: int = 128, sm_scale: float | None = None,
-    k_gran: str = "channel", impl: str = "auto", return_lse: bool = False,
+    k_gran: str = "channel", impl: str = "auto",
+    num_splits: int | str | None = "auto", return_lse: bool = False,
 ):
     b, h, g, d_k = q.shape
     d_v = vw_pool.shape[-1]
@@ -28,11 +31,16 @@ def paged_bitdecode_attention(
         sm_scale = 1.0 / (d_k**0.5)
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if num_splits in (None, "auto") and impl == "xla":
+        num_splits = 1  # splitting only pays on the Pallas grid (see bd_ops)
+    else:
+        num_splits = bd_ops.resolve_num_splits(num_splits, b, h, page_table.shape[1])
     if impl == "xla":
         out, lse = _ref.paged_bitdecode_attention_ref(
             q, kw_pool, k_scale_pool, k_zero_pool, vw_pool, v_scale_pool,
             v_zero_pool, k_res, v_res, page_table, pack_blocks, res_len,
             bits=bits, block_n=block_n, sm_scale=sm_scale, k_gran=k_gran,
+            num_splits=num_splits,
         )
         return (out, lse) if return_lse else out
     if impl != "pallas":
@@ -58,12 +66,16 @@ def paged_bitdecode_attention(
     kres_p = pad(k_res, [(3, dk_p - d_k)])
     vres_p = pad(v_res, [(3, dv_p - d_v)])
 
-    out, lse = _kernel.paged_bitdecode_attention_pallas(
+    o_parts, lse_parts = _kernel.paged_bitdecode_attention_pallas(
         q_p, kw_p, ks_p, kz_p, vw_p, v_scale_pool, v_zero_pool,
         kres_p, vres_p, page_table, pack_blocks, res_len,
         bits=bits, block_n=block_n, sm_scale=float(sm_scale), k_gran=k_gran,
-        interpret=jax.default_backend() != "tpu",
+        num_splits=num_splits, interpret=jax.default_backend() != "tpu",
     )
+    if o_parts.shape[0] == 1:  # unsplit: partials are already the answer
+        out, lse = o_parts[0], lse_parts[0]
+    else:
+        out, lse = bd_kernel.merge_partials(o_parts, lse_parts)
     out = out[:, :, :g, :d_v]
     lse = lse[:, :, :g]
     return (out, lse) if return_lse else out

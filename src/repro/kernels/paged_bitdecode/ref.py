@@ -21,7 +21,7 @@ def paged_bitdecode_attention_ref(
     page_table,                            # int32 [B, nb_max]
     pack_blocks, res_len,
     *,
-    bits, block_n=128, sm_scale=None, k_gran="channel",
+    bits, block_n=128, sm_scale=None, k_gran="channel", num_splits=1,
 ):
     kw = _gather(kw_pool, page_table)
     ks = _gather(k_scale_pool, page_table)
@@ -32,4 +32,5 @@ def paged_bitdecode_attention_ref(
     return bd_ref.bitdecode_attention_ref(
         q, kw, ks, kz, vw, vs, vz, k_res, v_res, pack_blocks, res_len,
         bits=bits, block_n=block_n, sm_scale=sm_scale, k_gran=k_gran,
+        num_splits=num_splits,
     )

@@ -38,12 +38,20 @@ class ServeEngine:
         self.queue: deque[Request] = deque()
         self.active: list[Request | None] = [None] * slots
         self.state = model.init_decode_state(slots, max_seq)
-        self.tokens = jnp.zeros((slots, 1), jnp.int32)
+        # host-side next-token buffer: the decode loop reads/writes it with
+        # plain numpy (one device->host pull per cycle, one upload per step)
+        # instead of per-slot int()/.at[].set() round-trips
+        self.tokens = np.zeros((slots, 1), np.int32)
         self._step = jax.jit(
             lambda p, s, t: model.decode_step(p, s, t, impl=impl),
             static_argnames=(),
         )
-        self._prefill_cache: dict[int, object] = {}
+        # one jitted prefill for the engine lifetime (max_seq is baked in):
+        # XLA's jit cache then keys on prompt length only, instead of the
+        # fresh-jit-per-request retrace the old _fill_slot paid
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, self.max_seq)
+        )
         self.stats = {"decoded_tokens": 0, "steps": 0, "evicted": 0}
 
     def submit(self, req: Request):
@@ -53,9 +61,7 @@ class ServeEngine:
         """Prefill one request into slot i (single-sequence prefill, then the
         per-slot cache rows are spliced into the batched state)."""
         batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
-        logits, st = jax.jit(lambda p, b: self.model.prefill(p, b, self.max_seq))(
-            self.params, batch
-        )
+        logits, st = self._prefill(self.params, batch)
         # splice slot-0 rows of st into row i of the batched state
         def splice(dst, src):
             if dst is None:
@@ -71,7 +77,7 @@ class ServeEngine:
             return dst.at[tuple(idx)].set(src[tuple(src_idx)].astype(dst.dtype))
 
         self.state = jax.tree.map(splice, self.state, st)
-        self.tokens = self.tokens.at[i, 0].set(int(np.argmax(np.asarray(logits)[0, -1])))
+        self.tokens[i, 0] = int(np.argmax(np.asarray(logits)[0, -1]))
         self.active[i] = req
 
     def step(self):
@@ -84,7 +90,11 @@ class ServeEngine:
         if all(r is None for r in self.active):
             return False
 
-        logits, self.state = self._step(self.params, self.state, self.tokens)
+        logits, self.state = self._step(
+            self.params, self.state, jnp.asarray(self.tokens)
+        )
+        # one host sync per cycle: the logits pull; current tokens already
+        # live host-side, and the write-back below is plain numpy
         nxt = np.argmax(np.asarray(logits)[:, 0], axis=-1)
         self.stats["steps"] += 1
         for i, req in enumerate(self.active):
@@ -100,7 +110,7 @@ class ServeEngine:
                 req.done = True
                 self.active[i] = None
             else:
-                self.tokens = self.tokens.at[i, 0].set(int(nxt[i]))
+                self.tokens[i, 0] = int(nxt[i])
         return True
 
     def run(self, max_cycles: int = 10_000):

@@ -7,8 +7,10 @@ invariants (res_len < N_r, length = pack_blocks * N_r + res_len).
 """
 import functools
 
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np

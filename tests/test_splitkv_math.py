@@ -1,8 +1,10 @@
 """Property test: the split-KV logsumexp merge is exactly equivalent to
 unsplit softmax attention, for any partition of the sequence (pure math, no
 mesh)."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np

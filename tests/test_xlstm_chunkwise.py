@@ -3,8 +3,10 @@
 Property (hypothesis): equality holds for any sequence length / chunk split
 and any gate statistics (including large input gates that would overflow an
 unstabilized formulation)."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np
