@@ -3,11 +3,18 @@
 Marlin/Ladder-style pre-transform is impossible for a dynamic KV cache; the
 paper's point is that the fused Residual-Kernel path makes online
 quantization negligible.  We measure (a) prefill-time fused quantize+pack of
-a long context, (b) per-decode-step residual append (amortized flush), and
-(c) the residual fraction of total cache bytes vs sequence length (Fig. 13)."""
+a long context, (b) per-decode-step residual append (amortized flush), (c)
+the residual fraction of total cache bytes vs sequence length (Fig. 13), and
+(d) the flush-vs-speculative sweep: the gated residual-flush append
+(kernels/residual_flush — quantize only when the residual fills) against the
+pre-fusion speculative path (re-quantize the whole block every token),
+appended to BENCH_residual_flush.json so the trajectory is tracked across
+PRs."""
 from __future__ import annotations
 
 import functools
+import json
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +22,84 @@ import jax.numpy as jnp
 from benchmarks.common import emit, timeit
 from repro.core import qcache
 from repro.kernels.kv_quant import ops as kvq_ops
+
+_BENCH_RESIDUAL = Path(__file__).resolve().parent.parent / "BENCH_residual_flush.json"
+
+
+def _cache_at_fill(b, h, d, *, bits, block_n, k_gran, res_len):
+    """A cache whose residual holds ``res_len`` tokens (one packed block so
+    the commit path has a real destination)."""
+    s = block_n + res_len
+    k = jax.random.normal(jax.random.PRNGKey(2), (b, h, s, d), jnp.bfloat16)
+    cache = qcache.init_cache(
+        b, h, d, 32 * block_n, bits=bits, block_n=block_n, k_gran=k_gran
+    )
+    return qcache.prefill(cache, k, k, quant_impl="xla")
+
+
+def run_flush_sweep(*, out_path: Path | None = None):
+    """Per-token append cost, gated flush vs speculative re-quantization.
+
+    Two fill levels per case: *hot* (res_len = 1 after the append — the
+    ``block_n - 1`` out of ``block_n`` steps where the gated path does no
+    quantization work) and *flush* (res_len hits ``block_n`` and the
+    residual-flush kernel commits one packed block).  The amortized
+    per-token cost weights them (block_n-1):1; the speculative baseline pays
+    its full quantize+pack+select on every step by construction.
+    """
+    b, h, d, block_n = 1, 8, 128, 128
+    kn = jax.random.normal(jax.random.PRNGKey(1), (b, h, 1, d), jnp.bfloat16)
+    records = []
+    for bits, k_gran in ((4, "channel"), (2, "channel"), (4, "tensor")):
+        # quant_impl="auto" so a TPU run times the fused Pallas flush (the
+        # kernel this trajectory exists to track); on CPU auto resolves to
+        # the XLA paths for both sides
+        gated = jax.jit(functools.partial(qcache.append_decode, quant_impl="auto"))
+        spec = jax.jit(
+            functools.partial(qcache.append_decode_speculative, quant_impl="auto")
+        )
+        c_hot = _cache_at_fill(b, h, d, bits=bits, block_n=block_n,
+                               k_gran=k_gran, res_len=0)
+        c_edge = _cache_at_fill(b, h, d, bits=bits, block_n=block_n,
+                                k_gran=k_gran, res_len=block_n - 1)
+        us = {
+            "gated_hot_us": timeit(gated, c_hot, kn, kn),
+            "gated_flush_us": timeit(gated, c_edge, kn, kn),
+            "speculative_hot_us": timeit(spec, c_hot, kn, kn),
+            "speculative_flush_us": timeit(spec, c_edge, kn, kn),
+        }
+        amort_gated = (
+            us["gated_hot_us"] * (block_n - 1) + us["gated_flush_us"]
+        ) / block_n
+        amort_spec = (
+            us["speculative_hot_us"] * (block_n - 1) + us["speculative_flush_us"]
+        ) / block_n
+        rec = {
+            "setting": f"b{b}.h{h}.d{d}.block{block_n}",
+            "bits": bits,
+            "k_gran": k_gran,
+            "quant_impl": "auto",
+            **{k: round(v, 1) for k, v in us.items()},
+            "amortized_gated_us": round(amort_gated, 1),
+            "amortized_speculative_us": round(amort_spec, 1),
+            "amortized_speedup": round(amort_spec / amort_gated, 3),
+        }
+        records.append(rec)
+        emit(
+            f"quant_overhead.flush_sweep.int{bits}.{k_gran}",
+            amort_gated,
+            f"speculative_us={amort_spec:.1f};speedup={rec['amortized_speedup']}x",
+        )
+    out_path = _BENCH_RESIDUAL if out_path is None else out_path
+    history = []
+    if out_path.exists():
+        try:
+            history = json.loads(out_path.read_text())
+        except json.JSONDecodeError:
+            history = []
+    history.append({"backend": jax.default_backend(), "records": records})
+    out_path.write_text(json.dumps(history, indent=2) + "\n")
+    return records
 
 
 def run():
@@ -37,13 +122,16 @@ def run():
         return qcache.append_decode(c, kn, kn)
 
     us = timeit(append, cache, kn)
-    emit("quant_overhead.decode_append", us, "fused_residual_append")
+    emit("quant_overhead.decode_append", us, "gated_residual_append")
 
     # (c) residual memory fraction vs seq len (Fig. 13): bf16 residual
     # (N_r tokens x 2B/elem) over the int4 packed cache (bits/8 B/elem)
     for s in (4096, 32768, 131072):
         res_frac = block_n * 2 / (s * 4 / 8 + block_n * 2)
         emit(f"quant_overhead.residual_frac_s{s}", 0.0, f"frac={res_frac:.4f}")
+
+    # (d) flush-vs-speculative sweep -> BENCH_residual_flush.json
+    run_flush_sweep()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Docs-drift check: README's kernel-family inventory must match the actual
+kernel directories under src/repro/kernels/.
+
+A kernel family counts as documented when README.md's "Kernel families"
+table has a row whose first cell is the backtick-quoted directory name.
+Run directly (exit 1 on drift) or via tests/test_docs.py in the tier-1
+suite.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+README = REPO / "README.md"
+KERNELS = REPO / "src" / "repro" / "kernels"
+
+_ROW = re.compile(r"^\|\s*`([A-Za-z0-9_]+)`\s*\|")
+
+
+def kernel_dirs() -> set[str]:
+    return {
+        p.name
+        for p in KERNELS.iterdir()
+        if p.is_dir() and (p / "__init__.py").exists()
+    }
+
+
+def documented_families(readme_text: str) -> set[str]:
+    """Backtick-named first cells of table rows in the 'Kernel families'
+    section (up to the next '## ' heading)."""
+    lines = readme_text.splitlines()
+    fams: set[str] = set()
+    in_section = False
+    for line in lines:
+        if line.startswith("## "):
+            in_section = line.lower().startswith("## kernel families")
+            continue
+        if not in_section:
+            continue
+        m = _ROW.match(line)
+        if m and m.group(1) != "family":  # skip the header row
+            fams.add(m.group(1))
+    return fams
+
+
+def check() -> list[str]:
+    """Returns a list of human-readable drift errors (empty == in sync)."""
+    errors = []
+    if not README.exists():
+        return [f"missing {README}"]
+    actual = kernel_dirs()
+    documented = documented_families(README.read_text())
+    if not documented:
+        errors.append("README.md has no 'Kernel families' table rows")
+    for name in sorted(actual - documented):
+        errors.append(
+            f"kernel family src/repro/kernels/{name}/ is missing from "
+            "README.md's 'Kernel families' table"
+        )
+    for name in sorted(documented - actual):
+        errors.append(
+            f"README.md documents kernel family `{name}` but "
+            f"src/repro/kernels/{name}/ does not exist"
+        )
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_docs: OK ({len(kernel_dirs())} kernel families in sync)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

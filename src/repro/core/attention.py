@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import qcache
 from repro.core.qcache import QuantKVCache
 from repro.kernels.bitdecode import ops as bd_ops
 
@@ -104,6 +105,30 @@ def decode_attention(
         o, lse = out
         return inverse_query_transform(o), lse
     return inverse_query_transform(out)
+
+
+def decode_append_attention(
+    q: jax.Array,  # [B, 1, h_q, d_k]
+    cache: QuantKVCache,
+    k_new: jax.Array,  # [B, H, 1, d_k]
+    v_new: jax.Array | None,  # None when shared_kv
+    *,
+    quant_impl: str = "auto",
+    **attn_kwargs,
+):
+    """The per-token serving hot path in one call: append the new KV token to
+    the cache (residual write + gated residual-flush kernel, see
+    ``qcache.append_decode``) and run fused low-bit decode attention over the
+    updated cache.  Returns ``(out, cache)``.
+
+    ``quant_impl`` selects the flush implementation
+    ('auto' | 'pallas' | 'xla'); ``attn_kwargs`` are forwarded to
+    :func:`decode_attention` (``impl``, ``num_splits``, ``sm_scale``,
+    ``d_v``, ...).  Model blocks (models/attention.py, models/mla.py) route
+    through here so the engine's impl switches reach both kernels.
+    """
+    cache = qcache.append_decode(cache, k_new, v_new, quant_impl=quant_impl)
+    return decode_attention(q, cache, **attn_kwargs), cache
 
 
 def blockwise_attention(

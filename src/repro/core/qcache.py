@@ -4,9 +4,13 @@ The cache partitions the sequence  X = X_pack ∪ X_res  (paper Eq. before (1)):
 packed low-bit blocks of ``block_n`` tokens plus a bf16 residual tail of
 capacity ``N_r = block_n`` — the TPU tile-aligned instantiation of the paper's
 ``N_r = P_n × W_n × R``.  Newly decoded tokens append to the residual; when it
-fills, the whole block is quantized+packed in one fused step (Residual
-Kernel) and the residual restarts.  ``shared_kv=True`` stores a single latent
-stream (MLA mode) — no V-side fields.
+fills, the whole block is quantized+packed+committed in one fused pass (the
+Residual Kernel, kernels/residual_flush) and the residual restarts.  The
+flush is gated behind ``lax.cond`` so the other ``block_n - 1`` decode steps
+do no quantization work.  ``shared_kv=True`` stores a single latent stream
+(MLA mode) — no V-side fields.
+
+See docs/ARCHITECTURE.md for the packed ``(words, scale, zero)`` layout spec.
 """
 from __future__ import annotations
 
@@ -17,8 +21,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import layout, quantizer
+from repro.core import layout
 from repro.kernels.kv_quant import ops as kvq_ops
+from repro.kernels.residual_flush import ops as rf_ops
 
 
 @dataclasses.dataclass
@@ -105,14 +110,33 @@ def init_cache(
     )
 
 
-def _quant_one_block(x, cache: QuantKVCache, gran: str, impl: str):
-    """x [H, block_n, d] -> (words [H,1,npr,d], scale, zero) via the ref path
-    (vmap-safe; used per-batch-element inside append)."""
-    w, s, z = kvq_ops.quantize_kv(
-        x[None], cache.bits, gran, block_n=cache.block_n,
-        param_dtype=cache.k_scale.dtype, impl=impl,
+def _append_residual(cache: QuantKVCache, k_new, v_new):
+    """Write one new token per sequence into the residual buffers.  Returns
+    (k_res, v_res, res_len_after, full) — the shared front half of both
+    append paths."""
+
+    def write(res, rl, new):
+        return lax.dynamic_update_slice(res, new.astype(res.dtype), (0, rl, 0))
+
+    k_res = jax.vmap(write)(cache.k_res, cache.res_len, k_new)
+    v_res = None if cache.shared_kv else jax.vmap(write)(
+        cache.v_res, cache.res_len, v_new
     )
-    return w[0], s[0], z[0]
+    rl = cache.res_len + 1
+    return k_res, v_res, rl, rl == cache.block_n
+
+
+def _commit_append(cache: QuantKVCache, packed, k_res, v_res, full, rl):
+    """Shared back half of both append paths: write the (possibly flushed)
+    packed arrays and update occupancy.  ``packed`` is the six packed fields
+    in dataclass order (V side None when shared_kv)."""
+    kw, ks, kz, vw, vs, vz = packed
+    return dataclasses.replace(
+        cache, kw=kw, k_scale=ks, k_zero=kz, vw=vw, v_scale=vs, v_zero=vz,
+        k_res=k_res, v_res=v_res,
+        pack_blocks=jnp.where(full, cache.pack_blocks + 1, cache.pack_blocks),
+        res_len=jnp.where(full, 0, rl),
+    )
 
 
 def append_decode(
@@ -120,65 +144,75 @@ def append_decode(
     k_new: jax.Array,  # [B, H, 1, d_k]
     v_new: jax.Array | None,  # [B, H, 1, d_v]; None when shared_kv
     *,
-    quant_impl: str = "xla",
+    quant_impl: str = "auto",
 ) -> QuantKVCache:
     """Append one decoded token per sequence; flush the residual block when
     full (paper: "Once per token generation, the Residual Kernel ... optionally
-    quantizes it (when res_len = N_r) into packed format")."""
-    block_n = cache.block_n
+    quantizes it (when res_len = N_r) into packed format").
 
-    def one(kw, ksc, kzp, vw, vsc, vzp, kres, vres, pb, rl, kn, vn):
-        # 1. write the new token into the residual buffer
-        kres = lax.dynamic_update_slice(kres, kn.astype(kres.dtype), (0, rl, 0))
-        if not cache.shared_kv:
-            vres = lax.dynamic_update_slice(vres, vn.astype(vres.dtype), (0, rl, 0))
-        rl = rl + 1
-        full = rl == block_n
+    The flush is *gated*: the fused residual-flush kernel
+    (kernels/residual_flush) runs under a ``lax.cond`` taken only when some
+    sequence's residual just filled — 1 step in ``block_n``.  On the other
+    ``block_n - 1`` steps the hot path is exactly one token-row write into
+    the bf16 residual plus the occupancy update; no quantization, packing,
+    or packed-cache traffic at all (previously the whole residual block was
+    re-quantized speculatively every token — kept as
+    :func:`append_decode_speculative` for benchmarking).
 
-        # 2. unconditionally quantize the residual block (cheap: one block),
-        #    commit only when full.  The select happens at BLOCK granularity
-        #    (read-modify-write one block), not on the whole cache array —
-        #    a whole-array jnp.where would copy the full per-layer cache
-        #    every decode step (§Perf iteration: ~50 GB/step saved at 32K).
-        def commit(dst, upd, idx):
-            cur = lax.dynamic_slice(dst, idx, upd.shape)
-            sel = jnp.where(full, upd, cur)
-            return lax.dynamic_update_slice(dst, sel, idx)
-
-        w, s, z = _quant_one_block(kres, cache, cache.k_gran, quant_impl)
-        kw = commit(kw, w, (0, pb, 0, 0))
-        ksc = commit(ksc, s, (0, pb, 0))
-        kzp = commit(kzp, z, (0, pb, 0))
-        if not cache.shared_kv:
-            wv, sv, zv = _quant_one_block(vres, cache, "tensor", quant_impl)
-            vw = commit(vw, wv, (0, pb, 0, 0))
-            vsc = commit(vsc, sv, (0, pb, 0))
-            vzp = commit(vzp, zv, (0, pb, 0))
-        pb = jnp.where(full, pb + 1, pb)
-        rl = jnp.where(full, 0, rl)
-        return kw, ksc, kzp, vw, vsc, vzp, kres, vres, pb, rl
+    quant_impl: 'auto' | 'pallas' | 'xla', forwarded to
+    ``residual_flush.ops.residual_flush``.
+    """
+    k_res, v_res, rl, full = _append_residual(cache, k_new, v_new)
 
     if cache.shared_kv:
-        dummy = jnp.zeros((cache.kw.shape[0],), jnp.int32)
-        out = jax.vmap(
-            lambda kw, ksc, kzp, kres, pb, rl, kn, _d: one(
-                kw, ksc, kzp, None, None, None, kres, None, pb, rl, kn, None
-            )
-        )(cache.kw, cache.k_scale, cache.k_zero, cache.k_res,
-          cache.pack_blocks, cache.res_len, k_new, dummy)
-        kw, ksc, kzp, vw, vsc, vzp, kres, vres, pb, rl = out
-        vw = vsc = vzp = vres = None
+        packed = (cache.kw, cache.k_scale, cache.k_zero)
     else:
-        kw, ksc, kzp, vw, vsc, vzp, kres, vres, pb, rl = jax.vmap(one)(
-            cache.kw, cache.k_scale, cache.k_zero,
-            cache.vw, cache.v_scale, cache.v_zero,
-            cache.k_res, cache.v_res, cache.pack_blocks, cache.res_len,
-            k_new, v_new,
+        packed = (cache.kw, cache.k_scale, cache.k_zero,
+                  cache.vw, cache.v_scale, cache.v_zero)
+
+    def flush(p):
+        if cache.shared_kv:
+            kw, ks, kz = p
+            vw = vs = vz = None
+        else:
+            kw, ks, kz, vw, vs, vz = p
+        out = rf_ops.residual_flush(
+            kw, ks, kz, vw, vs, vz, k_res, v_res,
+            full.astype(jnp.int32), cache.pack_blocks,
+            bits=cache.bits, block_n=cache.block_n, k_gran=cache.k_gran,
+            shared_kv=cache.shared_kv, impl=quant_impl,
         )
-    return dataclasses.replace(
-        cache, kw=kw, k_scale=ksc, k_zero=kzp, vw=vw, v_scale=vsc, v_zero=vzp,
-        k_res=kres, v_res=vres, pack_blocks=pb, res_len=rl,
+        return out[:3] if cache.shared_kv else out
+
+    packed = lax.cond(jnp.any(full), flush, lambda p: p, packed)
+    if cache.shared_kv:
+        packed = (*packed, None, None, None)
+    return _commit_append(cache, packed, k_res, v_res, full, rl)
+
+
+def append_decode_speculative(
+    cache: QuantKVCache,
+    k_new: jax.Array,  # [B, H, 1, d_k]
+    v_new: jax.Array | None,  # [B, H, 1, d_v]; None when shared_kv
+    *,
+    quant_impl: str = "xla",
+) -> QuantKVCache:
+    """Pre-fusion append path: the flush op runs *unconditionally* on every
+    decoded token (no ``lax.cond`` gate), re-quantizing the whole residual
+    block and select-committing at block granularity each step.  Kept as the
+    baseline for bench_quant_overhead's flush-vs-speculative sweep and as a
+    second oracle for the gated path — identical cache contents by
+    construction, since both call the same flush op and a non-full sequence
+    selects its old block back."""
+    k_res, v_res, rl, full = _append_residual(cache, k_new, v_new)
+    packed = rf_ops.residual_flush(
+        cache.kw, cache.k_scale, cache.k_zero,
+        cache.vw, cache.v_scale, cache.v_zero,
+        k_res, v_res, full.astype(jnp.int32), cache.pack_blocks,
+        bits=cache.bits, block_n=cache.block_n, k_gran=cache.k_gran,
+        shared_kv=cache.shared_kv, impl=quant_impl,
     )
+    return _commit_append(cache, packed, k_res, v_res, full, rl)
 
 
 def prefill(

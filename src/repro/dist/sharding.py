@@ -1,11 +1,43 @@
 """Logical-axis sharding rules (MaxText-style) and activation constraints.
 
 Parameters declare *logical* axes (models/params.py ``P.axes``); a rules dict
-maps logical axis -> mesh axis (or tuple of mesh axes, or None).  Everything
-here degrades gracefully: axes absent from the mesh are dropped, dims that a
-mesh-axis group does not divide stay replicated, and with no active mesh
+maps logical axis -> mesh axis (or tuple of mesh axes, or None).
+
+Logical axis vocabulary (see :func:`base_rules` for the default mapping onto
+the ``("pod", "data", "model")`` mesh):
+
+  ==============  ===========================================  =============
+  logical axis    appears on                                   default mesh
+  ==============  ===========================================  =============
+  ``embed``       d_model dims of projections/embeddings        ``data`` (FSDP)
+  ``mlp``         FFN hidden dim                                ``model``
+  ``heads``       query-head dim                                ``model``
+  ``kv_heads``    KV-head dim (caches too: state_specs)         ``model``
+  ``head_dim``    per-head feature dim                          replicated
+  ``vocab``       (padded) vocabulary dim                       ``model``
+  ``experts``     MoE expert dim                                ``model``
+  ``expert_mlp``  per-expert FFN hidden                         replicated
+  ``layers``      stacked-layer leading dim (scan axis)         replicated
+  ``inner``       nested stack dim (hybrid super-blocks)        replicated
+  ==============  ===========================================  =============
+
+Everything here degrades gracefully: axes absent from the mesh are dropped,
+dims that a mesh-axis group does not **divide** stay replicated (sharding
+never pads — contrast dist.splitkv, which does zero-pad the cache block axis
+per call when it must split an indivisible dim), a mesh axis already used by
+an earlier dim of the same leaf is dropped, and with no active mesh
 :func:`constrain` is a no-op — so the same model code runs on a laptop CPU,
 an 8-device fake mesh, and a multi-pod slice unchanged.
+
+Mesh-context caveat: the active mesh may be installed either via native
+``jax.set_mesh`` (jax >= 0.6, published through ``get_abstract_mesh``) or
+via the legacy ``with mesh:`` context (``thread_resources``);
+:func:`_active_mesh` probes both, and ``repro.dist.__init__`` shims
+``jax.set_mesh`` onto legacy jax so callers can use the modern spelling
+everywhere.  Missing either probe would silently drop every sharding
+constraint.
+
+Layout/spec background: docs/ARCHITECTURE.md §6.
 """
 from __future__ import annotations
 

@@ -16,8 +16,24 @@ underflows to exactly 0 and the merge is unaffected.  The bf16 residual tail
 is replicated and processed by the *last* shard only (it usually owns the
 fewest valid blocks, so the extra block balances the walk).
 
-Wired in through :class:`repro.core.attention.use_splitkv`, which the
-launchers enter around lowering the long-context decode cells.
+Padding: this module shards dim 2 (the packed-block axis ``nb``) of every
+packed cache field — ``kw [B, H, nb, npr, d]`` and the ``[B, H, nb, …]``
+scale/zero arrays (layout spec: docs/ARCHITECTURE.md §2).  When
+``nb % axis_size != 0`` the axis is zero-padded *per call* before the
+shard_map; padded blocks sit beyond ``pack_blocks`` so they are never read
+as valid, but the pad is a full-cache copy every decode step at that shape —
+size caches so ``axis_size`` divides ``nb`` (ROADMAP: mesh-aligned cache
+allocation).  Queries, residuals, and occupancy counters are replicated.
+
+Mesh axes are *physical* names here (normally ``"data"``) — the logical-axis
+indirection of dist.sharding applies to parameters, not to this explicitly
+shard_mapped path.  The mesh is passed in explicitly; callers entering it as
+a context use ``jax.set_mesh``, which ``repro.dist.__init__`` shims onto
+legacy jax (< 0.6) where ``Mesh`` itself is the context manager.
+
+Merge math and diagrams: docs/ARCHITECTURE.md §5.  Wired in through
+:class:`repro.core.attention.use_splitkv`, which the launchers enter around
+lowering the long-context decode cells.
 """
 from __future__ import annotations
 

@@ -15,6 +15,19 @@ recurrent state (SSM/xLSTM) and a position vector.  Placement policy:
 Leaves that are not cache fields (pos, SSM states, ...) shard their batch
 dim, identified as the first dim equal to ``global_batch`` — a heuristic,
 but a safe one: specs only place data, they never change semantics.
+
+Cache-field roles map onto the QuantKVCache shapes of docs/ARCHITECTURE.md
+§2 (``kw [B, H, nb, npr, d]`` etc.), shifted right by the model's stacking
+dims (layers, super-blocks).  Axis names are physical mesh axes
+(``"pod"/"data"/"model"`` plus the caller's ``seq_ax``), matching
+dist.sharding's :func:`~repro.dist.sharding.base_rules` targets for the
+same tensors.  Like dist.sharding, placement never pads: an axis group that
+does not divide a dim is dropped (the leaf stays replicated on that dim) —
+any padding needed to honor a split (e.g. the block axis when
+``nb % axis_size != 0``) happens in dist.splitkv at call time instead.
+
+Specs are consumed via ``jax.device_put`` / shardings built under
+``jax.set_mesh`` — shimmed onto legacy jax by ``repro.dist.__init__``.
 """
 from __future__ import annotations
 

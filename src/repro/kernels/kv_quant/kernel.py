@@ -29,28 +29,31 @@ _F32_BIG = 3.0e38  # python float: jnp scalars would be captured consts in palla
 _EPS = 1e-6
 
 
-def _kvquant_kernel(
-    x_ref, w_ref, s_ref, z_ref, *, bits, block_n, d_orig, granularity, param_dtype
-):
-    x = x_ref[0, 0].astype(jnp.float32)  # (block_n, d_pad)
-    d_pad = x.shape[-1]
+def quant_block_tile(x, *, bits, granularity, param_dtype, d_orig=None):
+    """Quantize + strided-pack one f32 ``(block_n, d)`` tile, in registers.
+
+    Shared by the prefill-time kv_quant kernel and the decode-time
+    residual_flush kernel so both commit bitwise-identical packed blocks.
+    ``d_orig`` masks lane padding out of the tensor-granularity stats (pass
+    None / d when the tile is unpadded).  Returns
+    ``(words (npr, d) int32, scale, zero)`` with params cast to
+    ``param_dtype`` *before* quantizing, so codes are consistent with what
+    the decode kernel will dequantize with.
+    """
+    block_n, d_pad = x.shape
     qmax = layout.qmax(bits)
 
     if granularity == "channel":
         # stats along the token (sublane) axis, one pair per channel
         xmin = jnp.min(x, axis=0)
         xmax = jnp.max(x, axis=0)
-        # quantize with the *stored* (cast) params so codes are consistent
-        # with what the decode kernel will dequantize with
         scale = jnp.maximum((xmax - xmin) / qmax, _EPS).astype(param_dtype)
         zero = xmin.astype(param_dtype)
-        s_ref[0, 0, 0] = scale
-        z_ref[0, 0, 0] = zero
         sf, zf = scale.astype(jnp.float32), zero.astype(jnp.float32)
         q = jnp.round((x - zf[None, :]) / sf[None, :])
     elif granularity == "tensor":
         # stats along the channel (lane) axis, one pair per token
-        if d_pad != d_orig:
+        if d_orig is not None and d_pad != d_orig:
             lane = lax.broadcasted_iota(jnp.int32, x.shape, 1)
             valid = lane < d_orig
             xmin = jnp.min(jnp.where(valid, x, _F32_BIG), axis=1)
@@ -60,8 +63,6 @@ def _kvquant_kernel(
             xmax = jnp.max(x, axis=1)
         scale = jnp.maximum((xmax - xmin) / qmax, _EPS).astype(param_dtype)
         zero = xmin.astype(param_dtype)
-        s_ref[0, 0, 0] = scale
-        z_ref[0, 0, 0] = zero
         sf, zf = scale.astype(jnp.float32), zero.astype(jnp.float32)
         q = jnp.round((x - zf[:, None]) / sf[:, None])
     else:
@@ -75,6 +76,19 @@ def _kvquant_kernel(
     w = q[0:npr] << shifts[0]
     for k in range(1, len(shifts)):
         w = w | (q[k * npr : (k + 1) * npr] << shifts[k])
+    return w, scale, zero
+
+
+def _kvquant_kernel(
+    x_ref, w_ref, s_ref, z_ref, *, bits, block_n, d_orig, granularity, param_dtype
+):
+    x = x_ref[0, 0].astype(jnp.float32)  # (block_n, d_pad)
+    w, scale, zero = quant_block_tile(
+        x, bits=bits, granularity=granularity, param_dtype=param_dtype,
+        d_orig=d_orig,
+    )
+    s_ref[0, 0, 0] = scale
+    z_ref[0, 0, 0] = zero
     w_ref[0, 0] = w
 
 

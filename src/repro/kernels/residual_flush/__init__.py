@@ -1,0 +1,1 @@
+from repro.kernels.residual_flush.ops import residual_flush  # noqa: F401

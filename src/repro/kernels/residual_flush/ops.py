@@ -1,0 +1,63 @@
+"""Public entry point for the fused residual-flush (quantize+pack+commit)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.residual_flush import kernel as _kernel
+from repro.kernels.residual_flush import ref as _ref
+
+
+def residual_flush(
+    kw,
+    k_scale,
+    k_zero,
+    vw,
+    v_scale,
+    v_zero,
+    k_res,
+    v_res,
+    full,
+    dest_block,
+    *,
+    bits: int,
+    block_n: int,
+    k_gran: str,
+    shared_kv: bool,
+    impl: str = "auto",
+):
+    """Commit the bf16 residual of every sequence with ``full[b] != 0`` into
+    packed block ``dest_block[b]`` of the low-bit cache.
+
+    Arguments mirror the QuantKVCache packed/residual fields (V side None
+    when ``shared_kv``); returns the six updated packed arrays.  Callers gate
+    the invocation on ``jnp.any(full)`` (see ``qcache.append_decode``) so the
+    per-token hot path performs no quantization work at all.
+
+    impl: 'pallas' (single fused kernel, in-place via aliasing; interpret
+    mode off-TPU), 'xla' (the select-based reference oracle), or 'auto'
+    (pallas on TPU when the head dim is lane-aligned, xla otherwise — the
+    aliased cache cannot be lane-padded in place, unlike quantize_kv's
+    operand copy).
+    """
+    if impl == "auto":
+        minor = _kernel.aliased_minor_dims(
+            kw.shape[-1], None if shared_kv else vw.shape[-1],
+            block_n, k_gran, shared_kv,
+        )
+        lane_ok = not any(m % 128 for m in minor)
+        impl = "pallas" if jax.default_backend() == "tpu" and lane_ok else "xla"
+    if impl == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        return _kernel.residual_flush_pallas(
+            kw, k_scale, k_zero, vw, v_scale, v_zero, k_res, v_res,
+            full, dest_block,
+            bits=bits, block_n=block_n, k_gran=k_gran, shared_kv=shared_kv,
+            interpret=interpret,
+        )
+    if impl == "xla":
+        return _ref.residual_flush_ref(
+            kw, k_scale, k_zero, vw, v_scale, v_zero, k_res, v_res,
+            full, dest_block,
+            bits=bits, block_n=block_n, k_gran=k_gran, shared_kv=shared_kv,
+        )
+    raise ValueError(f"unknown impl {impl!r}")

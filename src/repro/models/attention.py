@@ -78,15 +78,19 @@ def attn_prefill_cache(p, cfg, x, positions, max_seq: int, *, quant_impl="auto")
     return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"]), cache
 
 
-def attn_decode(p, cfg, x, positions, cache, *, impl="auto", append=True):
+def attn_decode(p, cfg, x, positions, cache, *, impl="auto", quant_impl="auto",
+                append=True):
     """x: [B, 1, d]; appends to cache (unless attending a static cross cache)
-    then runs the fused low-bit decode kernel."""
+    then runs the fused low-bit decode kernel.  ``impl`` picks the attention
+    kernel, ``quant_impl`` the residual-flush kernel."""
     q, k, v = _qkv(p, cfg, x, positions)
     if append:
-        cache = qcache.append_decode(
-            cache, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+        out, cache = catt.decode_append_attention(
+            q, cache, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            quant_impl=quant_impl, impl=impl,
         )
-    out = catt.decode_attention(q, cache, impl=impl)  # [B,1,hq,hd]
+    else:
+        out = catt.decode_attention(q, cache, impl=impl)  # [B,1,hq,hd]
     return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"]), cache
 
 

@@ -147,7 +147,7 @@ class EncDecLM:
             "pos": jnp.full((b,), s, jnp.int32),
         }
 
-    def decode_step(self, params, state, tokens, *, impl="auto"):
+    def decode_step(self, params, state, tokens, *, impl="auto", quant_impl="auto"):
         cfg = self.cfg
         x = layers.embed(params["embed"], tokens)
         pos = state["pos"]
@@ -156,7 +156,10 @@ class EncDecLM:
         def body(x, xs):
             lp, self_c, cross_c = xs
             h = layers.apply_norm(cfg.norm, lp["ln1"], x)
-            a, self_c = mattn.attn_decode(lp["attn"], cfg, h, positions, self_c, impl=impl)
+            a, self_c = mattn.attn_decode(
+                lp["attn"], cfg, h, positions, self_c, impl=impl,
+                quant_impl=quant_impl,
+            )
             x = x + a
             hx = layers.apply_norm(cfg.norm, lp["ln_x"], x)
             x = x + mattn.cross_attn_decode(lp["xattn"], cfg, hx, cross_c, impl=impl)

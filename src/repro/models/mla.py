@@ -98,18 +98,17 @@ def mla_prefill_cache(p, cfg, x, positions, max_seq: int, *, quant_impl="auto"):
     return out, cache
 
 
-def mla_decode(p, cfg, x, positions, cache, *, impl="auto"):
+def mla_decode(p, cfg, x, positions, cache, *, impl="auto", quant_impl="auto"):
     """Absorbed-form decode against the quantized latent cache."""
     b = x.shape[0]
     q_nope, q_rope = _queries(p, cfg, x, positions)  # [B,1,h,*]
     c_kv, k_rope = _latent(p, cfg, x, positions)
     lat = jnp.concatenate([c_kv, k_rope], axis=-1)[:, None]  # [B, H=1, S=1, kvl+dr]
-    cache = qcache.append_decode(cache, lat, None)
     # absorb: q_eff = [q_nope @ W_uk ; q_rope]  -> width kv_lora + qk_rope
     q_lat = jnp.einsum("bshk,lhk->bshl", q_nope, p["k_up"])  # [B,1,h,kv_lora]
     q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)
-    out_lat = catt.decode_attention(
-        q_eff, cache,
+    out_lat, cache = catt.decode_append_attention(
+        q_eff, cache, lat, None, quant_impl=quant_impl,
         sm_scale=1.0 / (cfg.qk_nope + cfg.qk_rope) ** 0.5,
         d_v=cfg.kv_lora, impl=impl,
     )  # [B,1,h,kv_lora]

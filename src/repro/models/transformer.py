@@ -269,13 +269,19 @@ class DecoderLM:
             "pos": jnp.zeros((batch_size,), jnp.int32),
         }
 
-    def _block_decode(self, p, kind, x, positions, cache, impl):
+    def _block_decode(self, p, kind, x, positions, cache, impl, quant_impl):
         cfg = self.cfg
         h = layers.apply_norm(cfg.norm, p["ln1"], x, plus_one=cfg.rms_plus_one)
         if cfg.mixer == "mla":
-            a, cache = mla.mla_decode(p["attn"], cfg, h, positions, cache, impl=impl)
+            a, cache = mla.mla_decode(
+                p["attn"], cfg, h, positions, cache, impl=impl,
+                quant_impl=quant_impl,
+            )
         else:
-            a, cache = mattn.attn_decode(p["attn"], cfg, h, positions, cache, impl=impl)
+            a, cache = mattn.attn_decode(
+                p["attn"], cfg, h, positions, cache, impl=impl,
+                quant_impl=quant_impl,
+            )
         if cfg.parallel_residual:
             f = layers.mlp(p["mlp"], h, cfg.act) if kind == "mlp" else 0.0
             return x + a + f, cache
@@ -286,7 +292,7 @@ class DecoderLM:
             x = x + f
         return x, cache
 
-    def decode_step(self, params, state, tokens, *, impl="auto"):
+    def decode_step(self, params, state, tokens, *, impl="auto", quant_impl="auto"):
         """tokens [B, 1] -> (logits [B,1,V], new state)."""
         cfg = self.cfg
         x = layers.embed(params["embed"], tokens)
@@ -301,7 +307,9 @@ class DecoderLM:
         for i, (kind, _) in enumerate(self.stacks):
             def body(x, xs, _kind=kind):
                 lp, cache = xs
-                x, cache = self._block_decode(lp, _kind, x, positions, cache, impl)
+                x, cache = self._block_decode(
+                    lp, _kind, x, positions, cache, impl, quant_impl
+                )
                 return x, cache
 
             x, cache_stack = lax.scan(body, x, (params[f"stack_{i}"], state["caches"][i]))
@@ -423,7 +431,7 @@ class HybridLM:
             )
         return st
 
-    def decode_step(self, params, state, tokens, *, impl="auto"):
+    def decode_step(self, params, state, tokens, *, impl="auto", quant_impl="auto"):
         cfg = self.cfg
         x = layers.embed(params["embed"], tokens)
         pos = state["pos"]
@@ -441,7 +449,10 @@ class HybridLM:
 
             x, sst = lax.scan(inner, x, (group, sst))
             h = layers.apply_norm(cfg.norm, shared["ln1"], x)
-            a, cache = mattn.attn_decode(shared["attn"], cfg, h, positions, cache, impl=impl)
+            a, cache = mattn.attn_decode(
+                shared["attn"], cfg, h, positions, cache, impl=impl,
+                quant_impl=quant_impl,
+            )
             x = x + a
             x = x + layers.mlp(
                 shared["mlp"], layers.apply_norm(cfg.norm, shared["ln2"], x), cfg.act
@@ -611,8 +622,8 @@ class XLSTMLM:
             "pos": jnp.zeros((batch_size,), jnp.int32),
         }
 
-    def decode_step(self, params, state, tokens, *, impl="auto"):
-        del impl
+    def decode_step(self, params, state, tokens, *, impl="auto", quant_impl="auto"):
+        del impl, quant_impl  # no attention KV cache in this backbone
         x = layers.embed(params["embed"], tokens)
         x, new_states = self._forward(params, x, state["blocks"])
         x = layers.apply_norm(self.cfg.norm, params["final_norm"], x)

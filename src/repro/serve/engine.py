@@ -29,7 +29,8 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model, params, *, slots: int = 8, max_seq: int = 2048,
-                 eos_id: int | None = None, impl: str = "auto"):
+                 eos_id: int | None = None, impl: str = "auto",
+                 quant_impl: str = "auto"):
         self.model = model
         self.params = params
         self.slots = slots
@@ -42,8 +43,12 @@ class ServeEngine:
         # plain numpy (one device->host pull per cycle, one upload per step)
         # instead of per-slot int()/.at[].set() round-trips
         self.tokens = np.zeros((slots, 1), np.int32)
+        # impl: attention kernel; quant_impl: residual-flush kernel (the
+        # cache-append path) — both baked into the one jitted decode step
         self._step = jax.jit(
-            lambda p, s, t: model.decode_step(p, s, t, impl=impl),
+            lambda p, s, t: model.decode_step(
+                p, s, t, impl=impl, quant_impl=quant_impl
+            ),
             static_argnames=(),
         )
         # one jitted prefill for the engine lifetime (max_seq is baked in):

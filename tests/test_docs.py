@@ -1,0 +1,40 @@
+"""Docs exist and don't drift: the README kernel-inventory table must track
+src/repro/kernels/*/ (scripts/check_docs.py), and the first-class docs
+surface must be present."""
+import importlib.util
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _load_check_docs():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", REPO / "scripts" / "check_docs.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_surface_exists():
+    for rel in ("README.md", "docs/ARCHITECTURE.md", "docs/BENCHMARKS.md"):
+        path = REPO / rel
+        assert path.exists(), f"missing {rel}"
+        assert path.stat().st_size > 500, f"{rel} is a stub"
+
+
+def test_kernel_inventory_in_sync():
+    mod = _load_check_docs()
+    errors = mod.check()
+    assert not errors, "\n".join(errors)
+
+
+def test_check_docs_detects_drift():
+    """The checker actually fails when a family is undocumented (guards
+    against a regex rot that silently matches nothing)."""
+    mod = _load_check_docs()
+    documented = mod.documented_families((REPO / "README.md").read_text())
+    assert "residual_flush" in documented
+    assert "bitdecode" in documented
+    broken = (REPO / "README.md").read_text().replace("`residual_flush`", "`x`")
+    assert mod.documented_families(broken) != documented
