@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import functools
 import json
+import os
 from pathlib import Path
 
 import jax
@@ -51,6 +52,13 @@ def run_splitkv_sweep(*, s=8192, out_path: Path | None = None):
     nb = s // block_n
     q, cache, _ = make_decode_case(b=b, h_kv=h_kv, g_q=g_q, d=d, s=s,
                                    bits=bits, block_n=block_n)
+    cores = bd_ops.default_splitkv_cores()
+    auto_ns = bd_ops.auto_num_splits(b, h_kv, nb)
+    src = "env" if os.environ.get("REPRO_SPLITKV_CORES") else "device_count"
+    emit(
+        f"kernel_decode.splitkv.s{s}.auto", 0.0,
+        f"auto_num_splits={auto_ns};cores_target={cores};source={src}",
+    )
     records = []
     us_unsplit = None
     for ns in (1, 2, 4, 8):
@@ -66,7 +74,8 @@ def run_splitkv_sweep(*, s=8192, out_path: Path | None = None):
             "setting": f"single-gqa-long.b{b}.hkv{h_kv}.s{s}",
             "bits": bits,
             "num_splits": ns,
-            "auto_num_splits": bd_ops.auto_num_splits(b, h_kv, nb),
+            "auto_num_splits": auto_ns,
+            "splitkv_cores_target": cores,
             "measured_us": round(us, 1),
             "measured_speedup_vs_unsplit": round(us_unsplit / us, 3),
             "parallel_exposure": exposure,  # independent grid cells

@@ -1,0 +1,128 @@
+"""Serving-throughput sweep for the paged continuous-batching engine.
+
+Offered-load model: requests arrive on a virtual clock (the measured engine
+wall time) at a configured rate with a prompt-length mix; the engine admits
+them through the scheduler as slots and pool pages free up.  Each
+(rate x mix) cell reports end-to-end tokens/s, per-token latency percentiles
+(p50/p99 over per-cycle wall time attributed to every token decoded in that
+cycle), scheduler backpressure counts, and page-pool occupancy — the
+serving-throughput trajectory is appended to BENCH_serve.json so future PRs
+can track it.
+
+CPU smoke scale by default; the same sweep runs unchanged on TPU.
+"""
+from __future__ import annotations
+
+import json
+import zlib
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import smoke_config
+from repro.models.zoo import build_model
+from repro.serve.engine import Request, ServeEngine
+
+_BENCH_SERVE = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+# prompt-length mixes: (name, [(length, weight), ...])
+_MIXES = [
+    ("short", [(8, 0.7), (24, 0.3)]),
+    ("mixed", [(8, 0.5), (48, 0.35), (96, 0.15)]),
+]
+
+
+def _make_requests(n, mix, max_new, vocab, rate_rps, rng):
+    lengths = [l for l, _ in mix]
+    weights = np.asarray([w for _, w in mix])
+    weights = weights / weights.sum()
+    # deterministic arrival spacing at the offered rate, jittered
+    gaps = rng.exponential(1.0 / rate_rps, size=n)
+    arrivals = np.cumsum(gaps)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.choice(lengths, p=weights))
+        reqs.append(Request(
+            uid=i,
+            prompt=rng.integers(0, vocab, plen).astype(np.int32),
+            max_new_tokens=max_new,
+            arrival_s=float(arrivals[i]),
+        ))
+    return reqs
+
+
+def run_serve_sweep(*, n_requests=8, max_new=8, slots=4, max_seq=256,
+                    rates=(2.0, 16.0), out_path: Path | None = None,
+                    time_scale=1.0):
+    """Offered-load sweep: rate (requests/s on the virtual clock) x prompt
+    mix.  ``time_scale`` stretches the virtual clock (CPU cycles are slow;
+    scale keeps arrival dynamics interesting at smoke sizes)."""
+    cfg = smoke_config("llama3-8b").with_(kv_bits=4, kv_block=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    records = []
+    for mix_name, mix in _MIXES:
+        for rate in rates:
+            # deterministic per-cell seed (str hash is salted per process)
+            rng = np.random.default_rng(zlib.crc32(f"{mix_name}:{rate}".encode()))
+            reqs = _make_requests(n_requests, mix, max_new, cfg.vocab, rate, rng)
+            engine = ServeEngine(model, params, slots=slots, max_seq=max_seq)
+            pending = sorted(reqs, key=lambda r: r.arrival_s)
+            import time as _time
+
+            t0 = _time.perf_counter()
+            cycles = 0
+            while pending or engine._has_work():
+                now = (_time.perf_counter() - t0) * time_scale
+                while pending and pending[0].arrival_s <= now:
+                    engine.submit(pending.pop(0))
+                if not engine._has_work():
+                    # idle gap before the next arrival: jump the virtual clock
+                    if pending:
+                        engine.submit(pending.pop(0))
+                    continue
+                engine.step()
+                cycles += 1
+                if cycles > 20_000:
+                    break
+            stats = engine.summary(wall_s=_time.perf_counter() - t0)
+            rec = {
+                "mix": mix_name,
+                "offered_rate_rps": rate,
+                "n_requests": n_requests,
+                "slots": slots,
+                "decoded_tokens": stats["decoded_tokens"],
+                "tokens_per_s": round(stats["tokens_per_s"], 2),
+                "latency_p50_ms": round(stats["latency_p50_ms"], 2),
+                "latency_p99_ms": round(stats["latency_p99_ms"], 2),
+                "prefill_calls": stats["prefill_calls"],
+                "backpressure_events": stats["sched_backpressure_events"],
+                "occupancy_mean": round(stats["occupancy_mean"], 4),
+                "occupancy_max": round(stats["occupancy_max"], 4),
+            }
+            records.append(rec)
+            emit(
+                f"serve.{mix_name}.rps{rate:g}", stats["latency_p50_ms"] * 1e3,
+                f"tok/s={rec['tokens_per_s']};p99_ms={rec['latency_p99_ms']}"
+                f";occ_max={rec['occupancy_max']};prefills={rec['prefill_calls']}",
+            )
+    out_path = _BENCH_SERVE if out_path is None else out_path
+    history = []
+    if out_path.exists():
+        try:
+            history = json.loads(out_path.read_text())
+        except json.JSONDecodeError:
+            history = []
+    history.append({"backend": jax.default_backend(), "records": records})
+    out_path.write_text(json.dumps(history, indent=2) + "\n")
+    return records
+
+
+def run():
+    run_serve_sweep()
+
+
+if __name__ == "__main__":
+    run()

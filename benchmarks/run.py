@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_blocksweep      Table III   (parallelization granularity sweep)
   bench_breakdown       Table IV    (optimization breakdown)
   bench_roofline        §Roofline table from dry-run artifacts
+  bench_serve           Offered-load serving sweep (paged engine; BENCH_serve.json)
 """
 from __future__ import annotations
 
@@ -19,13 +20,13 @@ def main() -> None:
     from benchmarks import (bench_accuracy, bench_blocksweep, bench_breakdown,
                             bench_e2e, bench_flash_prefill,
                             bench_kernel_decode, bench_paged,
-                            bench_quant_overhead, bench_roofline)
+                            bench_quant_overhead, bench_roofline, bench_serve)
 
     print("name,us_per_call,derived")
     failed = []
     for mod in (bench_kernel_decode, bench_paged, bench_flash_prefill,
                 bench_accuracy, bench_quant_overhead, bench_blocksweep,
-                bench_breakdown, bench_e2e, bench_roofline):
+                bench_breakdown, bench_e2e, bench_serve, bench_roofline):
         try:
             mod.run()
         except Exception as e:  # noqa: BLE001

@@ -1,6 +1,7 @@
 """End-to-end driver: serve a small model with batched requests through the
-slot-based engine (continuous-batching-lite) with an int4 KV cache — the
-paper's "Batches" serving setting.
+paged continuous-batching engine (page-pool KV allocation, length-bucketed
+prefill, paged decode kernel) with an int4 KV cache — the paper's "Batches"
+serving setting.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
@@ -27,11 +28,16 @@ def main():
             prompt=rng.integers(0, cfg.vocab, prompt_len).astype(np.int32),
             max_new_tokens=int(rng.integers(4, 24)),
         ))
-    print(f"submitted {n_requests} requests into 4 slots (int4 KV cache)")
+    print(f"submitted {n_requests} requests into 4 slots "
+          f"({'paged' if engine.paged else 'dense'} engine, int4 KV cache)")
     stats = engine.run()
     print(f"served: {stats['decoded_tokens']} tokens in {stats['steps']} "
           f"batched steps, {stats['tokens_per_s']:.1f} tok/s (CPU), "
           f"evicted={stats['evicted']}")
+    if engine.paged:
+        print(f"paged: {stats['prefill_calls']} bucketed prefill calls, "
+              f"p50 per-token latency {stats['latency_p50_ms']:.0f} ms, "
+              f"peak pool occupancy {stats['occupancy_max']:.0%}")
 
 
 if __name__ == "__main__":

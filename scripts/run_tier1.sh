@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the invariant every PR keeps green.
+#   scripts/run_tier1.sh [extra pytest args]
+# Runs the full test suite (PYTHONPATH=src, fail-fast, quiet) followed by the
+# docs-drift check.  CI (.github/workflows/ci.yml) calls exactly this script,
+# so local and CI runs cannot diverge.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+cd "$ROOT"
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+python scripts/check_docs.py

@@ -14,8 +14,9 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import qcache
-from repro.core.qcache import QuantKVCache
+from repro.core.qcache import PagedQuantKVCache, QuantKVCache
 from repro.kernels.bitdecode import ops as bd_ops
+from repro.kernels.paged_bitdecode import ops as pg_ops
 
 MASK_VALUE = -1e37
 
@@ -83,7 +84,18 @@ def decode_attention(
     * **cross-chip** (:class:`use_splitkv`): the packed cache is sharded
       along a mesh axis and per-chip partials merge with the same lse math
       (repro.dist.splitkv).  Both levels compose.
+
+    ``cache`` may be a dense :class:`QuantKVCache` or a paged
+    :class:`PagedQuantKVCache` (serving engine layout): the paged route runs
+    ``kernels/paged_bitdecode`` over the cache's page table, with the same
+    two split-KV levels (in-kernel ``num_splits``; cross-chip page-table-walk
+    sharding via ``dist.splitkv.splitkv_paged_decode_attention``).
     """
+    if isinstance(cache, PagedQuantKVCache):
+        return _paged_decode_attention(
+            q, cache, sm_scale=sm_scale, impl=impl, num_splits=num_splits,
+            return_lse=return_lse,
+        )
     if _SPLITKV["mesh"] is not None and not return_lse:
         from repro.dist import splitkv as _sk
 
@@ -107,9 +119,44 @@ def decode_attention(
     return inverse_query_transform(out)
 
 
+def _paged_decode_attention(
+    q: jax.Array,  # [B, 1, h_q, d_k]
+    cache: PagedQuantKVCache,
+    *,
+    sm_scale: float | None,
+    impl: str,
+    num_splits,
+    return_lse: bool,
+):
+    """Paged decode dispatch: page-table walk through kernels/paged_bitdecode
+    (or, under :class:`use_splitkv`, the table walk sharded across chips)."""
+    if _SPLITKV["mesh"] is not None and not return_lse:
+        from repro.dist import splitkv as _sk
+
+        return _sk.splitkv_paged_decode_attention(
+            q, cache, _SPLITKV["mesh"], axis=_SPLITKV["axis"],
+            sm_scale=sm_scale, impl=impl, num_splits=num_splits,
+        )
+    h_kv = cache.kw.shape[1]
+    qt = query_transform(q, h_kv)
+    out = pg_ops.paged_bitdecode_attention(
+        qt, cache.kw, cache.k_scale, cache.k_zero,
+        cache.vw, cache.v_scale, cache.v_zero,
+        cache.k_res, cache.v_res,
+        cache.page_table, cache.pack_blocks, cache.res_len,
+        bits=cache.bits, block_n=cache.block_n, sm_scale=sm_scale,
+        k_gran=cache.k_gran, impl=impl, num_splits=num_splits,
+        return_lse=return_lse,
+    )
+    if return_lse:
+        o, lse = out
+        return inverse_query_transform(o), lse
+    return inverse_query_transform(out)
+
+
 def decode_append_attention(
     q: jax.Array,  # [B, 1, h_q, d_k]
-    cache: QuantKVCache,
+    cache: QuantKVCache | PagedQuantKVCache,
     k_new: jax.Array,  # [B, H, 1, d_k]
     v_new: jax.Array | None,  # None when shared_kv
     *,
@@ -118,16 +165,22 @@ def decode_append_attention(
 ):
     """The per-token serving hot path in one call: append the new KV token to
     the cache (residual write + gated residual-flush kernel, see
-    ``qcache.append_decode``) and run fused low-bit decode attention over the
-    updated cache.  Returns ``(out, cache)``.
+    ``qcache.append_decode`` / ``qcache.paged_append_decode``) and run fused
+    low-bit decode attention over the updated cache.  Returns
+    ``(out, cache)``.
 
     ``quant_impl`` selects the flush implementation
     ('auto' | 'pallas' | 'xla'); ``attn_kwargs`` are forwarded to
     :func:`decode_attention` (``impl``, ``num_splits``, ``sm_scale``,
     ``d_v``, ...).  Model blocks (models/attention.py, models/mla.py) route
-    through here so the engine's impl switches reach both kernels.
+    through here so the engine's impl switches reach both kernels, and the
+    dense/paged choice follows the cache type — the serving engine swaps the
+    decode state for a paged one and the model code never changes.
     """
-    cache = qcache.append_decode(cache, k_new, v_new, quant_impl=quant_impl)
+    if isinstance(cache, PagedQuantKVCache):
+        cache = qcache.paged_append_decode(cache, k_new, v_new, quant_impl=quant_impl)
+    else:
+        cache = qcache.append_decode(cache, k_new, v_new, quant_impl=quant_impl)
     return decode_attention(q, cache, **attn_kwargs), cache
 
 

@@ -10,6 +10,12 @@ flush is gated behind ``lax.cond`` so the other ``block_n - 1`` decode steps
 do no quantization work.  ``shared_kv=True`` stores a single latent stream
 (MLA mode) — no V-side fields.
 
+Two at-rest layouts share this data model: the dense :class:`QuantKVCache`
+(``[B, H, nb, ...]``, one private block range per sequence) and the paged
+:class:`PagedQuantKVCache` (shared ``[P, H, ...]`` page pools walked through
+per-sequence page tables — the serving engine's layout, allocated by
+serve/pages.py).  Both append paths run the same gated fused flush.
+
 See docs/ARCHITECTURE.md for the packed ``(words, scale, zero)`` layout spec.
 """
 from __future__ import annotations
@@ -79,9 +85,19 @@ def init_cache(
     shared_kv: bool = False,
     param_dtype=jnp.bfloat16,
     res_dtype=jnp.bfloat16,
+    block_align: int | None = None,
 ) -> QuantKVCache:
-    """Allocate an empty cache with capacity >= max_seq tokens."""
+    """Allocate an empty cache with capacity >= max_seq tokens.
+
+    ``block_align`` rounds the packed block count ``nb`` up to a multiple
+    (normally the split-KV mesh-axis size, plumbed through
+    ``model.init_decode_state(..., mesh=...)``) so ``dist.splitkv`` shards the
+    block axis without its per-call zero-pad — which is otherwise a full
+    cache copy every decoded token when ``nb % axis_size != 0``.
+    """
     nb = max(1, -(-max_seq // block_n))
+    if block_align and block_align > 1:
+        nb = -(-nb // block_align) * block_align
     npr = layout.words_per_block(block_n, bits)
     if k_gran == "channel":
         kp_shape = (batch, h_kv, nb, d_k)
@@ -215,38 +231,60 @@ def append_decode_speculative(
     return _commit_append(cache, packed, k_res, v_res, full, rl)
 
 
+def splitkv_block_align(mesh, axis: str | None) -> int | None:
+    """Block-axis alignment implied by a split-KV mesh axis (None when no
+    mesh / unknown axis) — the ``block_align`` to pass to :func:`init_cache`
+    so ``dist.splitkv`` never zero-pads the packed-block axis per call."""
+    if mesh is None or axis is None or axis not in mesh.axis_names:
+        return None
+    return int(mesh.shape[axis])
+
+
 def prefill(
     cache: QuantKVCache,
     k: jax.Array,  # [B, H, L, d_k]
     v: jax.Array | None,
     *,
+    lengths: jax.Array | None = None,
     quant_impl: str = "auto",
 ) -> QuantKVCache:
     """Fill the cache from a prefill of static length L: quantize the first
     L - (L mod N_r) tokens into packed blocks, keep the tail in the residual
-    (paper §V-B(1))."""
+    (paper §V-B(1)).
+
+    ``lengths`` ([B] int32, optional) marks ragged batches — same-bucket
+    prompts right-padded to a common L (the serve scheduler's bucketed
+    prefill).  Per sequence ``b``, only ``lengths[b] // block_n`` packed
+    blocks are valid and the residual holds tokens
+    ``[lengths[b] - lengths[b] % block_n, lengths[b])``; blocks beyond
+    ``pack_blocks[b]`` contain pad-polluted stats but are never read (the
+    same invariant decode already relies on), and the next decode flush
+    overwrites them.  Quantization is per-block, so valid blocks are bitwise
+    identical to an exact-length prefill of the same prompt.
+    """
     b, h, L, d_k = k.shape
     block_n = cache.block_n
     n_full = L // block_n
     res = L - n_full * block_n
-    updates = {}
-    if n_full:
-        w, s, z = kvq_ops.quantize_kv(
-            k[:, :, : n_full * block_n], cache.bits, cache.k_gran,
-            block_n=block_n, param_dtype=cache.k_scale.dtype, impl=quant_impl,
-        )
-        updates["kw"] = lax.dynamic_update_slice(
-            cache.kw, w, (0, 0, 0, 0, 0))
-        updates["k_scale"] = lax.dynamic_update_slice(cache.k_scale, s, (0, 0, 0, 0))
-        updates["k_zero"] = lax.dynamic_update_slice(cache.k_zero, z, (0, 0, 0, 0))
+    updates = _quantize_full_region(cache, k, v, n_full, quant_impl)
+    if lengths is not None:
+        # ragged tail: residual rows come from each sequence's own block
+        # boundary (which may sit inside the padded batch's packed region)
+        lo = ((lengths // block_n) * block_n).astype(jnp.int32)
+        idx = jnp.minimum(
+            lo[:, None] + jnp.arange(block_n, dtype=jnp.int32), L - 1
+        )  # [B, block_n]; rows >= res_len[b] are unread garbage
+
+        def tail(x, res_buf):
+            g = jnp.take_along_axis(x, idx[:, None, :, None], axis=2)
+            return g.astype(res_buf.dtype)
+
+        updates["k_res"] = tail(k, cache.k_res)
         if not cache.shared_kv:
-            wv, sv, zv = kvq_ops.quantize_kv(
-                v[:, :, : n_full * block_n], cache.bits, "tensor",
-                block_n=block_n, param_dtype=cache.k_scale.dtype, impl=quant_impl,
-            )
-            updates["vw"] = lax.dynamic_update_slice(cache.vw, wv, (0, 0, 0, 0, 0))
-            updates["v_scale"] = lax.dynamic_update_slice(cache.v_scale, sv, (0, 0, 0, 0))
-            updates["v_zero"] = lax.dynamic_update_slice(cache.v_zero, zv, (0, 0, 0, 0))
+            updates["v_res"] = tail(v, cache.v_res)
+        updates["pack_blocks"] = (lengths // block_n).astype(jnp.int32)
+        updates["res_len"] = (lengths % block_n).astype(jnp.int32)
+        return dataclasses.replace(cache, **updates)
     if res:
         kr = jnp.zeros_like(cache.k_res)
         kr = lax.dynamic_update_slice(
@@ -260,3 +298,198 @@ def prefill(
     updates["pack_blocks"] = jnp.full((b,), n_full, jnp.int32)
     updates["res_len"] = jnp.full((b,), res, jnp.int32)
     return dataclasses.replace(cache, **updates)
+
+
+# --------------------------------------------------------------------------
+# Paged cache (vLLM-style page pools + per-sequence block tables)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PagedQuantKVCache:
+    """Paged twin of :class:`QuantKVCache`: the packed blocks of all
+    sequences live in shared *page pools* (``[P, H, ...]``, one pool entry =
+    one ``block_n``-token block) and each sequence walks its blocks through a
+    ``page_table`` row.  The bf16 residual tail stays dense per slot — only
+    committed blocks are paged.
+
+    Invariants (serve/pages.py is the allocator that maintains them):
+
+    * pool pages ``[0, B)`` are per-slot scratch, never allocated to a
+      request; ``page_table`` entries that don't (yet) hold an allocated page
+      equal the slot index, so a flush through a stale/idle entry lands in
+      the slot's own scratch page and destinations stay pairwise distinct;
+    * ``page_table[b, j]`` holds the pool page of sequence ``b``'s packed
+      block ``j`` for all ``j < pack_blocks[b]``, and the page for block
+      ``pack_blocks[b]`` is allocated *before* the decode step whose flush
+      commits it;
+    * ``length = pack_blocks * block_n + res_len`` exactly as in the dense
+      cache.
+
+    ``shared_kv`` (MLA latent) is not supported in paged mode — the paged
+    decode kernel is K/V-split only; MLA serving uses the dense engine path.
+    """
+
+    # shared page pools
+    kw: jax.Array           # int32 [P, H, npr, d_k]
+    k_scale: jax.Array      # [P, H, d_k] (channel) | [P, H, block_n] (tensor)
+    k_zero: jax.Array
+    vw: jax.Array           # int32 [P, H, npr, d_v]
+    v_scale: jax.Array      # [P, H, block_n]
+    v_zero: jax.Array
+    # dense per-slot residual tail
+    k_res: jax.Array        # bf16 [B, H, block_n, d_k]
+    v_res: jax.Array
+    # per-sequence block table + occupancy
+    page_table: jax.Array   # int32 [B, nb_max]
+    pack_blocks: jax.Array  # int32 [B]
+    res_len: jax.Array      # int32 [B]
+    # static config
+    bits: int
+    block_n: int
+    k_gran: str
+
+    # shared-code compatibility (``_append_residual`` keys on it)
+    @property
+    def shared_kv(self) -> bool:
+        return False
+
+    @property
+    def length(self) -> jax.Array:
+        return self.pack_blocks * self.block_n + self.res_len
+
+    @property
+    def n_pages(self) -> int:
+        return self.kw.shape[0]
+
+
+jax.tree_util.register_dataclass(
+    PagedQuantKVCache,
+    data_fields=[
+        "kw", "k_scale", "k_zero", "vw", "v_scale", "v_zero",
+        "k_res", "v_res", "page_table", "pack_blocks", "res_len",
+    ],
+    meta_fields=["bits", "block_n", "k_gran"],
+)
+
+
+def init_paged_cache(
+    n_pages: int,
+    batch: int,
+    h_kv: int,
+    d_k: int,
+    nb_max: int,
+    *,
+    d_v: int | None = None,
+    bits: int = 4,
+    block_n: int = 128,
+    k_gran: str = "channel",
+    param_dtype=jnp.bfloat16,
+    res_dtype=jnp.bfloat16,
+) -> PagedQuantKVCache:
+    """Allocate empty page pools for ``batch`` decode slots.
+
+    ``n_pages`` must be ``> batch``: the first ``batch`` pages are the
+    per-slot scratch pages required by the flush-destination injectivity
+    contract.  ``nb_max`` is the page-table width (max packed blocks any one
+    sequence can hold).  The fresh ``page_table`` points every entry at the
+    owning slot's scratch page.
+    """
+    if n_pages <= batch:
+        raise ValueError(
+            f"n_pages={n_pages} must exceed batch={batch} (the first "
+            "`batch` pages are reserved per-slot scratch)"
+        )
+    d_v = d_v if d_v is not None else d_k
+    npr = layout.words_per_block(block_n, bits)
+    kp_shape = (n_pages, h_kv, d_k) if k_gran == "channel" else (n_pages, h_kv, block_n)
+    z32 = lambda s: jnp.zeros(s, jnp.int32)  # noqa: E731
+    zp = lambda s: jnp.zeros(s, param_dtype)  # noqa: E731
+    table = jnp.broadcast_to(
+        jnp.arange(batch, dtype=jnp.int32)[:, None], (batch, nb_max)
+    )
+    return PagedQuantKVCache(
+        kw=z32((n_pages, h_kv, npr, d_k)),
+        k_scale=zp(kp_shape),
+        k_zero=zp(kp_shape),
+        vw=z32((n_pages, h_kv, npr, d_v)),
+        v_scale=zp((n_pages, h_kv, block_n)),
+        v_zero=zp((n_pages, h_kv, block_n)),
+        k_res=jnp.zeros((batch, h_kv, block_n, d_k), res_dtype),
+        v_res=jnp.zeros((batch, h_kv, block_n, d_v), res_dtype),
+        page_table=table,
+        pack_blocks=z32((batch,)),
+        res_len=z32((batch,)),
+        bits=bits, block_n=block_n, k_gran=k_gran,
+    )
+
+
+def paged_append_decode(
+    cache: PagedQuantKVCache,
+    k_new: jax.Array,  # [B, H, 1, d_k]
+    v_new: jax.Array,  # [B, H, 1, d_v]
+    *,
+    quant_impl: str = "auto",
+) -> PagedQuantKVCache:
+    """Paged per-token append: write the new token row into the dense
+    residual, and — gated behind ``lax.cond`` exactly like the dense
+    :func:`append_decode` — commit just-filled residual blocks *through the
+    page table* into the pools with the fused paged residual-flush kernel.
+    Non-flush steps do zero quantize/pack/pool work.
+
+    The flush destination per sequence is ``page_table[b, pack_blocks[b]]``
+    when its residual filled, else the slot's scratch page ``b`` (keeps the
+    kernel's destination set pairwise distinct; see PagedQuantKVCache's
+    invariants).
+    """
+    b = cache.k_res.shape[0]
+    nb_max = cache.page_table.shape[1]
+    k_res, v_res, rl, full = _append_residual(cache, k_new, v_new)
+
+    blk = jnp.clip(cache.pack_blocks, 0, nb_max - 1)
+    dest = jnp.take_along_axis(cache.page_table, blk[:, None], axis=1)[:, 0]
+    dest = jnp.where(full, dest, jnp.arange(b, dtype=jnp.int32))
+    dest = jnp.clip(dest, 0, cache.n_pages - 1)
+
+    pools = (cache.kw, cache.k_scale, cache.k_zero,
+             cache.vw, cache.v_scale, cache.v_zero)
+
+    def flush(p):
+        return rf_ops.paged_residual_flush(
+            *p, k_res, v_res, full.astype(jnp.int32), dest,
+            bits=cache.bits, block_n=cache.block_n, k_gran=cache.k_gran,
+            impl=quant_impl,
+        )
+
+    kw, ks, kz, vw, vs, vz = lax.cond(jnp.any(full), flush, lambda p: p, pools)
+    return dataclasses.replace(
+        cache, kw=kw, k_scale=ks, k_zero=kz, vw=vw, v_scale=vs, v_zero=vz,
+        k_res=k_res, v_res=v_res,
+        pack_blocks=jnp.where(full, cache.pack_blocks + 1, cache.pack_blocks),
+        res_len=jnp.where(full, 0, rl),
+    )
+
+
+def _quantize_full_region(cache, k, v, n_full: int, quant_impl: str) -> dict:
+    """Quantize+pack the first ``n_full`` blocks of a prefill into updates for
+    the packed fields (shared front of the uniform and ragged prefill paths)."""
+    block_n = cache.block_n
+    updates: dict = {}
+    if not n_full:
+        return updates
+    w, s, z = kvq_ops.quantize_kv(
+        k[:, :, : n_full * block_n], cache.bits, cache.k_gran,
+        block_n=block_n, param_dtype=cache.k_scale.dtype, impl=quant_impl,
+    )
+    updates["kw"] = lax.dynamic_update_slice(cache.kw, w, (0, 0, 0, 0, 0))
+    updates["k_scale"] = lax.dynamic_update_slice(cache.k_scale, s, (0, 0, 0, 0))
+    updates["k_zero"] = lax.dynamic_update_slice(cache.k_zero, z, (0, 0, 0, 0))
+    if not cache.shared_kv:
+        wv, sv, zv = kvq_ops.quantize_kv(
+            v[:, :, : n_full * block_n], cache.bits, "tensor",
+            block_n=block_n, param_dtype=cache.k_scale.dtype, impl=quant_impl,
+        )
+        updates["vw"] = lax.dynamic_update_slice(cache.vw, wv, (0, 0, 0, 0, 0))
+        updates["v_scale"] = lax.dynamic_update_slice(cache.v_scale, sv, (0, 0, 0, 0))
+        updates["v_zero"] = lax.dynamic_update_slice(cache.v_zero, zv, (0, 0, 0, 0))
+    return updates

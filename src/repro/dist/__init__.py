@@ -6,9 +6,11 @@ Modules:
     plus :func:`constrain`, the activation sharding-constraint helper used
     by the models and the train step;
   * :mod:`repro.dist.state_specs` — PartitionSpec trees for decode state
-    (QuantKVCache placement, incl. the split-KV block-axis sharding);
+    (dense QuantKVCache and paged PagedQuantKVCache placement, incl. the
+    split-KV block-axis / page-table-column sharding);
   * :mod:`repro.dist.splitkv`     — sequence-parallel decode across a mesh
-    axis with the logsumexp partials merge (FlashDecoding across chips).
+    axis with the logsumexp partials merge (FlashDecoding across chips),
+    for both the dense block-sharded and paged table-walk-sharded layouts.
 
 Compat: older jax (< 0.6) has no ``jax.set_mesh``; ``Mesh`` itself is the
 context manager that installs the active mesh.  The launchers and tests use

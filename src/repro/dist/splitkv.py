@@ -33,7 +33,12 @@ legacy jax (< 0.6) where ``Mesh`` itself is the context manager.
 
 Merge math and diagrams: docs/ARCHITECTURE.md §5.  Wired in through
 :class:`repro.core.attention.use_splitkv`, which the launchers enter around
-lowering the long-context decode cells.
+lowering the long-context decode cells and the serve engine enters for its
+split-KV decode step.
+
+Paged twin: :func:`splitkv_paged_decode_attention` shards the page-table
+*walk* (not the pools) for PagedQuantKVCache states — see its docstring and
+docs/ARCHITECTURE.md §7.
 """
 from __future__ import annotations
 
@@ -43,6 +48,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as PS
 
 from repro.kernels.bitdecode import ops as bd_ops
+from repro.kernels.paged_bitdecode import ops as pg_ops
 
 
 def merge_collective(o, lse, axis: str):
@@ -149,5 +155,82 @@ def splitkv_decode_attention(
     out = shard_map(
         local, mesh=mesh, in_specs=tuple(in_specs), out_specs=rep,
         check_rep=False,
+    )(*operands)
+    return inverse_query_transform(out)
+
+
+def splitkv_paged_decode_attention(
+    q,
+    cache,
+    mesh,
+    *,
+    axis: str = "data",
+    sm_scale: float | None = None,
+    impl: str = "auto",
+    num_splits: int | str | None = "auto",
+):
+    """Sequence-parallel *paged* decode: shard the page-table **walk**, not
+    the pools.
+
+    The paged cache scatters a sequence's blocks across arbitrary pool pages,
+    so the pools themselves have no contiguous block axis to shard; instead
+    the ``page_table`` columns (dim 1 of ``[B, nb_max]``) are sharded along
+    ``axis`` — each chip walks a contiguous slice of every sequence's table
+    against replicated pools, clips ``pack_blocks`` to its slice, and the
+    per-chip flash partials merge with the usual lse collectives.  The bf16
+    residual rides with the last shard, exactly as in the dense path.
+
+    Replicating the pools is the right at-rest layout for serving: the pools
+    are written by the (replicated) paged residual flush and read by every
+    chip's slice of the walk; sharding pool *storage* across chips is future
+    work (it needs a page-affine allocator in serve/pages.py).
+
+    q: [B, 1, h_q, d_k]; cache: PagedQuantKVCache.  Returns
+    [B, 1, h_q, d_v], replicated along ``axis``.  Composes with the
+    in-kernel split (``num_splits``) per chip.
+    """
+    from repro.core.attention import inverse_query_transform, query_transform
+
+    if axis not in mesh.axis_names:
+        raise ValueError(
+            f"mesh has no axis {axis!r}; available: {tuple(mesh.axis_names)}"
+        )
+    n = mesh.shape[axis]
+    h_kv = cache.kw.shape[1]
+    qt = query_transform(q, h_kv)
+    nb = cache.page_table.shape[1]
+    pad = -(-nb // n) * n - nb
+    table = cache.page_table
+    if pad:
+        # padded entries point at page 0 (a scratch page): they sit beyond
+        # every pack_blocks so the kernel masks them; size nb_max to the
+        # axis (serve engine does) to keep the per-step path pad-free
+        table = jnp.pad(table, ((0, 0), (0, pad)))
+
+    rep = PS()
+    operands = (
+        qt, cache.kw, cache.k_scale, cache.k_zero,
+        cache.vw, cache.v_scale, cache.v_zero,
+        cache.k_res, cache.v_res, table, cache.pack_blocks, cache.res_len,
+    )
+    in_specs = (rep,) * 9 + (PS(None, axis), rep, rep)
+
+    def local(qt_, kw_, ks_, kz_, vw_, vs_, vz_, kres_, vres_, tbl_, pb_, rl_):
+        idx = lax.axis_index(axis)
+        nb_local = tbl_.shape[1]
+        lo = idx * nb_local
+        pb_local = jnp.clip(pb_ - lo, 0, nb_local)
+        rl_local = jnp.where(idx == n - 1, rl_, 0)
+        o, lse = pg_ops.paged_bitdecode_attention(
+            qt_, kw_, ks_, kz_, vw_, vs_, vz_, kres_, vres_,
+            tbl_, pb_local, rl_local,
+            bits=cache.bits, block_n=cache.block_n, sm_scale=sm_scale,
+            k_gran=cache.k_gran, impl=impl, num_splits=num_splits,
+            return_lse=True,
+        )
+        return merge_collective(o, lse, axis)
+
+    out = shard_map(
+        local, mesh=mesh, in_specs=in_specs, out_specs=rep, check_rep=False,
     )(*operands)
     return inverse_query_transform(out)

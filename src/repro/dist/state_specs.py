@@ -37,7 +37,7 @@ import math
 import jax
 from jax.sharding import PartitionSpec as PS
 
-from repro.core.qcache import QuantKVCache
+from repro.core.qcache import PagedQuantKVCache, QuantKVCache
 
 # field -> (base rank without stacking dims, {base-dim index: role})
 _CACHE_FIELD_ROLES = {
@@ -49,6 +49,25 @@ _CACHE_FIELD_ROLES = {
     "v_zero": (4, {0: "batch", 1: "heads", 2: "blocks"}),
     "k_res": (4, {0: "batch", 1: "heads"}),
     "v_res": (4, {0: "batch", 1: "heads"}),
+    "pack_blocks": (1, {0: "batch"}),
+    "res_len": (1, {0: "batch"}),
+}
+
+# Paged layout: pools ([P, H, ...]) replicate their page dim (pages are
+# scattered arbitrarily, only the table *walk* is sequence-parallel — see
+# dist.splitkv.splitkv_paged_decode_attention) and shard KV heads over
+# "model"; the page_table columns carry the "blocks" role so the at-rest
+# placement matches the sharded walk.
+_PAGED_FIELD_ROLES = {
+    "kw": (4, {1: "heads"}),
+    "k_scale": (3, {1: "heads"}),
+    "k_zero": (3, {1: "heads"}),
+    "vw": (4, {1: "heads"}),
+    "v_scale": (3, {1: "heads"}),
+    "v_zero": (3, {1: "heads"}),
+    "k_res": (4, {0: "batch", 1: "heads"}),
+    "v_res": (4, {0: "batch", 1: "heads"}),
+    "page_table": (2, {0: "batch", 1: "blocks"}),
     "pack_blocks": (1, {0: "batch"}),
     "res_len": (1, {0: "batch"}),
 }
@@ -71,38 +90,56 @@ def _entry(names, mesh, dim: int):
     return names if len(names) > 1 else names[0]
 
 
-def _cache_specs(c: QuantKVCache, mesh, batch_axes, seq_ax):
+def _cache_specs(c, mesh, batch_axes, seq_ax):
     role_axes = {
         "batch": batch_axes,
         "heads": ("model",),
         "blocks": (seq_ax,) if seq_ax else (),
     }
+    roles_table = (
+        _PAGED_FIELD_ROLES if isinstance(c, PagedQuantKVCache) else _CACHE_FIELD_ROLES
+    )
 
     def field_spec(name: str, arr):
         if arr is None:
             return None
-        base_rank, roles = _CACHE_FIELD_ROLES[name]
+        base_rank, roles = roles_table[name]
         lead = arr.ndim - base_rank  # stacked layer dims stay replicated
         parts = [None] * arr.ndim
-        for i, role in roles.items():
-            parts[lead + i] = _entry(role_axes[role], mesh, arr.shape[lead + i])
+        used: set = set()  # a mesh axis may appear once per PartitionSpec
+        for i, role in sorted(roles.items()):
+            e = _entry(role_axes[role], mesh, arr.shape[lead + i])
+            names = e if isinstance(e, tuple) else (e,) if e else ()
+            if any(n in used for n in names):
+                continue  # earlier dim claimed the axis; stay replicated
+            used.update(names)
+            parts[lead + i] = e
         return PS(*parts)
 
-    kwargs = {
-        name: field_spec(name, getattr(c, name)) for name in _CACHE_FIELD_ROLES
-    }
+    kwargs = {name: field_spec(name, getattr(c, name)) for name in roles_table}
     return dataclasses.replace(c, **kwargs)
 
 
-def decode_state_specs(model, mesh, *, global_batch: int, seq_ax: str | None = None):
-    """PartitionSpec tree matching ``model.init_decode_state`` structure."""
+def decode_state_specs(model, mesh, *, global_batch: int, seq_ax: str | None = None,
+                       paged: bool = False, n_pages: int | None = None):
+    """PartitionSpec tree matching ``model.init_decode_state`` structure
+    (or ``model.init_paged_decode_state`` when ``paged``)."""
     cfg = model.cfg
     batch_axes = _batch_axes(mesh, global_batch)
     # structure only — nb just has to be positive; actual decode states may
     # have any block count, specs are rank/dim-role based
     max_seq = 4 * getattr(cfg, "kv_block", 128)
+    nb_max = max_seq // getattr(cfg, "kv_block", 128)
     # closure (not args) so batch/max_seq stay concrete python ints
-    state = jax.eval_shape(lambda: model.init_decode_state(global_batch, max_seq))
+    if paged:
+        np_ = n_pages if n_pages is not None else global_batch * (nb_max + 1)
+        state = jax.eval_shape(
+            lambda: model.init_paged_decode_state(
+                global_batch, n_pages=np_, nb_max=nb_max
+            )
+        )
+    else:
+        state = jax.eval_shape(lambda: model.init_decode_state(global_batch, max_seq))
 
     def generic(arr):
         parts = [None] * arr.ndim
@@ -113,11 +150,13 @@ def decode_state_specs(model, mesh, *, global_batch: int, seq_ax: str | None = N
                     break
         return PS(*parts)
 
+    _cache_types = (QuantKVCache, PagedQuantKVCache)
+
     def node(x):
-        if isinstance(x, QuantKVCache):
+        if isinstance(x, _cache_types):
             return _cache_specs(x, mesh, batch_axes, seq_ax)
         return generic(x)
 
     return jax.tree.map(
-        node, state, is_leaf=lambda x: isinstance(x, QuantKVCache)
+        node, state, is_leaf=lambda x: isinstance(x, _cache_types)
     )

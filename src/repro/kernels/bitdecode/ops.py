@@ -19,12 +19,28 @@ import jax.numpy as jnp
 from repro.kernels.bitdecode import kernel as _kernel
 from repro.kernels.bitdecode import ref as _ref
 
-# Parallel grid slots one chip can fill concurrently.  TPU Mosaic maps
-# "parallel" grid dims over Megacore (2 cores/chip); we keep the target a
-# little above that so splits also cover pipeline bubbles, and allow an env
-# override for other parts (GPU Pallas, interpret-mode studies).
-_DEFAULT_CORES = int(os.environ.get("REPRO_SPLITKV_CORES", "8"))
+# Parallel grid slots the attached accelerators can fill concurrently.  TPU
+# Mosaic maps "parallel" grid dims over Megacore (2 cores/chip); we target a
+# little above that per device so splits also cover pipeline bubbles.  The
+# REPRO_SPLITKV_CORES env var overrides the whole product (calibration /
+# GPU Pallas / interpret-mode studies); unset, the default scales with the
+# process's device count.
+_CORES_PER_DEVICE = 4  # ~2 physical cores x2 oversubscription
 _MAX_SPLITS = 16
+_cores_cache: int | None = None
+
+
+def default_splitkv_cores() -> int:
+    """Parallel-slot target for the split heuristic: REPRO_SPLITKV_CORES if
+    set, else ``jax.device_count() * 4``.  Resolved lazily (device_count
+    initializes the backend) and cached for the process lifetime."""
+    global _cores_cache
+    env = os.environ.get("REPRO_SPLITKV_CORES")
+    if env:
+        return int(env)
+    if _cores_cache is None:
+        _cores_cache = max(1, jax.device_count() * _CORES_PER_DEVICE)
+    return _cores_cache
 
 
 def _round_up(x: int, m: int) -> int:
@@ -34,7 +50,7 @@ def _round_up(x: int, m: int) -> int:
 def auto_num_splits(b: int, h_kv: int, nb: int, *, cores: int | None = None) -> int:
     """Split-KV heuristic: 1 unless B*H_kv underfills the cores and the
     packed sequence is long enough for every split to own >= 2 blocks."""
-    cores = _DEFAULT_CORES if cores is None else cores
+    cores = default_splitkv_cores() if cores is None else cores
     if b * h_kv >= cores or nb < 4:
         return 1
     want = -(-cores // (b * h_kv))  # splits needed to fill the cores

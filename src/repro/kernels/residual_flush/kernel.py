@@ -27,6 +27,16 @@ entirely on the per-token hot path.
 Constraints (TPU, non-interpret): ``d % 128 == 0`` (the aliased cache cannot
 be lane-padded in place — ops.py falls back to the XLA path otherwise) and
 ``block_n % (32 // bits) == 0`` (layout invariant).
+
+The paged variant (:func:`paged_residual_flush_pallas`) commits through a
+page table instead: the destination is a *pool page* index (``dest_page[b]``,
+scalar prefetch) into the shared ``[P, H, ...]`` pools rather than a block of
+sequence ``b``'s own cache.  Same aliasing trick, one extra invariant: the
+per-sequence destinations must be pairwise distinct, because two grid rows
+writing the same pool page would race.  Callers guarantee it by routing
+non-flushing sequences to a reserved per-slot scratch page (pages
+``[0, B)`` of every pool — see serve/pages.py); flushing sequences always
+own distinct allocated pages.
 """
 from __future__ import annotations
 
@@ -222,4 +232,148 @@ def residual_flush_pallas(
     if shared_kv:
         kw, k_scale, k_zero = out
         return kw, k_scale, k_zero, None, None, None
+    return tuple(out)
+
+
+def _paged_body(
+    full_ref,
+    dest_ref,
+    kres_ref,
+    vres_ref,
+    kw_in,
+    ks_in,
+    kz_in,
+    vw_in,
+    vs_in,
+    vz_in,
+    kw_out,
+    ks_out,
+    kz_out,
+    vw_out,
+    vs_out,
+    vz_out,
+    *,
+    bits,
+    k_gran,
+    param_dtype,
+):
+    b = pl.program_id(0)
+    full = full_ref[b] != 0
+
+    @pl.when(full)
+    def _flush():
+        k = kres_ref[0, 0].astype(jnp.float32)  # (block_n, d_k)
+        w, s, z = quant_block_tile(
+            k, bits=bits, granularity=k_gran, param_dtype=param_dtype
+        )
+        kw_out[0, 0] = w
+        ks_out[0, 0] = s
+        kz_out[0, 0] = z
+        v = vres_ref[0, 0].astype(jnp.float32)
+        wv, sv, zv = quant_block_tile(
+            v, bits=bits, granularity="tensor", param_dtype=param_dtype
+        )
+        vw_out[0, 0] = wv
+        vs_out[0, 0] = sv
+        vz_out[0, 0] = zv
+
+    @pl.when(jnp.logical_not(full))
+    def _keep():
+        # pool page dest_page[b] is this sequence's private scratch page (the
+        # caller's injectivity contract); restore the fetched input block
+        kw_out[0, 0] = kw_in[0, 0]
+        ks_out[0, 0] = ks_in[0, 0]
+        kz_out[0, 0] = kz_in[0, 0]
+        vw_out[0, 0] = vw_in[0, 0]
+        vs_out[0, 0] = vs_in[0, 0]
+        vz_out[0, 0] = vz_in[0, 0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "block_n", "k_gran", "interpret"),
+)
+def paged_residual_flush_pallas(
+    kw_pool,
+    k_scale_pool,
+    k_zero_pool,
+    vw_pool,
+    v_scale_pool,
+    v_zero_pool,
+    k_res,
+    v_res,
+    full,
+    dest_page,
+    *,
+    bits: int,
+    block_n: int,
+    k_gran: str,
+    interpret: bool,
+):
+    """Commit ``k_res[b]``/``v_res[b]`` into pool page ``dest_page[b]`` of the
+    shared ``[P, H, ...]`` page pools for every sequence with ``full[b] != 0``;
+    other sequences' destination pages pass through untouched (callers point
+    them at per-slot scratch pages so destinations stay pairwise distinct).
+    Returns the six updated pool arrays, aliased in place on TPU.
+    """
+    n_pages, h, npr, d_k = kw_pool.shape
+    d_v = vw_pool.shape[-1]
+    b = k_res.shape[0]
+    param_dtype = k_scale_pool.dtype
+    if not interpret:
+        minor = aliased_minor_dims(d_k, d_v, block_n, k_gran, False)
+        if any(m % 128 for m in minor):
+            raise ValueError(
+                "paged_residual_flush_pallas writes the pools in place and "
+                f"cannot lane-pad them: minor dims {minor} must all be "
+                "multiples of 128 on TPU — use impl='xla' for this shape"
+            )
+
+    def dst(i, j, full_ref, dest_ref):
+        # clamp keeps the DMA in range; callers never pass out-of-pool pages
+        return jnp.minimum(dest_ref[i], n_pages - 1)
+
+    w_spec = pl.BlockSpec(
+        (1, 1, npr, d_k), lambda i, j, f, dr: (dst(i, j, f, dr), j, 0, 0)
+    )
+    kp_shape = (1, 1, d_k) if k_gran == "channel" else (1, 1, block_n)
+    kp_spec = pl.BlockSpec(kp_shape, lambda i, j, f, dr: (dst(i, j, f, dr), j, 0))
+    vw_spec = pl.BlockSpec(
+        (1, 1, npr, d_v), lambda i, j, f, dr: (dst(i, j, f, dr), j, 0, 0)
+    )
+    vp_spec = pl.BlockSpec(
+        (1, 1, block_n), lambda i, j, f, dr: (dst(i, j, f, dr), j, 0)
+    )
+    kres_spec = pl.BlockSpec((1, 1, block_n, d_k), lambda i, j, f, dr: (i, j, 0, 0))
+    vres_spec = pl.BlockSpec((1, 1, block_n, d_v), lambda i, j, f, dr: (i, j, 0, 0))
+
+    pool_specs = [w_spec, kp_spec, kp_spec, vw_spec, vp_spec, vp_spec]
+    pools = [kw_pool, k_scale_pool, k_zero_pool, vw_pool, v_scale_pool, v_zero_pool]
+    in_specs = [kres_spec, vres_spec] + pool_specs
+    operands = [k_res, v_res] + pools
+    out_shape = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in pools]
+
+    # alias each pool input onto its output; indices count the two
+    # scalar-prefetch operands (full, dest_page) and the two residual inputs
+    aliases = {4 + i: i for i in range(len(pools))}
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h),
+        in_specs=in_specs,
+        out_specs=pool_specs,
+    )
+    body = functools.partial(
+        _paged_body, bits=bits, k_gran=k_gran, param_dtype=param_dtype
+    )
+    out = pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+    )(full.astype(jnp.int32), dest_page.astype(jnp.int32), *operands)
     return tuple(out)

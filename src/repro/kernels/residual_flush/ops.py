@@ -61,3 +61,57 @@ def residual_flush(
             bits=bits, block_n=block_n, k_gran=k_gran, shared_kv=shared_kv,
         )
     raise ValueError(f"unknown impl {impl!r}")
+
+
+def paged_residual_flush(
+    kw_pool,
+    k_scale_pool,
+    k_zero_pool,
+    vw_pool,
+    v_scale_pool,
+    v_zero_pool,
+    k_res,
+    v_res,
+    full,
+    dest_page,
+    *,
+    bits: int,
+    block_n: int,
+    k_gran: str,
+    impl: str = "auto",
+):
+    """Paged face of the fused residual flush: commit the bf16 residual of
+    every sequence with ``full[b] != 0`` into pool page ``dest_page[b]`` of
+    the shared ``[P, H, ...]`` page pools.
+
+    Same gating contract as :func:`residual_flush` (callers wrap the call in
+    ``lax.cond(any(full))`` — see ``qcache.paged_append_decode``), plus the
+    paged injectivity contract: ``dest_page`` entries must be pairwise
+    distinct.  Callers satisfy it by pointing non-flushing sequences at their
+    reserved per-slot scratch page (pool pages ``[0, B)``, never allocated to
+    requests — serve/pages.py).
+
+    impl: 'pallas' | 'xla' | 'auto' (pallas on TPU when the pool minor dims
+    are lane-aligned, xla otherwise — the aliased pools cannot be lane-padded
+    in place, exactly like the dense flush).
+    """
+    if impl == "auto":
+        minor = _kernel.aliased_minor_dims(
+            kw_pool.shape[-1], vw_pool.shape[-1], block_n, k_gran, False
+        )
+        lane_ok = not any(m % 128 for m in minor)
+        impl = "pallas" if jax.default_backend() == "tpu" and lane_ok else "xla"
+    if impl == "pallas":
+        return _kernel.paged_residual_flush_pallas(
+            kw_pool, k_scale_pool, k_zero_pool, vw_pool, v_scale_pool,
+            v_zero_pool, k_res, v_res, full, dest_page,
+            bits=bits, block_n=block_n, k_gran=k_gran,
+            interpret=jax.default_backend() != "tpu",
+        )
+    if impl == "xla":
+        return _ref.paged_residual_flush_ref(
+            kw_pool, k_scale_pool, k_zero_pool, vw_pool, v_scale_pool,
+            v_zero_pool, k_res, v_res, full, dest_page,
+            bits=bits, block_n=block_n, k_gran=k_gran,
+        )
+    raise ValueError(f"unknown impl {impl!r}")

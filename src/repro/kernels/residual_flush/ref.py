@@ -76,3 +76,56 @@ def residual_flush_ref(
     return jax.vmap(one)(
         kw, k_scale, k_zero, vw, v_scale, v_zero, k_res, v_res, full, dest_block
     )
+
+
+def paged_residual_flush_ref(
+    kw_pool,
+    k_scale_pool,
+    k_zero_pool,
+    vw_pool,
+    v_scale_pool,
+    v_zero_pool,
+    k_res,
+    v_res,
+    full,
+    dest_page,
+    *,
+    bits: int,
+    block_n: int,
+    k_gran: str,
+):
+    """Oracle for :func:`..kernel.paged_residual_flush_pallas`: quantize every
+    residual, gather the current destination pages, select against ``full``,
+    scatter back.  Same injectivity contract as the kernel: ``dest_page``
+    entries must be pairwise distinct (non-flushing sequences point at their
+    reserved per-slot scratch page), so the scatter has no duplicate indices.
+
+    kw_pool: int32 [P, H, npr, d_k]; k_res: [B, H, block_n, d_k];
+    full/dest_page: int32 [B].  Returns the six updated pool arrays.
+    """
+    param_dtype = k_scale_pool.dtype
+    if block_n != layout.words_per_block(block_n, bits) * layout.packing_ratio(bits):
+        raise ValueError(f"block_n={block_n} violates the layout invariant")
+    dest = jnp.minimum(dest_page.astype(jnp.int32), kw_pool.shape[0] - 1)
+    fl = full != 0
+
+    w, s, z = jax.vmap(
+        lambda r: quantizer.quantize_and_pack(r, bits, k_gran, param_dtype=param_dtype)
+    )(k_res)
+    wv, sv, zv = jax.vmap(
+        lambda r: quantizer.quantize_and_pack(r, bits, "tensor", param_dtype=param_dtype)
+    )(v_res)
+
+    def commit(pool, new):
+        cur = jnp.take(pool, dest, axis=0)
+        keep = fl.reshape((-1,) + (1,) * (new.ndim - 1))
+        return pool.at[dest].set(jnp.where(keep, new.astype(pool.dtype), cur))
+
+    return (
+        commit(kw_pool, w),
+        commit(k_scale_pool, s),
+        commit(k_zero_pool, z),
+        commit(vw_pool, wv),
+        commit(v_scale_pool, sv),
+        commit(v_zero_pool, zv),
+    )

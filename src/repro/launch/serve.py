@@ -1,8 +1,14 @@
-"""Serving launcher: slot-based batched decoding with the quantized cache.
+"""Serving launcher: continuous-batching paged serving with the quantized
+KV cache (dense slot fallback for models without a paged decode path).
 
 Usage (CPU demo with a reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
       --requests 16 --slots 4 --max-new 24
+
+Page-pool sizing: --pages bounds the KV pool; by default the pool is fully
+provisioned (slots * max_seq worth of pages).  Undersize it (e.g.
+--pages 12) to exercise admission backpressure: requests wait in the queue
+until completions return pages.
 """
 from __future__ import annotations
 
@@ -26,13 +32,25 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=512)
     ap.add_argument("--kv-bits", type=int, default=4)
+    ap.add_argument("--pages", type=int, default=None,
+                    help="page-pool size (default: fully provisioned)")
+    ap.add_argument("--dense", action="store_true",
+                    help="force the legacy dense slot engine")
+    ap.add_argument("--splitkv", choices=("auto", "always", "never"),
+                    default="auto", help="cross-chip split-KV routing policy")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = cfg.with_(kv_bits=args.kv_bits)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params, slots=args.slots, max_seq=args.max_seq)
+    engine = ServeEngine(
+        model, params, slots=args.slots, max_seq=args.max_seq,
+        paged=False if args.dense else None, n_pages=args.pages,
+        splitkv=args.splitkv,
+    )
+    print(f"[serve] engine mode: {'paged' if engine.paged else 'dense'}"
+          + (f", pool={engine.n_pages} pages" if engine.paged else ""))
 
     rng = np.random.default_rng(0)
     for uid in range(args.requests):

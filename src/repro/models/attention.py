@@ -64,16 +64,25 @@ def attn_train(p, cfg, x, positions, *, causal=True):
     return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
 
 
-def attn_prefill_cache(p, cfg, x, positions, max_seq: int, *, quant_impl="auto"):
-    """Run train attention AND build the quantized cache from the prefill K/V."""
+def attn_prefill_cache(p, cfg, x, positions, max_seq: int, *, quant_impl="auto",
+                       lengths=None, block_align=None):
+    """Run train attention AND build the quantized cache from the prefill K/V.
+
+    ``lengths`` ([B] int32, optional) marks a ragged right-padded batch (the
+    serve scheduler's bucketed prefill): per-sequence cache occupancy follows
+    the true lengths, pad rows never become valid cache content.
+    ``block_align`` rounds the cache's packed-block capacity up (mesh-aligned
+    allocation for split-KV)."""
     q, k, v = _qkv(p, cfg, x, positions)
     out = catt.blockwise_attention(q, k, v, causal=True, block_k=cfg.attn_block_k)
     cache = qcache.init_cache(
         x.shape[0], cfg.n_kv_heads, cfg.head_dim, max_seq,
         bits=cfg.kv_bits, block_n=cfg.kv_block, k_gran=cfg.kv_gran,
+        block_align=block_align,
     )
     cache = qcache.prefill(
-        cache, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), quant_impl=quant_impl
+        cache, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        lengths=lengths, quant_impl=quant_impl,
     )
     return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"]), cache
 

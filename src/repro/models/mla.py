@@ -81,20 +81,22 @@ def mla_train(p, cfg, x, positions):
     return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
 
 
-def mla_init_cache(cfg, batch: int, max_seq: int):
+def mla_init_cache(cfg, batch: int, max_seq: int, *, block_align=None):
     """Latent cache: one KV 'head' of width kv_lora + qk_rope, shared_kv."""
     return qcache.init_cache(
         batch, 1, cfg.kv_lora + cfg.qk_rope, max_seq,
         bits=cfg.kv_bits, block_n=cfg.kv_block, k_gran="channel", shared_kv=True,
+        block_align=block_align,
     )
 
 
-def mla_prefill_cache(p, cfg, x, positions, max_seq: int, *, quant_impl="auto"):
+def mla_prefill_cache(p, cfg, x, positions, max_seq: int, *, quant_impl="auto",
+                      lengths=None, block_align=None):
     out = mla_train(p, cfg, x, positions)
     c_kv, k_rope = _latent(p, cfg, x, positions)
     lat = jnp.concatenate([c_kv, k_rope], axis=-1)[:, None]  # [B,1,S,kvl+dr]
-    cache = mla_init_cache(cfg, x.shape[0], max_seq)
-    cache = qcache.prefill(cache, lat, None, quant_impl=quant_impl)
+    cache = mla_init_cache(cfg, x.shape[0], max_seq, block_align=block_align)
+    cache = qcache.prefill(cache, lat, None, lengths=lengths, quant_impl=quant_impl)
     return out, cache
 
 

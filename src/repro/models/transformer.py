@@ -214,13 +214,20 @@ class DecoderLM:
 
     # ------------------------------------------------------------ prefill
 
-    def _block_prefill(self, p, kind, x, positions, max_seq):
+    def _block_prefill(self, p, kind, x, positions, max_seq, lengths=None,
+                       block_align=None):
         cfg = self.cfg
         h = layers.apply_norm(cfg.norm, p["ln1"], x, plus_one=cfg.rms_plus_one)
         if cfg.mixer == "mla":
-            a, cache = mla.mla_prefill_cache(p["attn"], cfg, h, positions, max_seq)
+            a, cache = mla.mla_prefill_cache(
+                p["attn"], cfg, h, positions, max_seq, lengths=lengths,
+                block_align=block_align,
+            )
         else:
-            a, cache = mattn.attn_prefill_cache(p["attn"], cfg, h, positions, max_seq)
+            a, cache = mattn.attn_prefill_cache(
+                p["attn"], cfg, h, positions, max_seq, lengths=lengths,
+                block_align=block_align,
+            )
         if cfg.parallel_residual:
             f = layers.mlp(p["mlp"], h, cfg.act) if kind == "mlp" else 0.0
             return x + a + f, cache
@@ -231,38 +238,88 @@ class DecoderLM:
             x = x + f
         return x, cache
 
-    def prefill(self, params, batch, max_seq: int):
-        """Process the prompt, build quantized caches, return (last_logits, state)."""
+    def prefill(self, params, batch, max_seq: int, *, lengths=None,
+                block_align=None):
+        """Process the prompt, build quantized caches, return (last_logits, state).
+
+        ``lengths`` ([B] int32, optional): the batch is ragged — same-bucket
+        prompts right-padded to a common static length (the serve
+        scheduler's bucketed prefill).  Causality keeps real tokens blind to
+        the right-pad, per-sequence cache occupancy follows the true lengths
+        (``qcache.prefill``), and the returned logits are gathered at each
+        sequence's last *real* token instead of the padded tail.
+        ``block_align`` propagates mesh-aligned block allocation (split-KV).
+        """
         cfg = self.cfg
         x, positions = self._embed(params, batch)
+        n_lead = cfg.n_patches if cfg.vision_stub else 0  # patch prefix offset
+        cache_lengths = None if lengths is None else lengths + n_lead
         caches = []
         for i, (kind, _) in enumerate(self.stacks):
             def body(x, lp, _kind=kind):
-                x, cache = self._block_prefill(lp, _kind, x, positions, max_seq)
+                x, cache = self._block_prefill(
+                    lp, _kind, x, positions, max_seq, cache_lengths, block_align
+                )
                 return x, cache
 
             x, cache_stack = lax.scan(body, x, params[f"stack_{i}"])
             caches.append(cache_stack)
-        logits = self._logits(params, x[:, -1:])
-        state = {
-            "caches": caches,
-            "pos": jnp.full((x.shape[0],), x.shape[1], jnp.int32),
-        }
+        if lengths is None:
+            logits = self._logits(params, x[:, -1:])
+            pos = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+        else:
+            last = jnp.clip(n_lead + lengths - 1, 0, x.shape[1] - 1)
+            x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
+            logits = self._logits(params, x_last)
+            pos = (n_lead + lengths).astype(jnp.int32)
+        state = {"caches": caches, "pos": pos}
         return logits, state
 
     # ------------------------------------------------------------ decode
 
-    def init_decode_state(self, batch_size: int, max_seq: int):
+    def init_decode_state(self, batch_size: int, max_seq: int, *, mesh=None,
+                          splitkv_axis: str = "data"):
+        """Dense decode state.  When a ``mesh`` is given, the packed-block
+        capacity is rounded up to the ``splitkv_axis`` size so
+        ``dist.splitkv`` shards the block axis pad-free (mesh-aligned cache
+        allocation — otherwise the per-call zero-pad copies the whole cache
+        every decoded token at ``nb % axis_size != 0`` shapes)."""
         cfg = self.cfg
+        align = qcache.splitkv_block_align(mesh, splitkv_axis)
         caches = []
         for kind, n in self.stacks:
             if cfg.mixer == "mla":
-                one = mla.mla_init_cache(cfg, batch_size, max_seq)
+                one = mla.mla_init_cache(cfg, batch_size, max_seq, block_align=align)
             else:
                 one = qcache.init_cache(
                     batch_size, cfg.n_kv_heads, cfg.head_dim, max_seq,
                     bits=cfg.kv_bits, block_n=cfg.kv_block, k_gran=cfg.kv_gran,
+                    block_align=align,
                 )
+            caches.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (n, *a.shape)), one))
+        return {
+            "caches": caches,
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+        }
+
+    def init_paged_decode_state(self, batch_size: int, *, n_pages: int,
+                                nb_max: int):
+        """Paged decode state for the serving engine: per-stack
+        :class:`~repro.core.qcache.PagedQuantKVCache` pools (stacked along
+        layers, page tables managed host-side by serve/pages.py).  Requires
+        plain K/V attention — MLA's shared latent stream has no paged decode
+        kernel and serves through the dense engine path instead."""
+        cfg = self.cfg
+        if cfg.mixer != "attn":
+            raise ValueError(
+                f"paged decode state requires mixer='attn', got {cfg.mixer!r}"
+            )
+        caches = []
+        for kind, n in self.stacks:
+            one = qcache.init_paged_cache(
+                n_pages, batch_size, cfg.n_kv_heads, cfg.head_dim, nb_max,
+                bits=cfg.kv_bits, block_n=cfg.kv_block, k_gran=cfg.kv_gran,
+            )
             caches.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (n, *a.shape)), one))
         return {
             "caches": caches,
@@ -409,12 +466,14 @@ class HybridLM:
         logits = layers.unembed(params["unembed"], x, cfg.vocab)
         return _ce_loss(logits[:, :-1], batch["labels"][:, 1:], batch["loss_mask"][:, 1:])
 
-    def init_decode_state(self, batch_size: int, max_seq: int):
+    def init_decode_state(self, batch_size: int, max_seq: int, *, mesh=None,
+                          splitkv_axis: str = "data"):
         cfg = self.cfg
         one_m = mamba2.mamba2_init_state(cfg, batch_size)
         cache = qcache.init_cache(
             batch_size, cfg.n_kv_heads, cfg.head_dim, max_seq,
             bits=cfg.kv_bits, block_n=cfg.kv_block, k_gran=cfg.kv_gran,
+            block_align=qcache.splitkv_block_align(mesh, splitkv_axis),
         )
         st = {
             "ssm_main": jax.tree.map(

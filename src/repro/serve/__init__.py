@@ -1,0 +1,5 @@
+"""Serving subsystem: continuous-batching scheduler, page-pool allocator,
+and the paged-first ServeEngine.  See docs/ARCHITECTURE.md §7."""
+from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.pages import PagePool  # noqa: F401
+from repro.serve.scheduler import Phase, Request, Scheduler  # noqa: F401

@@ -1,15 +1,43 @@
-"""Slot-based batched serving engine (continuous-batching-lite).
+"""Paged-first continuous-batching serving engine.
 
-A fixed number of decode slots share one jitted decode_step (static shapes);
-finished sequences free their slot, which is refilled from the request queue
-on the next cycle.  Per-slot KV-cache occupancy lives in the QuantKVCache's
-per-sequence pack_blocks/res_len, so refilling a slot is just resetting its
-row — no reallocation.  Dead-slot eviction (straggler/failure mitigation):
-slots whose request exceeded max_new_tokens are forcibly retired each cycle.
+The engine composes the three serving-layer pieces into the per-cycle loop:
+
+* :class:`~repro.serve.scheduler.Scheduler` — request lifecycle
+  (WAITING → PREFILL → DECODE → DONE), strict-FIFO admission gated on slot
+  *and* page availability, length-bucketed prefill grouping;
+* :class:`~repro.serve.pages.PagePool` — free-list page allocator with
+  admission reservations (preempt-free steady state) and refcounts;
+* the paged decode state (``model.init_paged_decode_state``): per-layer
+  page pools + per-slot page tables, decoded through
+  ``kernels/paged_bitdecode`` with the fused paged residual flush on the
+  append path (``qcache.paged_append_decode``).
+
+One cycle (:meth:`ServeEngine.step`):
+
+1. admit waiting requests into free slots; run **one jitted prefill per
+   length bucket** (prompts right-padded to the bucket, batch padded to the
+   slot count, so the jit cache keys on the bucket length only) and adopt
+   the resulting dense blocks into the pools at freshly allocated pages;
+2. allocate the destination page for any sequence whose residual fills on
+   this step (host mirrors the length counters, so this is exact, and the
+   admission reservation guarantees the allocation succeeds);
+3. push the page table to the device if it changed, then run one jitted
+   batched decode step over all slots — through the cross-chip split-KV
+   path when a mesh is attached and the cycle is long-context/low-occupancy
+   (``auto_num_splits`` handles the in-kernel split either way);
+4. collect next tokens host-side, retire finished requests (their pages
+   return to the pool), record per-token latency and pool occupancy.
+
+Idle slots keep decoding garbage into their private scratch pages (their
+page-table rows point at scratch, see serve/pages.py) — wasted lanes, never
+corruption.
+
+Models without a paged decode path (MLA latent caches, SSM hybrids,
+enc-dec) fall back to the legacy dense slot engine: per-request exact-length
+prefill spliced into a dense batched state.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from collections import deque
 
@@ -17,57 +45,288 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import attention as catt
+from repro.kernels.bitdecode import ops as bd_ops
+from repro.serve import pages as pg
+from repro.serve.scheduler import Phase, Request, Scheduler  # noqa: F401 (re-export)
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray  # [S] int32
-    max_new_tokens: int = 32
-    out_tokens: list = dataclasses.field(default_factory=list)
-    done: bool = False
+
+def _percentile(xs: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
 
 
 class ServeEngine:
     def __init__(self, model, params, *, slots: int = 8, max_seq: int = 2048,
                  eos_id: int | None = None, impl: str = "auto",
-                 quant_impl: str = "auto"):
+                 quant_impl: str = "auto", paged: bool | None = None,
+                 n_pages: int | None = None, min_bucket: int = 16,
+                 mesh=None, splitkv_axis: str = "data",
+                 splitkv: str = "auto"):
+        """``paged=None`` auto-detects (paged when the model can);
+        ``n_pages`` bounds the KV pool (default: full provisioning,
+        ``slots * nb_max`` + scratch — lower it to oversubscribe and exercise
+        admission backpressure).  ``mesh``/``splitkv_axis`` attach the
+        cross-chip split-KV decode path; ``splitkv`` is the routing policy:
+        'auto' (engage on long-context low-occupancy cycles), 'always',
+        'never'."""
         self.model = model
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
         self.eos_id = eos_id
-        self.queue: deque[Request] = deque()
-        self.active: list[Request | None] = [None] * slots
-        self.state = model.init_decode_state(slots, max_seq)
-        # host-side next-token buffer: the decode loop reads/writes it with
-        # plain numpy (one device->host pull per cycle, one upload per step)
-        # instead of per-slot int()/.at[].set() round-trips
-        self.tokens = np.zeros((slots, 1), np.int32)
-        # impl: attention kernel; quant_impl: residual-flush kernel (the
-        # cache-append path) — both baked into the one jitted decode step
+        self.mesh = mesh
+        self.splitkv_axis = splitkv_axis
+        self.splitkv = splitkv
+        cfg = getattr(model, "cfg", None)
+        self.block_n = getattr(cfg, "kv_block", 128)
+        self._h_kv = getattr(cfg, "n_kv_heads", 1)
+
+        can_page = (
+            hasattr(model, "init_paged_decode_state")
+            and cfg is not None
+            and getattr(cfg, "mixer", None) == "attn"
+            and not getattr(cfg, "vision_stub", False)
+            and not getattr(cfg, "encdec", False)
+        )
+        if paged and not can_page:
+            raise ValueError(
+                "model has no paged decode path (needs plain K/V attention)"
+            )
+        self.paged = can_page if paged is None else paged
+
+        # both modes share the one jitted decode step (static shapes) and the
+        # host-side next-token buffer (one device->host pull per cycle)
         self._step = jax.jit(
             lambda p, s, t: model.decode_step(
                 p, s, t, impl=impl, quant_impl=quant_impl
-            ),
-            static_argnames=(),
+            )
         )
-        # one jitted prefill for the engine lifetime (max_seq is baked in):
-        # XLA's jit cache then keys on prompt length only, instead of the
-        # fresh-jit-per-request retrace the old _fill_slot paid
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, self.max_seq)
-        )
-        self.stats = {"decoded_tokens": 0, "steps": 0, "evicted": 0}
+        self._step_splitkv = None
+        if mesh is not None and splitkv_axis not in getattr(mesh, "axis_names", ()):
+            raise ValueError(
+                f"mesh has no axis {splitkv_axis!r}; available: "
+                f"{tuple(getattr(mesh, 'axis_names', ()))}"
+            )
+        if mesh is not None and splitkv != "never":
+            def _split_step(p, s, t):
+                with catt.use_splitkv(mesh, splitkv_axis):
+                    return model.decode_step(
+                        p, s, t, impl=impl, quant_impl=quant_impl
+                    )
+            self._step_splitkv = jax.jit(_split_step)
 
-    def submit(self, req: Request):
-        self.queue.append(req)
+        self.tokens = np.zeros((slots, 1), np.int32)
+        self.stats = {
+            "decoded_tokens": 0, "steps": 0, "evicted": 0,
+            "prefill_calls": 0, "splitkv_steps": 0,
+        }
+        self._token_latencies: list[float] = []
+        self._occupancy: list[float] = []
+
+        if self.paged:
+            nb_max = -(-max_seq // self.block_n)
+            if mesh is not None:
+                n = int(mesh.shape[splitkv_axis])  # pad-free sharded table walk
+                nb_max = -(-nb_max // n) * n
+            self.nb_max = nb_max
+            self.n_pages = (
+                n_pages if n_pages is not None else slots * nb_max + slots
+            )
+            self.pool = pg.PagePool(self.n_pages, n_scratch=slots)
+            self.sched = Scheduler(
+                slots=slots, pool=self.pool, block_n=self.block_n,
+                max_seq=max_seq, min_bucket=min_bucket,
+            )
+            self.state = model.init_paged_decode_state(
+                slots, n_pages=self.n_pages, nb_max=nb_max
+            )
+            # host mirror of the device page table; unassigned entries point
+            # at the slot's scratch page (flush-destination injectivity)
+            self._table = np.broadcast_to(
+                np.arange(slots, dtype=np.int32)[:, None], (slots, nb_max)
+            ).copy()
+            self._table_dirty = False
+            # one jitted bucketed prefill; jit cache keys on the padded
+            # token shape = (slots, bucket_len) -> one compile per bucket
+            self._prefill = jax.jit(
+                lambda p, toks, lengths: model.prefill(
+                    p, {"tokens": toks}, toks.shape[1], lengths=lengths
+                )
+            )
+        else:
+            self.pool = None
+            self.sched = None
+            self.queue: deque[Request] = deque()
+            self.active: list[Request | None] = [None] * slots
+            self.state = model.init_decode_state(slots, max_seq)
+            self._prefill = jax.jit(
+                lambda p, b: model.prefill(p, b, self.max_seq)
+            )
+
+    # ------------------------------------------------------------ public
+
+    def submit(self, req: Request) -> None:
+        if self.paged:
+            self.sched.submit(req)
+        else:
+            self.queue.append(req)
+
+    def step(self) -> bool:
+        return self._step_paged() if self.paged else self._step_dense()
+
+    def run(self, max_cycles: int = 10_000):
+        t0 = time.perf_counter()
+        cycles = 0
+        while self._has_work() and cycles < max_cycles:
+            self.step()
+            cycles += 1
+        return self.summary(wall_s=time.perf_counter() - t0)
+
+    def summary(self, *, wall_s: float | None = None) -> dict:
+        """Engine statistics; callers driving :meth:`step` themselves (the
+        offered-load bench) pass their own wall-clock window."""
+        if wall_s is None:
+            wall_s = sum(self._token_latencies) / max(1, self.slots)
+        out = {
+            **self.stats,
+            "wall_s": wall_s,
+            "tokens_per_s": self.stats["decoded_tokens"] / max(wall_s, 1e-9),
+        }
+        if self.paged:
+            out.update(
+                **{f"sched_{k}": v for k, v in self.sched.stats.items()},
+                latency_p50_ms=1e3 * _percentile(self._token_latencies, 50),
+                latency_p99_ms=1e3 * _percentile(self._token_latencies, 99),
+                occupancy_mean=float(np.mean(self._occupancy)) if self._occupancy else 0.0,
+                occupancy_max=float(np.max(self._occupancy)) if self._occupancy else 0.0,
+            )
+        return out
+
+    def _has_work(self) -> bool:
+        if self.paged:
+            return self.sched.has_work
+        return bool(self.queue or any(r is not None for r in self.active))
+
+    # ------------------------------------------------------- paged cycle
+
+    def _admit_and_prefill(self) -> None:
+        groups = self.sched.admit()
+        for bucket_len, reqs in groups.items():
+            toks = np.zeros((self.slots, bucket_len), np.int32)
+            lens = np.ones((self.slots,), np.int32)  # pad rows: length 1
+            for r, req in enumerate(reqs):
+                toks[r, : req.prompt_len] = req.prompt
+                lens[r] = req.prompt_len
+            logits, dstate = self._prefill(
+                self.params, jnp.asarray(toks), jnp.asarray(lens)
+            )
+            self.stats["prefill_calls"] += 1
+            first = np.argmax(np.asarray(logits)[:, 0], axis=-1)
+
+            slot_ids, lengths, pages_per_req = [], [], []
+            for r, req in enumerate(reqs):
+                n_blocks = req.prompt_len // self.block_n
+                pgs = [self.pool.alloc() for _ in range(n_blocks)]
+                req.pages.extend(pgs)
+                self._table[req.slot, :] = req.slot  # fresh scratch row
+                self._table[req.slot, :n_blocks] = pgs
+                slot_ids.append(req.slot)
+                lengths.append(req.prompt_len)
+                pages_per_req.append(pgs)
+                req.phase = Phase.DECODE
+                req.pos = req.prompt_len
+                self.tokens[req.slot, 0] = int(first[r])
+            self._table_dirty = True
+            self.state["caches"] = pg.adopt_prefill(
+                self.state["caches"], dstate["caches"],
+                slot_ids=slot_ids, lengths=lengths,
+                pages_per_req=pages_per_req, block_n=self.block_n,
+            )
+            sidx = jnp.asarray(slot_ids, jnp.int32)
+            self.state["pos"] = self.state["pos"].at[sidx].set(
+                jnp.asarray(lengths, jnp.int32)
+            )
+
+    def _ensure_flush_pages(self) -> None:
+        """Allocate the destination page for every sequence whose residual
+        fills on the upcoming step (pos % block_n == block_n - 1): the flush
+        will commit packed block pos // block_n through the page table."""
+        for req in self.sched.active.values():
+            if req.pos % self.block_n == self.block_n - 1:
+                blk = req.pos // self.block_n
+                if self._table[req.slot, blk] < self.slots:  # still scratch
+                    page = self.pool.alloc()
+                    req.pages.append(page)
+                    self._table[req.slot, blk] = page
+                    self._table_dirty = True
+
+    def _use_splitkv_now(self) -> bool:
+        if self._step_splitkv is None or self.splitkv == "never":
+            return False
+        if self.splitkv == "always":
+            return True
+        axis_size = int(self.mesh.shape[self.splitkv_axis])
+        if axis_size <= 1:
+            return False
+        active = self.sched.active.values()
+        max_blocks = max((r.pos // self.block_n for r in active), default=0)
+        cores = bd_ops.default_splitkv_cores()
+        return (
+            len(self.sched.active) * self._h_kv < cores
+            and max_blocks >= 2 * axis_size
+        )
+
+    def _step_paged(self) -> bool:
+        t0 = time.perf_counter()
+        self._admit_and_prefill()
+        if not self.sched.active:
+            return False
+        self._ensure_flush_pages()
+        if self._table_dirty:
+            self.state["caches"] = pg.set_page_tables(
+                self.state["caches"], self._table
+            )
+            self._table_dirty = False
+
+        if self._use_splitkv_now():
+            step_fn = self._step_splitkv
+            self.stats["splitkv_steps"] += 1
+        else:
+            step_fn = self._step
+        logits, self.state = step_fn(
+            self.params, self.state, jnp.asarray(self.tokens)
+        )
+        nxt = np.argmax(np.asarray(logits)[:, 0], axis=-1)
+        self.stats["steps"] += 1
+        dt = time.perf_counter() - t0
+
+        for slot, req in list(self.sched.active.items()):
+            tok = int(self.tokens[slot, 0])
+            req.out_tokens.append(tok)
+            req.pos += 1  # this step appended tok's KV
+            req.token_latencies_s.append(dt)
+            self._token_latencies.append(dt)
+            self.stats["decoded_tokens"] += 1
+            hit_eos = self.eos_id is not None and tok == self.eos_id
+            if hit_eos or len(req.out_tokens) >= req.max_new_tokens:
+                if not hit_eos:
+                    self.stats["evicted"] += 1  # forced retirement
+                self._table[slot, :] = slot  # stale entries -> scratch
+                self._table_dirty = True
+                self.sched.complete(req)
+            else:
+                self.tokens[slot, 0] = int(nxt[slot])
+        self._occupancy.append(self.pool.occupancy)
+        return True
+
+    # ---------------------------------------------- dense fallback cycle
 
     def _fill_slot(self, i: int, req: Request):
         """Prefill one request into slot i (single-sequence prefill, then the
         per-slot cache rows are spliced into the batched state)."""
         batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
         logits, st = self._prefill(self.params, batch)
-        # splice slot-0 rows of st into row i of the batched state
+
         def splice(dst, src):
             if dst is None:
                 return None
@@ -83,11 +342,14 @@ class ServeEngine:
 
         self.state = jax.tree.map(splice, self.state, st)
         self.tokens[i, 0] = int(np.argmax(np.asarray(logits)[0, -1]))
+        self.stats["prefill_calls"] += 1
+        req.phase = Phase.DECODE
+        req.pos = req.prompt_len
         self.active[i] = req
 
-    def step(self):
-        """One engine cycle: refill free slots, one batched decode step,
-        collect outputs, retire finished/evicted requests."""
+    def _step_dense(self) -> bool:
+        """Legacy slot engine: refill free slots one request at a time, one
+        batched decode step, retire finished/evicted requests."""
         for i in range(self.slots):
             if self.active[i] is None and self.queue:
                 self._fill_slot(i, self.queue.popleft())
@@ -112,21 +374,8 @@ class ServeEngine:
             if hit_eos or len(req.out_tokens) >= req.max_new_tokens:
                 if not hit_eos and len(req.out_tokens) >= req.max_new_tokens:
                     self.stats["evicted"] += 1  # forced retirement
-                req.done = True
+                req.phase = Phase.DONE
                 self.active[i] = None
             else:
                 self.tokens[i, 0] = int(nxt[i])
         return True
-
-    def run(self, max_cycles: int = 10_000):
-        t0 = time.time()
-        cycles = 0
-        while (self.queue or any(self.active)) and cycles < max_cycles:
-            self.step()
-            cycles += 1
-        dt = time.time() - t0
-        return {
-            **self.stats,
-            "wall_s": dt,
-            "tokens_per_s": self.stats["decoded_tokens"] / max(dt, 1e-9),
-        }

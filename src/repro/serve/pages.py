@@ -1,0 +1,189 @@
+"""Page-pool management for the paged serving engine.
+
+Host-side twin of :class:`repro.core.qcache.PagedQuantKVCache`: the device
+holds the pools + page tables, this module decides *which* pool page holds
+which request's block.
+
+Two-level accounting:
+
+* **reservations** (admission control): when the scheduler admits a request
+  it reserves the request's worst-case page count
+  ``(prompt_len + max_new_tokens) // block_n`` up front.  Reservations are
+  logical — no physical page moves — but they guarantee that every later
+  :meth:`PagePool.alloc` during that request's decode succeeds, so steady
+  state is preempt-free by construction; a request that cannot reserve stays
+  WAITING (admission backpressure).
+* **physical pages** (free-list + refcounts): pages are popped from the free
+  list lazily — prompt blocks at prefill adoption, one page per ``block_n``
+  decoded tokens just before the flush step that commits it.  ``free``
+  decrements a refcount and returns the page at zero (refcounts > 1 are the
+  hook for future prefix sharing via :meth:`PagePool.retain`).
+
+Scratch-page invariant (shared with the paged residual-flush kernel): pool
+pages ``[0, n_scratch)`` — one per decode slot — are never allocated.  Page
+tables point unassigned entries at the owning slot's scratch page, so a
+flush through an idle or not-yet-allocated entry lands in private scratch
+and the kernel's per-sequence destinations stay pairwise distinct.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class PagePool:
+    """Free-list page allocator with admission reservations and refcounts."""
+
+    def __init__(self, n_pages: int, *, n_scratch: int):
+        if n_pages <= n_scratch:
+            raise ValueError(
+                f"n_pages={n_pages} must exceed n_scratch={n_scratch}"
+            )
+        self.n_pages = n_pages
+        self.n_scratch = n_scratch
+        self._free: deque[int] = deque(range(n_scratch, n_pages))
+        self._refcount = np.zeros(n_pages, np.int32)
+        self.reserved = 0  # logical admission reservations, in pages
+
+    # ------------------------------------------------------------ capacity
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (scratch excluded)."""
+        return self.n_pages - self.n_scratch
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.capacity - self.n_free
+
+    @property
+    def occupancy(self) -> float:
+        """Physically allocated fraction of the allocatable pool."""
+        return self.n_used / max(1, self.capacity)
+
+    # -------------------------------------------------------- reservations
+
+    def reserve(self, n: int) -> bool:
+        """Logically reserve ``n`` pages for an admitted request; False (and
+        no state change) when the pool cannot guarantee them — the
+        scheduler's backpressure signal."""
+        if self.reserved + n > self.capacity:
+            return False
+        self.reserved += n
+        return True
+
+    def release(self, n: int) -> None:
+        """Return a request's reservation (on completion/eviction)."""
+        if n > self.reserved:
+            raise ValueError(f"release({n}) exceeds reserved={self.reserved}")
+        self.reserved -= n
+
+    # ------------------------------------------------------ physical pages
+
+    def alloc(self) -> int:
+        """Pop a free page (refcount 1).  Guaranteed to succeed for pages
+        covered by a reservation; raises if the invariant was violated."""
+        if not self._free:
+            raise RuntimeError(
+                "page pool exhausted — alloc() outside a reservation?"
+            )
+        page = self._free.popleft()
+        self._refcount[page] = 1
+        return page
+
+    def retain(self, page: int) -> None:
+        """Add a reference to an allocated page (prefix-sharing hook)."""
+        if self._refcount[page] <= 0:
+            raise ValueError(f"retain of unallocated page {page}")
+        self._refcount[page] += 1
+
+    def free(self, page: int) -> None:
+        """Drop one reference; the page returns to the free list at zero."""
+        if self._refcount[page] <= 0:
+            raise ValueError(f"double free of page {page}")
+        self._refcount[page] -= 1
+        if self._refcount[page] == 0:
+            self._free.append(page)
+
+
+# --------------------------------------------------------------------------
+# Device-side adoption: move bucket-prefill dense caches into the pools
+# --------------------------------------------------------------------------
+
+_POOL_FIELDS = ("kw", "k_scale", "k_zero", "vw", "v_scale", "v_zero")
+
+
+def adopt_prefill(
+    paged_caches: list,
+    dense_caches: list,
+    *,
+    slot_ids: list[int],
+    lengths: list[int],
+    pages_per_req: list[list[int]],
+    block_n: int,
+) -> list:
+    """Splice one bucketed prefill into the paged decode state.
+
+    ``paged_caches`` / ``dense_caches``: the per-stack layer-stacked cache
+    lists (``state["caches"]``) of the engine's paged state and of the
+    just-computed dense prefill (batch = the padded bucket; request ``r``
+    occupies row ``r``).  Per request: its first ``lengths[r] // block_n``
+    dense packed blocks scatter into pool pages ``pages_per_req[r]``, its
+    residual row and occupancy counters copy into decode slot
+    ``slot_ids[r]``.  Dense blocks beyond ``pack_blocks`` (right-pad
+    pollution) are not copied.  Returns the updated paged cache list; page
+    tables are pushed separately (:func:`set_page_tables`).
+    """
+    rows, blks, pages = [], [], []
+    for r, pgs in enumerate(pages_per_req):
+        for j, pg in enumerate(pgs):
+            rows.append(r)
+            blks.append(j)
+            pages.append(pg)
+    sidx = jnp.asarray(slot_ids, jnp.int32)
+    rrow = jnp.arange(len(slot_ids), dtype=jnp.int32)
+    pack = jnp.asarray([ln // block_n for ln in lengths], jnp.int32)
+    res = jnp.asarray([ln % block_n for ln in lengths], jnp.int32)
+
+    out = []
+    for pc, dc in zip(paged_caches, dense_caches):
+        upd = {}
+        if rows:
+            ridx = jnp.asarray(rows, jnp.int32)
+            bidx = jnp.asarray(blks, jnp.int32)
+            pidx = jnp.asarray(pages, jnp.int32)
+            for f in _POOL_FIELDS:
+                pool = getattr(pc, f)
+                dn = getattr(dc, f)
+                # dn [L, m, H, nb, ...]; advanced idx at dims (1, 3) -> [N, L, H, ...]
+                blocks = dn[:, ridx, :, bidx]
+                upd[f] = pool.at[:, pidx].set(
+                    jnp.moveaxis(blocks, 0, 1).astype(pool.dtype)
+                )
+        upd["k_res"] = pc.k_res.at[:, sidx].set(
+            dc.k_res[:, rrow].astype(pc.k_res.dtype))
+        upd["v_res"] = pc.v_res.at[:, sidx].set(
+            dc.v_res[:, rrow].astype(pc.v_res.dtype))
+        upd["pack_blocks"] = pc.pack_blocks.at[:, sidx].set(pack)
+        upd["res_len"] = pc.res_len.at[:, sidx].set(res)
+        out.append(dataclasses.replace(pc, **upd))
+    return out
+
+
+def set_page_tables(paged_caches: list, table: np.ndarray) -> list:
+    """Push the host page table ([B, nb_max] int32) into every stacked paged
+    cache (broadcast along the layer dims — all layers share one table)."""
+    t = jnp.asarray(table, jnp.int32)
+    return [
+        dataclasses.replace(
+            pc, page_table=jnp.broadcast_to(t, pc.page_table.shape)
+        )
+        for pc in paged_caches
+    ]

@@ -1,0 +1,168 @@
+"""Continuous-batching scheduler: request lifecycle + bucketed admission.
+
+Request lifecycle (the serving subsystem's state machine):
+
+```
+ submit()            admit()               prefill adopted        retire
+WAITING ──────────► PREFILL ─────────────► DECODE ──────────────► DONE
+   ▲  (slot free AND pages reservable)                │
+   └──────────────── backpressure ◄───────────────────┘
+        (pool cannot reserve worst-case pages          (completion frees
+         -> request stays queued, FIFO)                 pages + reservation)
+```
+
+Admission is strict FIFO: the head of the waiting queue is admitted when a
+decode slot is free *and* the page pool can reserve its worst-case page
+count ``(prompt_len + max_new_tokens) // block_n``; if the head cannot be
+admitted nothing behind it is (no starvation, deterministic order).  The
+reservation makes decode-time page allocation infallible — steady state
+never preempts.
+
+Prompts admitted in the same cycle are grouped into *length buckets*
+(powers of two ≥ ``min_bucket``) and right-padded to the bucket length so
+each bucket is one jitted prefill call; the jit cache then keys on the
+bucket length alone, so a serving lifetime compiles one prefill per bucket
+instead of one per distinct prompt length.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import deque
+
+import numpy as np
+
+from repro.serve.pages import PagePool
+
+
+class Phase(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int = 32
+    out_tokens: list = dataclasses.field(default_factory=list)
+    # ---- lifecycle, managed by the scheduler/engine ----
+    phase: Phase = Phase.WAITING
+    slot: int | None = None
+    pages: list = dataclasses.field(default_factory=list)
+    pos: int = 0                 # cached tokens so far (host mirror)
+    reserved_pages: int = 0
+    arrival_s: float = 0.0       # virtual arrival time (bench offered-load)
+    token_latencies_s: list = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        """Derived from the lifecycle phase (single source of truth)."""
+        return self.phase == Phase.DONE
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    def pages_needed(self, block_n: int) -> int:
+        """Worst-case committed blocks over the request's lifetime: the cache
+        holds ``prompt_len + max_new_tokens`` tokens when it retires."""
+        return (self.prompt_len + self.max_new_tokens) // block_n
+
+
+def bucket_for(n: int, *, min_bucket: int = 16) -> int:
+    """Smallest power-of-two bucket >= max(n, min_bucket)."""
+    b = min_bucket
+    while b < n:
+        b *= 2
+    return b
+
+
+class Scheduler:
+    """Continuous-batching admission over a fixed slot set and a PagePool."""
+
+    def __init__(self, *, slots: int, pool: PagePool | None, block_n: int,
+                 max_seq: int, min_bucket: int = 16):
+        self.slots = slots
+        self.pool = pool
+        self.block_n = block_n
+        self.max_seq = max_seq
+        self.min_bucket = min_bucket
+        self.waiting: deque[Request] = deque()
+        self.active: dict[int, Request] = {}  # slot -> request
+        self.stats = {
+            "submitted": 0,
+            "admitted": 0,
+            "completed": 0,
+            "backpressure_events": 0,
+        }
+
+    # ------------------------------------------------------------ queue
+
+    def submit(self, req: Request) -> None:
+        if req.prompt_len + req.max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"request {req.uid}: prompt_len={req.prompt_len} + "
+                f"max_new_tokens={req.max_new_tokens} exceeds max_seq="
+                f"{self.max_seq}"
+            )
+        need = req.pages_needed(self.block_n)
+        if self.pool is not None and need > self.pool.capacity:
+            raise ValueError(
+                f"request {req.uid} needs {need} pages but the pool holds "
+                f"{self.pool.capacity} — it could never be admitted"
+            )
+        req.phase = Phase.WAITING
+        self.waiting.append(req)
+        self.stats["submitted"] += 1
+
+    def free_slots(self) -> list[int]:
+        return [i for i in range(self.slots) if i not in self.active]
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.active)
+
+    # --------------------------------------------------------- admission
+
+    def admit(self) -> dict[int, list[Request]]:
+        """Admit waiting requests (strict FIFO) into free slots while the
+        pool can reserve their worst-case pages; returns the admitted
+        requests grouped by prefill bucket length, in admission order."""
+        free = self.free_slots()
+        groups: dict[int, list[Request]] = {}
+        while self.waiting and free:
+            req = self.waiting[0]
+            need = req.pages_needed(self.block_n)
+            if self.pool is not None and not self.pool.reserve(need):
+                self.stats["backpressure_events"] += 1
+                break  # strict FIFO: nothing overtakes the head
+            self.waiting.popleft()
+            req.reserved_pages = need
+            req.slot = free.pop(0)
+            req.phase = Phase.PREFILL
+            req.pos = 0
+            self.active[req.slot] = req
+            self.stats["admitted"] += 1
+            bucket = bucket_for(req.prompt_len, min_bucket=self.min_bucket)
+            groups.setdefault(bucket, []).append(req)
+        return groups
+
+    # -------------------------------------------------------- retirement
+
+    def complete(self, req: Request) -> None:
+        """Retire a request: free its pages (refcounted), return its
+        reservation, release its slot."""
+        if self.pool is not None:
+            for page in req.pages:
+                self.pool.free(page)
+            self.pool.release(req.reserved_pages)
+        req.pages = []
+        req.reserved_pages = 0
+        if req.slot is not None:
+            self.active.pop(req.slot, None)
+        req.slot = None
+        req.phase = Phase.DONE
+        self.stats["completed"] += 1

@@ -36,6 +36,60 @@ SCRIPT = textwrap.dedent(
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-2, atol=2e-2)
     print("OK splitkv")
 
+    # ---------------- paged split-KV (sharded page-table walk) ---------
+    import dataclasses
+    from repro.dist.splitkv import splitkv_paged_decode_attention
+
+    NP = B + B * NBLK
+    pcache = qcache.init_paged_cache(NP, B, H, D, NBLK, bits=8, block_n=BLOCK)
+    table = np.asarray(pcache.page_table).copy()
+    pools = {f: np.asarray(getattr(pcache, f)).copy()
+             for f in ("kw", "k_scale", "k_zero", "vw", "v_scale", "v_zero")}
+    for b in range(B):
+        for j in range(NBLK):
+            p = B + b * NBLK + j
+            table[b, j] = p
+            for f in pools:
+                pools[f][p] = np.asarray(getattr(cache, f))[b, :, j]
+    pcache = dataclasses.replace(
+        pcache, page_table=jnp.asarray(table),
+        k_res=cache.k_res, v_res=cache.v_res,
+        pack_blocks=cache.pack_blocks, res_len=cache.res_len,
+        **{f: jnp.asarray(a) for f, a in pools.items()})
+    pref = catt.decode_attention(q, pcache, impl="xla")
+    np.testing.assert_allclose(np.asarray(pref), np.asarray(ref), rtol=2e-2, atol=2e-2)
+    with jax.set_mesh(mesh):
+        pout = splitkv_paged_decode_attention(q, pcache, mesh, axis="data", impl="xla")
+        # and through the engine-facing use_splitkv route
+        with catt.use_splitkv(mesh, "data"):
+            pout2 = catt.decode_attention(q, pcache, impl="xla")
+    np.testing.assert_allclose(np.asarray(pout), np.asarray(ref), rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(pout2), np.asarray(ref), rtol=2e-2, atol=2e-2)
+    print("OK paged splitkv")
+
+    # ------- mesh-aligned cache allocation (pad-free splitkv path) -----
+    from repro.configs.base import smoke_config
+    from repro.models.zoo import build_model
+    from repro.dist.state_specs import decode_state_specs
+    from jax.sharding import NamedSharding
+
+    cfgm = smoke_config("llama3-8b")
+    modelm = build_model(cfgm)
+    # 5 blocks of kv_block tokens would give nb=5; the data axis (4) must
+    # round it to 8 so dist.splitkv's per-call zero-pad is never taken
+    stm = modelm.init_decode_state(4, 5 * cfgm.kv_block, mesh=mesh,
+                                   splitkv_axis="data")
+    nb = stm["caches"][0].kw.shape[3]
+    assert nb % mesh.shape["data"] == 0, nb
+    # paged state specs are legal NamedShardings (batch/blocks don't collide)
+    specs = decode_state_specs(modelm, mesh, global_batch=4, seq_ax="data",
+                               paged=True)
+    jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if s is not None else None, specs,
+        is_leaf=lambda x: x is None,
+    )
+    print("OK mesh-aligned alloc")
+
     # ---------------- small-mesh train step lowers+compiles -----------
     from repro.configs.base import smoke_config
     from repro.models.zoo import build_model
@@ -104,6 +158,7 @@ def test_distributed_suite():
         timeout=1200,
     )
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
-    for marker in ("OK splitkv", "OK train lower 8dev", "OK train run 8dev",
+    for marker in ("OK splitkv", "OK paged splitkv", "OK mesh-aligned alloc",
+                   "OK train lower 8dev", "OK train run 8dev",
                    "OK grad compression"):
         assert marker in r.stdout, f"missing {marker}:\n{r.stdout}\n{r.stderr}"
