@@ -1,15 +1,19 @@
-"""Serving-throughput sweep for the paged continuous-batching engine.
+"""Serving-throughput sweeps for the paged continuous-batching engine.
 
-Offered-load model: requests arrive on a virtual clock (the measured engine
-wall time) at a configured rate with a prompt-length mix; the engine admits
-them through the scheduler as slots and pool pages free up.  Each
-(rate x mix) cell reports end-to-end tokens/s, per-token latency percentiles
-(p50/p99 over per-cycle wall time attributed to every token decoded in that
-cycle), scheduler backpressure counts, and page-pool occupancy — the
-serving-throughput trajectory is appended to BENCH_serve.json so future PRs
-can track it.
+Two sweeps, both appending to BENCH_serve.json so future PRs track them:
 
-CPU smoke scale by default; the same sweep runs unchanged on TPU.
+* **offered load** (default): requests arrive on a virtual clock (the
+  measured engine wall time) at a configured rate with a prompt-length mix;
+  each (rate x mix) cell reports end-to-end tokens/s, per-token latency
+  percentiles, scheduler backpressure counts, and page-pool occupancy.
+* **shared prefix** (``--shared-prefix``): a shared-fraction x prompt-length
+  grid where every request's prompt begins with a common template prefix;
+  each cell reports the prefix-index hit rate, prefill tokens actually
+  computed vs. served from resident pages, pool pages used with vs. without
+  sharing, and copy-on-write counts — the serving face of the prefix-sharing
+  tentpole (docs/SERVING.md §4-5).
+
+CPU smoke scale by default; the same sweeps run unchanged on TPU.
 """
 from __future__ import annotations
 
@@ -109,20 +113,107 @@ def run_serve_sweep(*, n_requests=8, max_new=8, slots=4, max_seq=256,
                 f";occ_max={rec['occupancy_max']};prefills={rec['prefill_calls']}",
             )
     out_path = _BENCH_SERVE if out_path is None else out_path
+    _append(out_path, {"backend": jax.default_backend(), "records": records})
+    return records
+
+
+def _append(out_path: Path, entry: dict) -> None:
     history = []
     if out_path.exists():
         try:
             history = json.loads(out_path.read_text())
         except json.JSONDecodeError:
             history = []
-    history.append({"backend": jax.default_backend(), "records": records})
+    history.append(entry)
     out_path.write_text(json.dumps(history, indent=2) + "\n")
+
+
+def run_shared_prefix_sweep(*, shared_fracs=(0.0, 0.5, 0.9),
+                            prompt_lens=(64, 128), n_requests=6, max_new=6,
+                            slots=4, max_seq=256,
+                            out_path: Path | None = None):
+    """Shared-fraction x prompt-length grid through the prefix-sharing
+    engine: every request's prompt starts with the same template prefix of
+    ``frac * plen`` tokens (rounded down to whole ``kv_block`` blocks — the
+    sharing granularity), followed by a private tail.  The first request is
+    admitted alone so its pages register before the rest arrive (sharing is
+    cross-cycle by design, docs/SERVING.md §4)."""
+    cfg = smoke_config("llama3-8b").with_(kv_bits=4, kv_block=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    records = []
+    for plen in prompt_lens:
+        for frac in shared_fracs:
+            rng = np.random.default_rng(
+                zlib.crc32(f"shared:{plen}:{frac}".encode())
+            )
+            shared_len = int(frac * plen) // cfg.kv_block * cfg.kv_block
+            prefix = rng.integers(0, cfg.vocab, shared_len).astype(np.int32)
+            reqs = [
+                Request(
+                    uid=i,
+                    prompt=np.concatenate([
+                        prefix,
+                        rng.integers(0, cfg.vocab, plen - shared_len).astype(np.int32),
+                    ]),
+                    max_new_tokens=max_new,
+                )
+                for i in range(n_requests)
+            ]
+            engine = ServeEngine(model, params, slots=slots, max_seq=max_seq)
+            import time as _time
+
+            t0 = _time.perf_counter()
+            engine.submit(reqs[0])
+            engine.step()  # register the template prefix
+            for r in reqs[1:]:
+                engine.submit(r)
+            engine.run()
+            stats = engine.summary(wall_s=_time.perf_counter() - t0)
+            rec = {
+                "prompt_len": plen,
+                "shared_frac": frac,
+                "shared_blocks": shared_len // cfg.kv_block,
+                "n_requests": n_requests,
+                "prefill_tokens": stats["prefill_tokens"],
+                "prefill_tokens_saved": stats["prefill_tokens_saved"],
+                "prefix_hit_rate": round(stats["prefix_hit_rate"], 4),
+                "prefix_hit_requests": stats["sched_prefix_hit_requests"],
+                "spec_tail_adoptions": stats["sched_spec_tail_adoptions"],
+                "cow_copies": stats["cow_copies"],
+                "tokens_per_s": round(stats["tokens_per_s"], 2),
+                "occupancy_max": round(stats["occupancy_max"], 4),
+            }
+            records.append(rec)
+            emit(
+                f"serve.shared.L{plen}.f{frac:g}",
+                stats["prefill_tokens"],
+                f"saved={rec['prefill_tokens_saved']}"
+                f";hit_rate={rec['prefix_hit_rate']}"
+                f";cow={rec['cow_copies']};tok/s={rec['tokens_per_s']}",
+            )
+    out_path = _BENCH_SERVE if out_path is None else out_path
+    _append(out_path, {
+        "backend": jax.default_backend(),
+        "sweep": "shared_prefix",
+        "records": records,
+    })
     return records
 
 
 def run():
     run_serve_sweep()
+    run_shared_prefix_sweep()
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="run only the shared-prefix grid")
+    args = ap.parse_args()
+    if args.shared_prefix:
+        run_shared_prefix_sweep()
+    else:
+        run()

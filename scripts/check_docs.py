@@ -1,23 +1,40 @@
 #!/usr/bin/env python
-"""Docs-drift check: README's kernel-family inventory must match the actual
-kernel directories under src/repro/kernels/.
+"""Docs-drift check: the docs surface must track the code it describes.
 
-A kernel family counts as documented when README.md's "Kernel families"
-table has a row whose first cell is the backtick-quoted directory name.
+Checks:
+
+* README's "Kernel families" table rows match the actual kernel directories
+  under src/repro/kernels/;
+* docs/SERVING.md's backticked dotted ``repro.*`` symbol references resolve
+  to real attributes (import + getattr walk);
+* docs/SERVING.md's "Engine flags" table rows are real keyword parameters
+  of ``ServeEngine.__init__``;
+* docs/SERVING.md's counter table rows appear as string literals in the
+  serving sources (engine.py / scheduler.py), modulo the ``sched_`` prefix
+  the engine adds when folding scheduler stats into ``summary()``.
+
 Run directly (exit 1 on drift) or via tests/test_docs.py in the tier-1
 suite.
 """
 from __future__ import annotations
 
+import importlib
+import inspect
 import re
 import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 README = REPO / "README.md"
+SERVING = REPO / "docs" / "SERVING.md"
 KERNELS = REPO / "src" / "repro" / "kernels"
+SERVE_SRC = REPO / "src" / "repro" / "serve"
 
 _ROW = re.compile(r"^\|\s*`([A-Za-z0-9_]+)`\s*\|")
+_DOTTED = re.compile(r"`(repro\.[A-Za-z0-9_.]+)`")
+
+if str(REPO / "src") not in sys.path:
+    sys.path.insert(0, str(REPO / "src"))
 
 
 def kernel_dirs() -> set[str]:
@@ -46,6 +63,74 @@ def documented_families(readme_text: str) -> set[str]:
     return fams
 
 
+def serving_symbols(text: str) -> set[str]:
+    """Backticked dotted ``repro.*`` references in docs/SERVING.md."""
+    return {m.group(1) for m in _DOTTED.finditer(text)}
+
+
+def resolve_symbol(dotted: str) -> bool:
+    """Import the longest importable module prefix, then getattr-walk."""
+    parts = dotted.split(".")
+    for split in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:split]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[split:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+def table_rows(text: str, heading_match: str) -> set[str]:
+    """Backtick-named first cells of table rows under a heading whose line
+    contains ``heading_match`` (up to the next heading)."""
+    rows: set[str] = set()
+    in_section = False
+    for line in text.splitlines():
+        if line.startswith("#"):
+            in_section = heading_match.lower() in line.lower()
+            continue
+        if in_section:
+            m = _ROW.match(line)
+            if m:
+                rows.add(m.group(1))
+    return rows
+
+
+def check_serving(text: str) -> list[str]:
+    """Drift errors for docs/SERVING.md against the serving sources."""
+    errors = []
+    for sym in sorted(serving_symbols(text)):
+        if not resolve_symbol(sym):
+            errors.append(f"docs/SERVING.md references `{sym}` which does "
+                          "not resolve to a repro symbol")
+    from repro.serve.engine import ServeEngine
+
+    params = set(inspect.signature(ServeEngine.__init__).parameters)
+    flags = table_rows(text, "Engine flags")
+    if not flags:
+        errors.append("docs/SERVING.md has no 'Engine flags' table rows")
+    for flag in sorted(flags - params):
+        errors.append(f"docs/SERVING.md documents engine flag `{flag}` but "
+                      "ServeEngine.__init__ has no such parameter")
+    serve_src = "".join(
+        (SERVE_SRC / f).read_text() for f in ("engine.py", "scheduler.py")
+    )
+    counters = table_rows(text, "counters")
+    if not counters:
+        errors.append("docs/SERVING.md has no counter table rows")
+    for c in sorted(counters):
+        bare = c.removeprefix("sched_")
+        if c not in serve_src and bare not in serve_src:
+            errors.append(f"docs/SERVING.md documents counter `{c}` which "
+                          "appears nowhere in the serving sources")
+    return errors
+
+
 def check() -> list[str]:
     """Returns a list of human-readable drift errors (empty == in sync)."""
     errors = []
@@ -65,6 +150,10 @@ def check() -> list[str]:
             f"README.md documents kernel family `{name}` but "
             f"src/repro/kernels/{name}/ does not exist"
         )
+    if not SERVING.exists():
+        errors.append("missing docs/SERVING.md")
+    else:
+        errors.extend(check_serving(SERVING.read_text()))
     return errors
 
 
@@ -73,7 +162,11 @@ def main() -> int:
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     if not errors:
-        print(f"check_docs: OK ({len(kernel_dirs())} kernel families in sync)")
+        print(
+            f"check_docs: OK ({len(kernel_dirs())} kernel families, "
+            f"{len(serving_symbols(SERVING.read_text()))} serving symbols, "
+            "engine flags + counters in sync)"
+        )
     return 1 if errors else 0
 
 

@@ -2,8 +2,11 @@
 # Tier-1 verification: the invariant every PR keeps green.
 #   scripts/run_tier1.sh [extra pytest args]
 # Runs the full test suite (PYTHONPATH=src, fail-fast, quiet) followed by the
-# docs-drift check.  CI (.github/workflows/ci.yml) calls exactly this script,
-# so local and CI runs cannot diverge.
+# docs-drift check (README kernel inventory + docs/SERVING.md symbol/flag/
+# counter sync).  The suite includes the serving gates: tests/test_serve_paged.py
+# (paged engine) and tests/test_serve_prefix.py (prefix sharing + COW parity).
+# CI (.github/workflows/ci.yml) calls exactly this script, so local and CI
+# runs cannot diverge.
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"

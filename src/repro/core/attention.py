@@ -184,6 +184,66 @@ def decode_append_attention(
     return decode_attention(q, cache, **attn_kwargs), cache
 
 
+def prefix_suffix_attention(
+    q: jax.Array,        # [B, S, h_q, d_k]  suffix queries
+    k: jax.Array,        # [B, S, h_kv, d_k] suffix keys
+    v: jax.Array,        # [B, S, h_kv, d_v] suffix values
+    k_prior: jax.Array,  # [B, T, h_kv, d_k] shared-prefix keys (right-padded)
+    v_prior: jax.Array,  # [B, T, h_kv, d_v]
+    prior_len: jax.Array,  # [B] int32 — valid prior tokens per sequence
+    *,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Causal attention for a prompt *suffix* against a materialized prefix.
+
+    The shared-prefix prefill path (serve engine → ``DecoderLM.prefill`` with
+    ``prior=``) computes fresh Q/K/V only for the divergent suffix tokens;
+    their attention must still cover the shared leading blocks, which arrive
+    here as dequantized pool pages (``qcache.dequant_prior``).  Suffix query
+    row ``j`` (global position ``prior_len[b] + j``) attends prior columns
+    ``< prior_len[b]`` plus suffix columns ``<= j`` — exactly the rows
+    ``[prior_len, prior_len + S)`` of full causal attention over the
+    concatenated sequence, so with a *raw* prior this is bitwise the tail of
+    :func:`blockwise_attention` (asserted in tests/test_serve_prefix.py).
+
+    Ragged prior: rows are right-padded to a common ``T`` and masked by
+    ``prior_len`` — mixed share counts batch into one call.  Pure-jnp with an
+    O(S·(T+S)) score tile; prefill-rate bound at serving bucket sizes
+    (a flash_prefill suffix mode is the ROADMAP residue).
+    """
+    b, s, h_q, d_k = q.shape
+    t = k_prior.shape[1]
+    h_kv = k.shape[2]
+    g = h_q // h_kv
+    d_v = v.shape[-1]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d_k**0.5)
+    qg = q.reshape(b, s, h_kv, g, d_k).astype(jnp.bfloat16)
+    kcat = jnp.concatenate([k_prior, k], axis=1).astype(jnp.bfloat16)
+    vcat = jnp.concatenate([v_prior, v], axis=1).astype(jnp.bfloat16)
+    scores = (
+        jnp.einsum(
+            "bshgd,bthd->bhsgt", qg, kcat,
+            preferred_element_type=jnp.float32,
+        )
+        * sm_scale
+    )  # [B, h_kv, S, g, T+S]
+    cols = jnp.arange(t + s, dtype=jnp.int32)
+    rows = jnp.arange(s, dtype=jnp.int32)
+    in_prior = (cols[None, None, :] < prior_len[:, None, None]) & (
+        cols[None, None, :] < t
+    )  # [B, 1, T+S]
+    in_suffix = (cols[None, :] >= t) & (cols[None, :] - t <= rows[:, None])
+    valid = in_prior | in_suffix[None]  # [B, S, T+S]
+    scores = jnp.where(valid[:, None, :, None, :], scores, MASK_VALUE)
+    p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum(
+        "bhsgt,bthd->bshgd", p.astype(jnp.bfloat16), vcat,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, s, h_q, d_v)
+
+
 def blockwise_attention(
     q: jax.Array,  # [B, S, h_q, d_k]
     k: jax.Array,  # [B, T, h_kv, d_k]

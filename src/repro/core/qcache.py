@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import layout
+from repro.core import layout, quantizer
 from repro.kernels.kv_quant import ops as kvq_ops
 from repro.kernels.residual_flush import ops as rf_ops
 
@@ -468,6 +468,102 @@ def paged_append_decode(
         pack_blocks=jnp.where(full, cache.pack_blocks + 1, cache.pack_blocks),
         res_len=jnp.where(full, 0, rl),
     )
+
+
+# Pool fields of the paged cache, in dataclass order, with the rank each has
+# before any model-stacking dims are prepended (the serving engine stacks a
+# leading layer axis; serve/pages.py indexes pages at axis 1 accordingly).
+_PAGED_POOL_FIELDS = ("kw", "k_scale", "k_zero", "vw", "v_scale", "v_zero")
+_PAGED_POOL_BASE_RANK = {
+    "kw": 4, "k_scale": 3, "k_zero": 3, "vw": 4, "v_scale": 3, "v_zero": 3,
+}
+
+
+def _page_axis(arr, field: str) -> int:
+    """Page-pool axis of a (possibly layer-stacked) pool field."""
+    return arr.ndim - _PAGED_POOL_BASE_RANK[field]
+
+
+def copy_pages(
+    cache: PagedQuantKVCache,
+    src: jax.Array,  # int32 [N]
+    dst: jax.Array,  # int32 [N], pairwise distinct, disjoint from src
+) -> PagedQuantKVCache:
+    """Device-side pool-page copy — the copy-on-write primitive.
+
+    Every ``dst[i]`` page becomes a bitwise replica of ``src[i]`` across all
+    six pool fields (packed words + scale/zero metadata, K and V sides).
+    Works on layer-stacked caches (the serving engine's state) as well as the
+    base layout: the page axis is located from each field's base rank, so the
+    copy moves the page across every stacked layer in one gather+scatter.
+
+    The serving engine calls this when a decode flush is about to land in a
+    page with refcount > 1 (serve/engine.py): the request gets a private
+    replica and only its own page-table column is repointed, so other
+    requests sharing the original page never observe the write.  The copy is
+    deliberately unconditional on what the subsequent write touches — today's
+    only COW site (the residual flush) overwrites the whole block, but the
+    replica contract keeps COW correct for any future partial writer
+    (preemption re-materialization, partial-block adoption).
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    upd = {}
+    for f in _PAGED_POOL_FIELDS:
+        pool = getattr(cache, f)
+        moved = jnp.moveaxis(pool, _page_axis(pool, f), 0)
+        moved = moved.at[dst].set(moved[src])
+        upd[f] = jnp.moveaxis(moved, 0, _page_axis(pool, f))
+    return dataclasses.replace(cache, **upd)
+
+
+def dequant_prior(
+    cache: PagedQuantKVCache,
+    pages: jax.Array,  # int32 [B, J] pool pages (rows right-padded; garbage
+    #                    columns are masked by the caller via prior_len)
+):
+    """Gather pool pages and dequantize them into raw bf16 prior K/V for the
+    shared-prefix suffix prefill.
+
+    Returns ``(k, v)`` shaped ``[*lead, B, J*block_n, H, d]`` (lead = the
+    cache's stacking dims, e.g. the layer axis) in natural token order —
+    the layout :func:`repro.core.attention.prefix_suffix_attention` takes as
+    ``k_prior``/``v_prior``.  Pool K is stored post-RoPE, so the dequantized
+    prior needs no position re-application; the numeric contract is that
+    suffix tokens see the shared prefix exactly as decode attention would
+    (dequantized), which is the same approximation the paper's decode path
+    already makes.
+    """
+    pages = jnp.asarray(pages, jnp.int32)
+
+    def gather(field: str):
+        arr = getattr(cache, field)
+        return jnp.moveaxis(arr, _page_axis(arr, field), 0)[pages]
+
+    def dq(words, scale, zero, gran: str):
+        # words [B, J, *lead, H, npr, d] -> [B, J, *lead, H, block_n, d];
+        # one shared dequant path with the kernels' oracles, so prefix
+        # sharing can never diverge numerically from decode attention
+        return quantizer.unpack_and_dequantize(
+            words, scale, zero, cache.bits, gran, dtype=jnp.bfloat16
+        )
+
+    k = dq(gather("kw"), gather("k_scale"), gather("k_zero"), cache.k_gran)
+    v = dq(gather("vw"), gather("v_scale"), gather("v_zero"), "tensor")
+
+    def to_prior(x):
+        # [B, J, *lead, H, n, d] -> [*lead, B, J*n, H, d]
+        b, j = x.shape[0], x.shape[1]
+        h, n, d = x.shape[-3], x.shape[-2], x.shape[-1]
+        lead = x.shape[2:-3]
+        perm = (
+            tuple(range(2, 2 + len(lead)))  # lead dims first
+            + (0, 1, x.ndim - 2, x.ndim - 3, x.ndim - 1)  # B, J, n, H, d
+        )
+        x = jnp.transpose(x, perm)
+        return x.reshape(*lead, b, j * n, h, d).astype(jnp.bfloat16)
+
+    return to_prior(k), to_prior(v)
 
 
 def _quantize_full_region(cache, k, v, n_full: int, quant_impl: str) -> dict:

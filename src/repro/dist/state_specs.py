@@ -57,7 +57,11 @@ _CACHE_FIELD_ROLES = {
 # scattered arbitrarily, only the table *walk* is sequence-parallel — see
 # dist.splitkv.splitkv_paged_decode_attention) and shard KV heads over
 # "model"; the page_table columns carry the "blocks" role so the at-rest
-# placement matches the sharded walk.
+# placement matches the sharded walk.  Prefix sharing rides this placement
+# unchanged: a shared page id may appear in several table rows (or twice in
+# one row's shard), and because every chip holds the full pools each shard
+# dereferences it locally — sharing needs no cross-chip coordination, and
+# copy-on-write repoints are plain table updates under the same spec.
 _PAGED_FIELD_ROLES = {
     "kw": (4, {1: "heads"}),
     "k_scale": (3, {1: "heads"}),

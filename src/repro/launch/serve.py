@@ -38,6 +38,12 @@ def main():
                     help="force the legacy dense slot engine")
     ap.add_argument("--splitkv", choices=("auto", "always", "never"),
                     default="auto", help="cross-chip split-KV routing policy")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="give every prompt a common template prefix of this "
+                         "many tokens so the prefix index reuses resident "
+                         "pages (docs/SERVING.md)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable the scheduler's prompt-prefix index")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -47,20 +53,39 @@ def main():
     engine = ServeEngine(
         model, params, slots=args.slots, max_seq=args.max_seq,
         paged=False if args.dense else None, n_pages=args.pages,
-        splitkv=args.splitkv,
+        splitkv=args.splitkv, share_prefix=not args.no_prefix_sharing,
     )
     print(f"[serve] engine mode: {'paged' if engine.paged else 'dense'}"
           + (f", pool={engine.n_pages} pages" if engine.paged else ""))
 
     rng = np.random.default_rng(0)
+    sharing_demo = (
+        engine.paged and not args.no_prefix_sharing
+        and args.shared_prefix_len > 0
+    )
+    shared_len = min(args.shared_prefix_len, args.prompt_len)
+    prefix = rng.integers(0, cfg.vocab, shared_len).astype(np.int32)
     for uid in range(args.requests):
+        tail = rng.integers(
+            0, cfg.vocab, args.prompt_len - shared_len
+        ).astype(np.int32)
+        # sharing demo: stagger completions (real traffic never retires in
+        # lockstep) so request lifetimes overlap and the prefix index keeps
+        # live donors — pages are discoverable only while a holder is
+        # resident.  Without sharing, keep the legacy fixed --max-new.
         engine.submit(Request(
             uid=uid,
-            prompt=rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32),
-            max_new_tokens=args.max_new,
+            prompt=np.concatenate([prefix, tail]),
+            max_new_tokens=args.max_new + (uid % 3 if sharing_demo else 0),
         ))
     stats = engine.run()
     print(f"[serve] {stats}")
+    if engine.paged and not args.no_prefix_sharing:
+        print(
+            f"[serve] prefix sharing: hit_rate={stats['prefix_hit_rate']:.3f}"
+            f" prefill_tokens_saved={stats['prefill_tokens_saved']}"
+            f" cow_copies={stats['cow_copies']}"
+        )
 
 
 if __name__ == "__main__":

@@ -65,16 +65,30 @@ def attn_train(p, cfg, x, positions, *, causal=True):
 
 
 def attn_prefill_cache(p, cfg, x, positions, max_seq: int, *, quant_impl="auto",
-                       lengths=None, block_align=None):
+                       lengths=None, block_align=None, prior=None,
+                       prior_len=None):
     """Run train attention AND build the quantized cache from the prefill K/V.
 
     ``lengths`` ([B] int32, optional) marks a ragged right-padded batch (the
     serve scheduler's bucketed prefill): per-sequence cache occupancy follows
     the true lengths, pad rows never become valid cache content.
     ``block_align`` rounds the cache's packed-block capacity up (mesh-aligned
-    allocation for split-KV)."""
+    allocation for split-KV).
+
+    ``prior`` (optional ``(k_prior, v_prior)``, each ``[B, T, H, d]``) marks a
+    *suffix* prefill (prefix sharing): ``x`` holds only the divergent suffix
+    tokens, whose attention also covers the first ``prior_len[b]`` prior
+    tokens (dequantized shared pool pages, K already RoPE'd — see
+    ``qcache.dequant_prior``).  The built cache holds suffix content only;
+    the serving engine splices it behind the shared pages
+    (``serve.pages.adopt_prefill(base_blocks=...)``).  Callers must pass
+    suffix-global ``positions`` (``prior_len + arange``) so RoPE matches the
+    unshared layout."""
     q, k, v = _qkv(p, cfg, x, positions)
-    out = catt.blockwise_attention(q, k, v, causal=True, block_k=cfg.attn_block_k)
+    if prior is not None:
+        out = catt.prefix_suffix_attention(q, k, v, *prior, prior_len)
+    else:
+        out = catt.blockwise_attention(q, k, v, causal=True, block_k=cfg.attn_block_k)
     cache = qcache.init_cache(
         x.shape[0], cfg.n_kv_heads, cfg.head_dim, max_seq,
         bits=cfg.kv_bits, block_n=cfg.kv_block, k_gran=cfg.kv_gran,

@@ -215,7 +215,7 @@ class DecoderLM:
     # ------------------------------------------------------------ prefill
 
     def _block_prefill(self, p, kind, x, positions, max_seq, lengths=None,
-                       block_align=None):
+                       block_align=None, prior=None, prior_len=None):
         cfg = self.cfg
         h = layers.apply_norm(cfg.norm, p["ln1"], x, plus_one=cfg.rms_plus_one)
         if cfg.mixer == "mla":
@@ -226,7 +226,7 @@ class DecoderLM:
         else:
             a, cache = mattn.attn_prefill_cache(
                 p["attn"], cfg, h, positions, max_seq, lengths=lengths,
-                block_align=block_align,
+                block_align=block_align, prior=prior, prior_len=prior_len,
             )
         if cfg.parallel_residual:
             f = layers.mlp(p["mlp"], h, cfg.act) if kind == "mlp" else 0.0
@@ -239,7 +239,7 @@ class DecoderLM:
         return x, cache
 
     def prefill(self, params, batch, max_seq: int, *, lengths=None,
-                block_align=None):
+                block_align=None, prior=None, prior_len=None):
         """Process the prompt, build quantized caches, return (last_logits, state).
 
         ``lengths`` ([B] int32, optional): the batch is ragged — same-bucket
@@ -249,20 +249,59 @@ class DecoderLM:
         (``qcache.prefill``), and the returned logits are gathered at each
         sequence's last *real* token instead of the padded tail.
         ``block_align`` propagates mesh-aligned block allocation (split-KV).
+
+        ``prior`` / ``prior_len`` turn this into a *suffix* prefill (prefix
+        sharing, serve engine): ``batch["tokens"]`` holds only the divergent
+        suffix of each prompt; ``prior`` is a per-stack list of
+        ``(k_prior, v_prior)`` pairs (``[layers, B, T, H, d]``, dequantized
+        shared pool pages) whose first ``prior_len[b]`` tokens the suffix
+        attends through :func:`~repro.core.attention.prefix_suffix_attention`.
+        Token positions (RoPE) are offset by ``prior_len`` so the suffix lands
+        at its unshared global positions; the returned caches hold *suffix*
+        content only and ``pos`` counts ``prior_len + lengths``.  Requires the
+        plain-attention path (no MLA / vision / M-RoPE — the same models the
+        paged serving engine accepts).
         """
         cfg = self.cfg
+        if prior is not None:
+            if cfg.mixer != "attn" or cfg.vision_stub or cfg.mrope_sections:
+                raise ValueError(
+                    "suffix prefill (prior=) requires plain attention "
+                    "without vision/M-RoPE fronts"
+                )
+            if lengths is None or prior_len is None:
+                raise ValueError("suffix prefill needs lengths and prior_len")
         x, positions = self._embed(params, batch)
+        if prior is not None:
+            positions = prior_len[:, None] + jnp.arange(
+                x.shape[1], dtype=jnp.int32
+            )[None]
         n_lead = cfg.n_patches if cfg.vision_stub else 0  # patch prefix offset
         cache_lengths = None if lengths is None else lengths + n_lead
         caches = []
         for i, (kind, _) in enumerate(self.stacks):
-            def body(x, lp, _kind=kind):
-                x, cache = self._block_prefill(
-                    lp, _kind, x, positions, max_seq, cache_lengths, block_align
-                )
-                return x, cache
+            if prior is None:
+                def body(x, lp, _kind=kind):
+                    x, cache = self._block_prefill(
+                        lp, _kind, x, positions, max_seq, cache_lengths,
+                        block_align
+                    )
+                    return x, cache
 
-            x, cache_stack = lax.scan(body, x, params[f"stack_{i}"])
+                x, cache_stack = lax.scan(body, x, params[f"stack_{i}"])
+            else:
+                def body_p(x, xs, _kind=kind):
+                    lp, kp, vp = xs
+                    x, cache = self._block_prefill(
+                        lp, _kind, x, positions, max_seq, cache_lengths,
+                        block_align, prior=(kp, vp), prior_len=prior_len,
+                    )
+                    return x, cache
+
+                kp_i, vp_i = prior[i]
+                x, cache_stack = lax.scan(
+                    body_p, x, (params[f"stack_{i}"], kp_i, vp_i)
+                )
             caches.append(cache_stack)
         if lengths is None:
             logits = self._logits(params, x[:, -1:])
@@ -272,6 +311,8 @@ class DecoderLM:
             x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
             logits = self._logits(params, x_last)
             pos = (n_lead + lengths).astype(jnp.int32)
+            if prior_len is not None:
+                pos = pos + prior_len.astype(jnp.int32)
         state = {"caches": caches, "pos": pos}
         return logits, state
 

@@ -14,19 +14,33 @@ The engine composes the three serving-layer pieces into the per-cycle loop:
 
 One cycle (:meth:`ServeEngine.step`):
 
-1. admit waiting requests into free slots; run **one jitted prefill per
-   length bucket** (prompts right-padded to the bucket, batch padded to the
-   slot count, so the jit cache keys on the bucket length only) and adopt
-   the resulting dense blocks into the pools at freshly allocated pages;
+1. admit waiting requests into free slots; the scheduler's prefix index
+   maps each prompt's shared leading blocks onto resident pool pages
+   (retained, counted once — see serve/scheduler.py), and **one jitted
+   prefill per divergent-suffix length bucket** computes only the unshared
+   tail of each prompt (suffix tokens attend the dequantized shared prefix
+   via ``model.prefill(prior=...)``; the jit cache keys on the bucket
+   length plus the padded prior width).  The resulting dense suffix blocks
+   adopt into freshly allocated pages *behind* the shared ones
+   (``adopt_prefill(base_blocks=...)``), and the prompt's blocks register
+   in the index for later arrivals;
 2. allocate the destination page for any sequence whose residual fills on
    this step (host mirrors the length counters, so this is exact, and the
-   admission reservation guarantees the allocation succeeds);
+   admission reservation guarantees the allocation succeeds).  If the
+   destination column holds a page with refcount > 1 (a speculative shared
+   tail), **copy-on-write** fires first: a private page is allocated, the
+   shared page's packed block is replicated device-side
+   (``qcache.copy_pages``), and only this request's page-table column is
+   repointed — other holders never observe the flush;
 3. push the page table to the device if it changed, then run one jitted
    batched decode step over all slots — through the cross-chip split-KV
    path when a mesh is attached and the cycle is long-context/low-occupancy
-   (``auto_num_splits`` handles the in-kernel split either way);
+   (``auto_num_splits`` handles the in-kernel split either way; shared
+   pages stay valid there because the pools are replicated and only the
+   table *walk* is sharded — dist/state_specs.py);
 4. collect next tokens host-side, retire finished requests (their pages
-   return to the pool), record per-token latency and pool occupancy.
+   return to the pool once their last holder drops them), record per-token
+   latency, pool occupancy, and prefix-sharing hit counters.
 
 Idle slots keep decoding garbage into their private scratch pages (their
 page-table rows point at scratch, see serve/pages.py) — wasted lanes, never
@@ -46,9 +60,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import attention as catt
+from repro.core import qcache
 from repro.kernels.bitdecode import ops as bd_ops
 from repro.serve import pages as pg
-from repro.serve.scheduler import Phase, Request, Scheduler  # noqa: F401 (re-export)
+from repro.serve.scheduler import (  # noqa: F401 (Phase/Request re-exported)
+    Phase,
+    Request,
+    Scheduler,
+    bucket_for,
+)
 
 
 def _percentile(xs: list[float], q: float) -> float:
@@ -61,14 +81,20 @@ class ServeEngine:
                  quant_impl: str = "auto", paged: bool | None = None,
                  n_pages: int | None = None, min_bucket: int = 16,
                  mesh=None, splitkv_axis: str = "data",
-                 splitkv: str = "auto"):
+                 splitkv: str = "auto", share_prefix: bool = True,
+                 spec_tail: bool = True):
         """``paged=None`` auto-detects (paged when the model can);
         ``n_pages`` bounds the KV pool (default: full provisioning,
         ``slots * nb_max`` + scratch — lower it to oversubscribe and exercise
         admission backpressure).  ``mesh``/``splitkv_axis`` attach the
         cross-chip split-KV decode path; ``splitkv`` is the routing policy:
         'auto' (engage on long-context low-occupancy cycles), 'always',
-        'never'."""
+        'never'.  ``share_prefix`` enables the scheduler's prompt-prefix
+        index (paged mode only): admitted prompts reuse resident pool pages
+        for their shared leading blocks and prefill only the divergent
+        suffix.  ``spec_tail`` additionally adopts a matching donor block as
+        the speculative flush destination when a prompt ends mid-block —
+        the copy-on-write candidate (see docs/SERVING.md)."""
         self.model = model
         self.params = params
         self.slots = slots
@@ -119,6 +145,7 @@ class ServeEngine:
         self.stats = {
             "decoded_tokens": 0, "steps": 0, "evicted": 0,
             "prefill_calls": 0, "splitkv_steps": 0,
+            "prefill_tokens": 0, "prefill_tokens_saved": 0, "cow_copies": 0,
         }
         self._token_latencies: list[float] = []
         self._occupancy: list[float] = []
@@ -136,6 +163,11 @@ class ServeEngine:
             self.sched = Scheduler(
                 slots=slots, pool=self.pool, block_n=self.block_n,
                 max_seq=max_seq, min_bucket=min_bucket,
+                share_prefix=share_prefix, spec_tail=spec_tail,
+                namespace=(
+                    f"{getattr(cfg, 'name', 'model')}/b{getattr(cfg, 'kv_bits', 4)}"
+                    f"/n{self.block_n}/{getattr(cfg, 'kv_gran', 'channel')}"
+                ),
             )
             self.state = model.init_paged_decode_state(
                 slots, n_pages=self.n_pages, nb_max=nb_max
@@ -153,6 +185,18 @@ class ServeEngine:
                     p, {"tokens": toks}, toks.shape[1], lengths=lengths
                 )
             )
+            # shared-prefix suffix prefill: dequantizes the prior pages from
+            # the pools and attends them from the divergent suffix; the jit
+            # cache keys on (bucket_len, padded prior blocks) — prior width
+            # is bucketed to powers of two to bound compile count
+            def _suffix_prefill(p, caches, toks, lengths, pages, prior_len):
+                prior = [qcache.dequant_prior(c, pages) for c in caches]
+                return model.prefill(
+                    p, {"tokens": toks}, toks.shape[1],
+                    lengths=lengths, prior=prior, prior_len=prior_len,
+                )
+
+            self._prefill_shared = jax.jit(_suffix_prefill)
         else:
             self.pool = None
             self.sched = None
@@ -199,6 +243,12 @@ class ServeEngine:
                 latency_p99_ms=1e3 * _percentile(self._token_latencies, 99),
                 occupancy_mean=float(np.mean(self._occupancy)) if self._occupancy else 0.0,
                 occupancy_max=float(np.max(self._occupancy)) if self._occupancy else 0.0,
+                # fraction of admitted full prompt blocks served from
+                # resident pages instead of prefill compute
+                prefix_hit_rate=(
+                    self.sched.stats["prefix_hit_blocks"]
+                    / max(1, self.sched.stats["prefix_lookup_blocks"])
+                ),
             )
         return out
 
@@ -209,29 +259,63 @@ class ServeEngine:
 
     # ------------------------------------------------------- paged cycle
 
+    def _alloc_page(self, req: Request) -> int:
+        """Pool alloc charged to ``req``: converts one of its reservation
+        units (preempt-free guarantee) and joins its page list."""
+        page = self.pool.alloc()
+        req.reserved_pages = max(req.reserved_pages - 1, 0)
+        req.pages.append(page)
+        return page
+
     def _admit_and_prefill(self) -> None:
         groups = self.sched.admit()
         for bucket_len, reqs in groups.items():
+            # divergent-suffix prefill: row r holds request r's unshared tail
             toks = np.zeros((self.slots, bucket_len), np.int32)
             lens = np.ones((self.slots,), np.int32)  # pad rows: length 1
+            shared_blocks = [len(r.shared_pages) for r in reqs]
+            p_max = max(shared_blocks)
             for r, req in enumerate(reqs):
-                toks[r, : req.prompt_len] = req.prompt
-                lens[r] = req.prompt_len
-            logits, dstate = self._prefill(
-                self.params, jnp.asarray(toks), jnp.asarray(lens)
-            )
+                sl = req.suffix_len(self.block_n)
+                toks[r, :sl] = req.prompt[len(req.shared_pages) * self.block_n :]
+                lens[r] = sl
+                self.stats["prefill_tokens"] += sl
+                self.stats["prefill_tokens_saved"] += req.prompt_len - sl
+            if p_max == 0:
+                logits, dstate = self._prefill(
+                    self.params, jnp.asarray(toks), jnp.asarray(lens)
+                )
+            else:
+                # pad the prior-page walk to a power-of-two block count so
+                # the jit cache keys on (bucket_len, prior bucket) only
+                p_pad = bucket_for(p_max, min_bucket=1)
+                pages = np.zeros((self.slots, p_pad), np.int32)
+                plens = np.zeros((self.slots,), np.int32)
+                for r, req in enumerate(reqs):
+                    s = len(req.shared_pages)
+                    pages[r, :s] = req.shared_pages
+                    plens[r] = s * self.block_n
+                logits, dstate = self._prefill_shared(
+                    self.params, self.state["caches"], jnp.asarray(toks),
+                    jnp.asarray(lens), jnp.asarray(pages), jnp.asarray(plens),
+                )
             self.stats["prefill_calls"] += 1
             first = np.argmax(np.asarray(logits)[:, 0], axis=-1)
 
             slot_ids, lengths, pages_per_req = [], [], []
             for r, req in enumerate(reqs):
-                n_blocks = req.prompt_len // self.block_n
-                pgs = [self.pool.alloc() for _ in range(n_blocks)]
-                req.pages.extend(pgs)
+                s = len(req.shared_pages)
+                sl = req.suffix_len(self.block_n)
+                n_blocks = sl // self.block_n
+                pgs = [self._alloc_page(req) for _ in range(n_blocks)]
                 self._table[req.slot, :] = req.slot  # fresh scratch row
-                self._table[req.slot, :n_blocks] = pgs
+                self._table[req.slot, :s] = req.shared_pages
+                if req.spec_page is not None:
+                    # speculative flush destination (COW candidate)
+                    self._table[req.slot, s] = req.spec_page
+                self._table[req.slot, s : s + n_blocks] = pgs
                 slot_ids.append(req.slot)
-                lengths.append(req.prompt_len)
+                lengths.append(sl)
                 pages_per_req.append(pgs)
                 req.phase = Phase.DECODE
                 req.pos = req.prompt_len
@@ -241,24 +325,60 @@ class ServeEngine:
                 self.state["caches"], dstate["caches"],
                 slot_ids=slot_ids, lengths=lengths,
                 pages_per_req=pages_per_req, block_n=self.block_n,
+                base_blocks=shared_blocks,
             )
             sidx = jnp.asarray(slot_ids, jnp.int32)
             self.state["pos"] = self.state["pos"].at[sidx].set(
-                jnp.asarray(lengths, jnp.int32)
+                jnp.asarray([r.prompt_len for r in reqs], jnp.int32)
             )
+            # full prompt blocks (shared + fresh) become discoverable for
+            # later admissions — content is committed by the adoption above
+            for r, req in enumerate(reqs):
+                self.sched.register_prefix(
+                    req, req.shared_pages + pages_per_req[r]
+                )
 
     def _ensure_flush_pages(self) -> None:
         """Allocate the destination page for every sequence whose residual
         fills on the upcoming step (pos % block_n == block_n - 1): the flush
-        will commit packed block pos // block_n through the page table."""
+        will commit packed block pos // block_n through the page table.
+
+        Copy-on-write: when the destination column already holds a pool page
+        with refcount > 1 (a speculative shared tail — serve/scheduler.py),
+        the flush must not be visible to the other holders.  The request
+        gets a private page (covered by its reservation: spec-tail pages are
+        never discounted at admission), the packed block is replicated
+        device-side (``pages.cow_pages``), and only this request's table
+        column is repointed before the flush commits over the replica."""
+        cow_src, cow_dst = [], []
         for req in self.sched.active.values():
-            if req.pos % self.block_n == self.block_n - 1:
-                blk = req.pos // self.block_n
-                if self._table[req.slot, blk] < self.slots:  # still scratch
-                    page = self.pool.alloc()
-                    req.pages.append(page)
-                    self._table[req.slot, blk] = page
-                    self._table_dirty = True
+            if req.pos % self.block_n != self.block_n - 1:
+                continue
+            blk = req.pos // self.block_n
+            entry = int(self._table[req.slot, blk])
+            if entry < self.slots:  # still scratch -> fresh private page
+                page = self._alloc_page(req)
+                self._table[req.slot, blk] = page
+                self._table_dirty = True
+            elif self.pool.refcount(entry) > 1:  # shared -> copy-on-write
+                page = self._alloc_page(req)
+                cow_src.append(entry)
+                cow_dst.append(page)
+                req.pages.remove(entry)
+                if req.spec_page == entry:
+                    req.spec_page = None
+                self.pool.free(entry)
+                self._table[req.slot, blk] = page
+                self._table_dirty = True
+                self.stats["cow_copies"] += 1
+            else:
+                # privately held page (last sharer left): the flush will
+                # overwrite it in place — drop any stale index node first
+                self.sched.forget_page(entry)
+        if cow_src:
+            self.state["caches"] = pg.cow_pages(
+                self.state["caches"], cow_src, cow_dst
+            )
 
     def _use_splitkv_now(self) -> bool:
         if self._step_splitkv is None or self.splitkv == "never":

@@ -4,20 +4,32 @@ Host-side twin of :class:`repro.core.qcache.PagedQuantKVCache`: the device
 holds the pools + page tables, this module decides *which* pool page holds
 which request's block.
 
-Two-level accounting:
+Commitment accounting (admission control + physical pages in one budget):
 
-* **reservations** (admission control): when the scheduler admits a request
-  it reserves the request's worst-case page count
-  ``(prompt_len + max_new_tokens) // block_n`` up front.  Reservations are
-  logical — no physical page moves — but they guarantee that every later
-  :meth:`PagePool.alloc` during that request's decode succeeds, so steady
-  state is preempt-free by construction; a request that cannot reserve stays
-  WAITING (admission backpressure).
-* **physical pages** (free-list + refcounts): pages are popped from the free
-  list lazily — prompt blocks at prefill adoption, one page per ``block_n``
-  decoded tokens just before the flush step that commits it.  ``free``
-  decrements a refcount and returns the page at zero (refcounts > 1 are the
-  hook for future prefix sharing via :meth:`PagePool.retain`).
+* every page the pool has *promised* is counted exactly once, either as a
+  **reservation** (``reserved`` — pages a live request may still allocate)
+  or as an **allocated page** (``n_used`` — pages on the free list's
+  complement, refcounted).  :meth:`PagePool.reserve` admits a request only
+  when ``n_used + reserved + n <= capacity``, and :meth:`PagePool.alloc`
+  moves one unit from ``reserved`` to ``n_used`` — so every alloc a
+  reservation promised is guaranteed to find a free page and steady state is
+  preempt-free by construction; a request that cannot reserve stays WAITING
+  (admission backpressure).
+* **prefix sharing** rides the same budget without double-charging: a shared
+  page (refcount > 1 via :meth:`PagePool.retain`) sits in ``n_used`` once,
+  no matter how many requests hold it, and a sharer's admission reserves
+  only its *private* worst case (``pages_needed - shared_read_blocks`` —
+  serve/scheduler.py).  When the original owner retires first, the page
+  simply stays in ``n_used`` until its last holder drops it, so the
+  commitment total keeps honest count with no reservation hand-off.
+  A speculative tail page (the copy-on-write candidate) is *not* discounted:
+  its block index can still be flushed, so the sharer keeps one reservation
+  unit to cover the COW replica.
+
+Physical pages move lazily through the free list — prompt blocks at prefill
+adoption, one page per ``block_n`` decoded tokens just before the flush step
+that commits it.  ``free`` decrements a refcount and returns the page at
+zero (firing ``on_release`` so the scheduler's prefix index can forget it).
 
 Scratch-page invariant (shared with the paged residual-flush kernel): pool
 pages ``[0, n_scratch)`` — one per decode slot — are never allocated.  Page
@@ -29,13 +41,16 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
+from typing import Callable
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import qcache as _qc
+
 
 class PagePool:
-    """Free-list page allocator with admission reservations and refcounts."""
+    """Free-list page allocator with commitment accounting and refcounts."""
 
     def __init__(self, n_pages: int, *, n_scratch: int):
         if n_pages <= n_scratch:
@@ -46,7 +61,10 @@ class PagePool:
         self.n_scratch = n_scratch
         self._free: deque[int] = deque(range(n_scratch, n_pages))
         self._refcount = np.zeros(n_pages, np.int32)
-        self.reserved = 0  # logical admission reservations, in pages
+        self.reserved = 0  # pages promised but not yet allocated
+        # fired with the page id when a page's last reference drops and it
+        # returns to the free list (prefix-index invalidation hook)
+        self.on_release: Callable[[int], None] | None = None
 
     # ------------------------------------------------------------ capacity
 
@@ -64,6 +82,11 @@ class PagePool:
         return self.capacity - self.n_free
 
     @property
+    def committed(self) -> int:
+        """Pages spoken for: allocated (shared pages count once) + reserved."""
+        return self.n_used + self.reserved
+
+    @property
     def occupancy(self) -> float:
         """Physically allocated fraction of the allocatable pool."""
         return self.n_used / max(1, self.capacity)
@@ -71,53 +94,69 @@ class PagePool:
     # -------------------------------------------------------- reservations
 
     def reserve(self, n: int) -> bool:
-        """Logically reserve ``n`` pages for an admitted request; False (and
-        no state change) when the pool cannot guarantee them — the
-        scheduler's backpressure signal."""
-        if self.reserved + n > self.capacity:
+        """Reserve ``n`` future allocations for an admitted request; False
+        (and no state change) when the commitment budget cannot guarantee
+        them — the scheduler's backpressure signal."""
+        if self.committed + n > self.capacity:
             return False
         self.reserved += n
         return True
 
     def release(self, n: int) -> None:
-        """Return a request's reservation (on completion/eviction)."""
+        """Return a request's *remaining* (never-allocated) reservation on
+        completion/eviction; allocations already converted their unit via
+        :meth:`alloc`."""
         if n > self.reserved:
             raise ValueError(f"release({n}) exceeds reserved={self.reserved}")
         self.reserved -= n
 
     # ------------------------------------------------------ physical pages
 
-    def alloc(self) -> int:
-        """Pop a free page (refcount 1).  Guaranteed to succeed for pages
-        covered by a reservation; raises if the invariant was violated."""
+    def alloc(self, *, covered: bool = True) -> int:
+        """Pop a free page (refcount 1).  ``covered=True`` (the serving
+        path) converts one reserved unit into an allocated one — guaranteed
+        to succeed for pages a reservation promised.  ``covered=False``
+        (unit tests, tooling) allocates outside any reservation: it leaves
+        ``reserved`` untouched and just grows ``committed``, so it can never
+        steal a unit another request's ``reserve()`` was promised."""
         if not self._free:
             raise RuntimeError(
                 "page pool exhausted — alloc() outside a reservation?"
             )
         page = self._free.popleft()
         self._refcount[page] = 1
+        if covered and self.reserved:
+            self.reserved -= 1
         return page
 
     def retain(self, page: int) -> None:
-        """Add a reference to an allocated page (prefix-sharing hook)."""
+        """Add a reference to an allocated page (prefix sharing)."""
         if self._refcount[page] <= 0:
             raise ValueError(f"retain of unallocated page {page}")
         self._refcount[page] += 1
 
+    def refcount(self, page: int) -> int:
+        """Current reference count (0 == free). The engine's COW trigger:
+        a flush destination with ``refcount > 1`` must be replicated first."""
+        return int(self._refcount[page])
+
     def free(self, page: int) -> None:
-        """Drop one reference; the page returns to the free list at zero."""
+        """Drop one reference; the page returns to the free list at zero
+        (firing ``on_release``)."""
         if self._refcount[page] <= 0:
             raise ValueError(f"double free of page {page}")
         self._refcount[page] -= 1
         if self._refcount[page] == 0:
             self._free.append(page)
+            if self.on_release is not None:
+                self.on_release(page)
 
 
 # --------------------------------------------------------------------------
 # Device-side adoption: move bucket-prefill dense caches into the pools
 # --------------------------------------------------------------------------
 
-_POOL_FIELDS = ("kw", "k_scale", "k_zero", "vw", "v_scale", "v_zero")
+_POOL_FIELDS = _qc._PAGED_POOL_FIELDS
 
 
 def adopt_prefill(
@@ -128,6 +167,7 @@ def adopt_prefill(
     lengths: list[int],
     pages_per_req: list[list[int]],
     block_n: int,
+    base_blocks: list[int] | None = None,
 ) -> list:
     """Splice one bucketed prefill into the paged decode state.
 
@@ -138,8 +178,18 @@ def adopt_prefill(
     dense packed blocks scatter into pool pages ``pages_per_req[r]``, its
     residual row and occupancy counters copy into decode slot
     ``slot_ids[r]``.  Dense blocks beyond ``pack_blocks`` (right-pad
-    pollution) are not copied.  Returns the updated paged cache list; page
-    tables are pushed separately (:func:`set_page_tables`).
+    pollution) are not copied.
+
+    ``base_blocks`` (prefix sharing) makes the splice *suffix-aware*: the
+    dense cache holds only the divergent suffix of each prompt (a
+    ``prior=``-mode prefill), whose blocks land *behind* ``base_blocks[r]``
+    shared leading blocks already resident in the pools — the slot's
+    ``pack_blocks`` becomes ``base_blocks[r] + lengths[r] // block_n`` while
+    the copied content and residual stay pure suffix.  The engine points the
+    leading page-table columns at the shared (retained) pages separately.
+
+    Returns the updated paged cache list; page tables are pushed separately
+    (:func:`set_page_tables`).
     """
     rows, blks, pages = [], [], []
     for r, pgs in enumerate(pages_per_req):
@@ -147,9 +197,12 @@ def adopt_prefill(
             rows.append(r)
             blks.append(j)
             pages.append(pg)
+    base = base_blocks if base_blocks is not None else [0] * len(slot_ids)
     sidx = jnp.asarray(slot_ids, jnp.int32)
     rrow = jnp.arange(len(slot_ids), dtype=jnp.int32)
-    pack = jnp.asarray([ln // block_n for ln in lengths], jnp.int32)
+    pack = jnp.asarray(
+        [b + ln // block_n for b, ln in zip(base, lengths)], jnp.int32
+    )
     res = jnp.asarray([ln % block_n for ln in lengths], jnp.int32)
 
     out = []
@@ -175,6 +228,15 @@ def adopt_prefill(
         upd["res_len"] = pc.res_len.at[:, sidx].set(res)
         out.append(dataclasses.replace(pc, **upd))
     return out
+
+
+def cow_pages(paged_caches: list, src: list[int], dst: list[int]) -> list:
+    """Copy-on-write replication across every stacked paged cache: pool pages
+    ``dst[i]`` become bitwise replicas of ``src[i]`` (all six pool fields,
+    all layers — ``qcache.copy_pages``).  The engine calls this just before
+    a decode flush whose destination page has refcount > 1, after repointing
+    the flushing request's page-table column at ``dst``."""
+    return [_qc.copy_pages(pc, src, dst) for pc in paged_caches]
 
 
 def set_page_tables(paged_caches: list, table: np.ndarray) -> list:

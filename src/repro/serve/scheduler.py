@@ -1,4 +1,4 @@
-"""Continuous-batching scheduler: request lifecycle + bucketed admission.
+"""Continuous-batching scheduler: lifecycle, bucketed admission, prefix index.
 
 Request lifecycle (the serving subsystem's state machine):
 
@@ -12,22 +12,38 @@ WAITING ──────────► PREFILL ──────────
 ```
 
 Admission is strict FIFO: the head of the waiting queue is admitted when a
-decode slot is free *and* the page pool can reserve its worst-case page
-count ``(prompt_len + max_new_tokens) // block_n``; if the head cannot be
-admitted nothing behind it is (no starvation, deterministic order).  The
-reservation makes decode-time page allocation infallible — steady state
-never preempts.
+decode slot is free *and* the page pool can reserve its worst-case *private*
+page count; if the head cannot be admitted nothing behind it is (no
+starvation, deterministic order).  The reservation makes decode-time page
+allocation infallible — steady state never preempts (see serve/pages.py for
+the commitment accounting, and docs/SERVING.md for the invariant as amended
+by sharing).
+
+**Prefix sharing** (:class:`PrefixIndex`): prompts are hashed as a chain of
+``block_n``-sized chunks under a per-model-config namespace; at admission
+the longest leading run of chunks already resident in the pool maps straight
+onto the donor's pages (``PagePool.retain`` — no prefill compute, no second
+copy, reservation discounted by the shared read blocks).  The last shareable
+index is capped at ``(prompt_len - 1) // block_n`` so at least one suffix
+token is always prefilled (the engine needs its logits).  When the prompt
+ends mid-block and the donor has the covering block committed with a
+matching token prefix, that page is additionally adopted as a *speculative
+tail* — a flush-destination placeholder that the engine copy-on-writes at
+the first divergent flush (its reservation unit is kept, so COW stays inside
+the preempt-free budget).  Pages register after their prefill is adopted, so
+sharing takes effect from the next scheduling cycle on.
 
 Prompts admitted in the same cycle are grouped into *length buckets*
-(powers of two ≥ ``min_bucket``) and right-padded to the bucket length so
-each bucket is one jitted prefill call; the jit cache then keys on the
-bucket length alone, so a serving lifetime compiles one prefill per bucket
-instead of one per distinct prompt length.
+(powers of two ≥ ``min_bucket``) over their **divergent suffix** length and
+right-padded to the bucket, so each bucket is one jitted prefill call; the
+jit cache then keys on the bucket length alone, and a fully-shared prompt
+costs a minimal bucket instead of its full length.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
+import hashlib
 from collections import deque
 
 import numpy as np
@@ -53,9 +69,13 @@ class Request:
     slot: int | None = None
     pages: list = dataclasses.field(default_factory=list)
     pos: int = 0                 # cached tokens so far (host mirror)
-    reserved_pages: int = 0
+    reserved_pages: int = 0      # remaining un-allocated reservation units
     arrival_s: float = 0.0       # virtual arrival time (bench offered-load)
     token_latencies_s: list = dataclasses.field(default_factory=list)
+    # ---- prefix sharing (set at admission) ----
+    shared_pages: list = dataclasses.field(default_factory=list)
+    spec_page: int | None = None  # speculative tail page (COW candidate)
+    chain: list = dataclasses.field(default_factory=list)  # chunk digests
 
     @property
     def done(self) -> bool:
@@ -71,6 +91,10 @@ class Request:
         holds ``prompt_len + max_new_tokens`` tokens when it retires."""
         return (self.prompt_len + self.max_new_tokens) // block_n
 
+    def suffix_len(self, block_n: int) -> int:
+        """Divergent-suffix tokens this request must still prefill."""
+        return self.prompt_len - len(self.shared_pages) * block_n
+
 
 def bucket_for(n: int, *, min_bucket: int = 16) -> int:
     """Smallest power-of-two bucket >= max(n, min_bucket)."""
@@ -80,16 +104,116 @@ def bucket_for(n: int, *, min_bucket: int = 16) -> int:
     return b
 
 
+class PrefixIndex:
+    """Block-granular prompt-prefix index: chunk-hash chains → resident pages.
+
+    One chain node per full ``block_n``-sized prompt chunk:
+    ``digest_j = H(digest_{j-1} || tokens[j*block_n:(j+1)*block_n])`` with
+    ``digest_{-1} = H(namespace)`` — the namespace folds the model-config
+    fields that determine cache content (arch, kv bits/block/granularity), so
+    pools of incompatible layouts never cross-match.  A node maps to the pool
+    page holding that chunk's committed block; pages register once (first
+    writer wins) and are forgotten when their last pool reference drops
+    (``PagePool.on_release``) or when the engine is about to overwrite a
+    privately-held page in place.
+
+    Per page the index also records the chunk's token ids — the speculative
+    tail lookup (:meth:`spec_tail`) needs to check that a donor block's first
+    ``r`` tokens equal a new prompt's mid-block tail.
+    """
+
+    def __init__(self, namespace: str, block_n: int):
+        self.block_n = block_n
+        self.root = hashlib.sha1(namespace.encode()).digest()
+        self._page_of: dict[bytes, int] = {}
+        # page -> (digest, parent digest, chunk token ids)
+        self._meta: dict[int, tuple[bytes, bytes, np.ndarray]] = {}
+        self._children: dict[bytes, list[int]] = {}
+
+    def __len__(self) -> int:
+        return len(self._page_of)
+
+    def chain(self, prompt: np.ndarray) -> list[bytes]:
+        """Digest after each *full* ``block_n`` chunk of ``prompt``."""
+        h = self.root
+        out = []
+        p = np.ascontiguousarray(prompt, dtype=np.int32)
+        for j in range(len(p) // self.block_n):
+            chunk = p[j * self.block_n : (j + 1) * self.block_n]
+            h = hashlib.sha1(h + chunk.tobytes()).digest()
+            out.append(h)
+        return out
+
+    def lookup(self, chain: list[bytes]) -> list[int]:
+        """Pages for the longest leading run of resident chain nodes."""
+        pages = []
+        for h in chain:
+            page = self._page_of.get(h)
+            if page is None:
+                break
+            pages.append(page)
+        return pages
+
+    def spec_tail(self, parent: bytes, tail: np.ndarray) -> int | None:
+        """A resident page one chain step below ``parent`` whose block starts
+        with ``tail`` (the new prompt's mid-block remainder) — the engine
+        adopts it as the speculative flush destination (COW candidate)."""
+        if not len(tail):
+            return None
+        tail = np.ascontiguousarray(tail, dtype=np.int32)
+        for page in self._children.get(parent, ()):
+            _, _, toks = self._meta[page]
+            if len(toks) >= len(tail) and np.array_equal(toks[: len(tail)], tail):
+                return page
+        return None
+
+    def register(self, chain: list[bytes], pages: list[int],
+                 prompt: np.ndarray) -> None:
+        """Make ``pages[j]`` (holding ``prompt``'s chunk ``j``) discoverable.
+        Nodes already resident and pages already registered are skipped, so
+        re-registering a shared prefix is a no-op."""
+        p = np.ascontiguousarray(prompt, dtype=np.int32)
+        parent = self.root
+        for j, (h, page) in enumerate(zip(chain, pages)):
+            if h not in self._page_of and page not in self._meta:
+                toks = p[j * self.block_n : (j + 1) * self.block_n].copy()
+                self._page_of[h] = page
+                self._meta[page] = (h, parent, toks)
+                self._children.setdefault(parent, []).append(page)
+            parent = h
+
+    def forget_page(self, page: int) -> None:
+        """Drop a page's node (page died, or its content is about to be
+        overwritten in place)."""
+        meta = self._meta.pop(page, None)
+        if meta is None:
+            return
+        digest, parent, _ = meta
+        self._page_of.pop(digest, None)
+        kids = self._children.get(parent)
+        if kids is not None:
+            kids.remove(page)
+            if not kids:
+                self._children.pop(parent, None)
+
+
 class Scheduler:
     """Continuous-batching admission over a fixed slot set and a PagePool."""
 
     def __init__(self, *, slots: int, pool: PagePool | None, block_n: int,
-                 max_seq: int, min_bucket: int = 16):
+                 max_seq: int, min_bucket: int = 16,
+                 share_prefix: bool = True, spec_tail: bool = True,
+                 namespace: str = "default"):
         self.slots = slots
         self.pool = pool
         self.block_n = block_n
         self.max_seq = max_seq
         self.min_bucket = min_bucket
+        self.spec_tail = spec_tail
+        self.index: PrefixIndex | None = None
+        if share_prefix and pool is not None:
+            self.index = PrefixIndex(namespace, block_n)
+            pool.on_release = self.index.forget_page
         self.waiting: deque[Request] = deque()
         self.active: dict[int, Request] = {}  # slot -> request
         self.stats = {
@@ -97,6 +221,10 @@ class Scheduler:
             "admitted": 0,
             "completed": 0,
             "backpressure_events": 0,
+            "prefix_hit_requests": 0,
+            "prefix_hit_blocks": 0,
+            "prefix_lookup_blocks": 0,
+            "spec_tail_adoptions": 0,
         }
 
     # ------------------------------------------------------------ queue
@@ -127,39 +255,100 @@ class Scheduler:
 
     # --------------------------------------------------------- admission
 
+    def _match_prefix(self, req: Request):
+        """Resolve the head request's shareable pages (no state change)."""
+        if self.index is None:
+            return [], None, []
+        if not req.chain and req.prompt_len >= self.block_n:
+            # memoized: a backpressured head is re-probed every cycle, but
+            # the prompt (hence its digest chain) is immutable
+            req.chain = self.index.chain(req.prompt)
+        chain = req.chain
+        cap = (req.prompt_len - 1) // self.block_n  # keep >= 1 suffix token
+        shared = self.index.lookup(chain[:cap])
+        spec = None
+        s = len(shared)
+        if (
+            self.spec_tail
+            and req.prompt_len % self.block_n
+            and s == req.prompt_len // self.block_n
+        ):
+            parent = chain[s - 1] if s else self.index.root
+            spec = self.index.spec_tail(
+                parent, req.prompt[s * self.block_n :]
+            )
+        return shared, spec, chain
+
     def admit(self) -> dict[int, list[Request]]:
         """Admit waiting requests (strict FIFO) into free slots while the
-        pool can reserve their worst-case pages; returns the admitted
-        requests grouped by prefill bucket length, in admission order."""
+        pool can reserve their worst-case *private* pages (shared read
+        blocks are counted once pool-wide, never re-reserved); returns the
+        admitted requests grouped by divergent-suffix prefill bucket length,
+        in admission order."""
         free = self.free_slots()
         groups: dict[int, list[Request]] = {}
         while self.waiting and free:
             req = self.waiting[0]
-            need = req.pages_needed(self.block_n)
+            shared, spec, chain = self._match_prefix(req)
+            need = req.pages_needed(self.block_n) - len(shared)
             if self.pool is not None and not self.pool.reserve(need):
                 self.stats["backpressure_events"] += 1
                 break  # strict FIFO: nothing overtakes the head
             self.waiting.popleft()
+            if self.pool is not None:
+                for page in shared:
+                    self.pool.retain(page)
+                if spec is not None:
+                    self.pool.retain(spec)
+            req.shared_pages = list(shared)
+            req.spec_page = spec
+            req.chain = chain
+            req.pages = list(shared) + ([spec] if spec is not None else [])
             req.reserved_pages = need
             req.slot = free.pop(0)
             req.phase = Phase.PREFILL
             req.pos = 0
             self.active[req.slot] = req
             self.stats["admitted"] += 1
-            bucket = bucket_for(req.prompt_len, min_bucket=self.min_bucket)
+            if shared:
+                self.stats["prefix_hit_requests"] += 1
+                self.stats["prefix_hit_blocks"] += len(shared)
+            if self.index is not None:
+                self.stats["prefix_lookup_blocks"] += len(chain)
+            if spec is not None:
+                self.stats["spec_tail_adoptions"] += 1
+            bucket = bucket_for(
+                req.suffix_len(self.block_n), min_bucket=self.min_bucket
+            )
             groups.setdefault(bucket, []).append(req)
         return groups
+
+    def register_prefix(self, req: Request, pages: list[int]) -> None:
+        """Register a just-adopted prompt's full-block pages (shared + fresh)
+        in the index — the engine calls this after adoption, so same-cycle
+        admissions never observe half-written pages."""
+        if self.index is not None and req.chain:
+            self.index.register(req.chain, pages, req.prompt)
+
+    def forget_page(self, page: int) -> None:
+        """Engine hook: a privately-held page is about to be overwritten in
+        place (its indexed content would go stale)."""
+        if self.index is not None:
+            self.index.forget_page(page)
 
     # -------------------------------------------------------- retirement
 
     def complete(self, req: Request) -> None:
-        """Retire a request: free its pages (refcounted), return its
-        reservation, release its slot."""
+        """Retire a request: free its pages (refcounted — shared pages
+        survive until their last holder), return its remaining reservation,
+        release its slot."""
         if self.pool is not None:
             for page in req.pages:
                 self.pool.free(page)
             self.pool.release(req.reserved_pages)
         req.pages = []
+        req.shared_pages = []
+        req.spec_page = None
         req.reserved_pages = 0
         if req.slot is not None:
             self.active.pop(req.slot, None)

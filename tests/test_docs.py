@@ -17,7 +17,8 @@ def _load_check_docs():
 
 
 def test_docs_surface_exists():
-    for rel in ("README.md", "docs/ARCHITECTURE.md", "docs/BENCHMARKS.md"):
+    for rel in ("README.md", "docs/ARCHITECTURE.md", "docs/BENCHMARKS.md",
+                "docs/SERVING.md"):
         path = REPO / rel
         assert path.exists(), f"missing {rel}"
         assert path.stat().st_size > 500, f"{rel} is a stub"
@@ -38,3 +39,29 @@ def test_check_docs_detects_drift():
     assert "bitdecode" in documented
     broken = (REPO / "README.md").read_text().replace("`residual_flush`", "`x`")
     assert mod.documented_families(broken) != documented
+
+
+def test_serving_doc_symbols_resolve_and_drift_detected():
+    """docs/SERVING.md's dotted repro.* references resolve; a bogus symbol,
+    flag, or counter is caught (guards the new serving-doc checks against
+    regex rot)."""
+    mod = _load_check_docs()
+    text = (REPO / "docs" / "SERVING.md").read_text()
+    syms = mod.serving_symbols(text)
+    assert "repro.serve.scheduler.PrefixIndex" in syms
+    assert "repro.core.qcache.copy_pages" in syms
+    assert not mod.check_serving(text)
+    assert mod.check_serving(text + "\nsee `repro.serve.engine.NoSuchThing`")
+    assert mod.check_serving(
+        text.replace("| `share_prefix` |", "| `share_prefixes` |"))
+    assert mod.check_serving(
+        text.replace("| `cow_copies` |", "| `cow_copy_total` |"))
+
+
+def test_serving_doc_flags_match_engine_signature():
+    """Every ServeEngine sharing-related flag is documented: the doc's flag
+    table must include the knobs the tests exercise."""
+    mod = _load_check_docs()
+    text = (REPO / "docs" / "SERVING.md").read_text()
+    flags = mod.table_rows(text, "Engine flags")
+    assert {"share_prefix", "spec_tail", "paged", "n_pages"} <= flags

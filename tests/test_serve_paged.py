@@ -24,17 +24,23 @@ def test_pagepool_freelist_and_refcounts():
     pool = PagePool(8, n_scratch=2)
     assert pool.capacity == 6 and pool.n_free == 6
     assert pool.reserve(6)
-    assert not pool.reserve(1)  # full reservation -> backpressure
+    assert not pool.reserve(1)  # full commitment -> backpressure
     a, b = pool.alloc(), pool.alloc()
     assert a >= 2 and b >= 2 and a != b  # scratch pages never allocated
     assert pool.n_used == 2
+    # allocs converted two reserved units into allocated ones; the
+    # commitment total is unchanged (shared budget, counted once)
+    assert pool.reserved == 4 and pool.committed == 6
+    assert not pool.reserve(1)
     pool.retain(a)
+    assert pool.refcount(a) == 2
     pool.free(a)
     assert pool.n_used == 2  # refcount 1 left -> not yet returned
     pool.free(a)
     pool.free(b)
     assert pool.n_free == 6
-    pool.release(6)
+    pool.release(4)  # the never-allocated remainder
+    assert pool.reserved == 0
     assert pool.reserve(1)
     with pytest.raises(ValueError):
         pool.free(b)  # double free

@@ -1,0 +1,425 @@
+"""Prefix-sharing paged serving: index hit/miss at block boundaries,
+refcounted page lifecycle across completion, reservation accounting that
+never double-charges, suffix-only prefill, and copy-on-write with bitwise
+decode parity vs. the no-sharing oracle (the PR's acceptance criteria)."""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import smoke_config
+from repro.core import attention as catt
+from repro.core import qcache
+from repro.models.zoo import build_model
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.pages import PagePool
+from repro.serve.scheduler import PrefixIndex, Scheduler
+
+BLOCK = 32
+
+
+# --------------------------------------------------------------------------
+# PrefixIndex units: hash chain, block-boundary hit/miss, spec tail
+# --------------------------------------------------------------------------
+
+def _idx():
+    return PrefixIndex("ns", BLOCK)
+
+
+def test_index_hit_miss_at_block_boundaries():
+    idx = _idx()
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, 100, 3 * BLOCK + 5).astype(np.int32)
+    chain = idx.chain(prompt)
+    assert len(chain) == 3  # full blocks only; the 5-token tail hashes never
+    idx.register(chain, [10, 11, 12], prompt)
+    assert len(idx) == 3
+
+    # exact prefix at a block boundary: full-run hit
+    assert idx.lookup(idx.chain(prompt[: 2 * BLOCK])) == [10, 11]
+    # one token past the boundary changes nothing (partial chunks don't hash)
+    assert idx.lookup(idx.chain(prompt[: 2 * BLOCK + 1])) == [10, 11]
+    # one token short of the boundary drops the block
+    assert idx.lookup(idx.chain(prompt[: 2 * BLOCK - 1])) == [10]
+    # divergence inside block 1 stops the walk after block 0
+    mid = prompt[: 2 * BLOCK].copy()
+    mid[BLOCK + 3] += 1
+    assert idx.lookup(idx.chain(mid)) == [10]
+    # a different first block misses entirely
+    other = prompt.copy()
+    other[0] += 1
+    assert idx.lookup(idx.chain(other)) == []
+
+
+def test_index_spec_tail_and_forget():
+    idx = _idx()
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, 100, 2 * BLOCK).astype(np.int32)
+    chain = idx.chain(prompt)
+    idx.register(chain, [7, 8], prompt)
+    # the mid-block tail of a strict prompt prefix matches the donor block
+    assert idx.spec_tail(chain[0], prompt[BLOCK : BLOCK + 9]) == 8
+    assert idx.spec_tail(idx.root, prompt[:5]) == 7
+    # a diverged tail does not
+    tail = prompt[BLOCK : BLOCK + 9].copy()
+    tail[4] += 1
+    assert idx.spec_tail(chain[0], tail) is None
+    assert idx.spec_tail(chain[0], np.asarray([], np.int32)) is None
+    # forgetting a page removes its node and its spec-tail discoverability
+    idx.forget_page(8)
+    assert idx.lookup(chain) == [7]
+    assert idx.spec_tail(chain[0], prompt[BLOCK : BLOCK + 9]) is None
+    idx.forget_page(8)  # idempotent
+
+
+def test_index_registration_first_writer_wins():
+    idx = _idx()
+    prompt = np.arange(BLOCK, dtype=np.int32)
+    chain = idx.chain(prompt)
+    idx.register(chain, [5], prompt)
+    idx.register(chain, [6], prompt)  # same content elsewhere: no-op
+    assert idx.lookup(chain) == [5]
+
+
+# --------------------------------------------------------------------------
+# Commitment accounting: shared pages counted once, donor-first retirement
+# --------------------------------------------------------------------------
+
+def test_pool_commitment_counts_shared_pages_once():
+    pool = PagePool(6, n_scratch=2)  # capacity 4
+    assert pool.reserve(1)
+    donor_page = pool.alloc()
+    pool.retain(donor_page)           # a sharer joins: no new commitment
+    assert pool.committed == 1
+    # the donor retires first: the page stays committed via the sharer
+    pool.free(donor_page)
+    assert pool.n_used == 1 and pool.committed == 1
+    # a newcomer can only reserve what is genuinely uncommitted
+    assert pool.reserve(3)
+    assert not pool.reserve(1)
+    # last holder drops the page -> the commitment finally returns
+    pool.free(donor_page)
+    assert pool.committed == 3
+    assert pool.reserve(1)
+
+
+def test_scheduler_admission_does_not_double_charge_shared_pages():
+    """Two identical 2-block prompts into a 3-page pool: the second request
+    shares block 0 (the cap keeps block 1 private for its logits), so its
+    reservation is 1 page, not 2 — without the discount the pool could not
+    admit it."""
+    pool = PagePool(3 + 2, n_scratch=2)  # capacity 3
+    sched = Scheduler(slots=2, pool=pool, block_n=BLOCK, max_seq=256,
+                      namespace="t")
+    prompt = np.arange(2 * BLOCK, dtype=np.int32)
+    a = Request(uid=0, prompt=prompt, max_new_tokens=4)
+    b = Request(uid=1, prompt=prompt.copy(), max_new_tokens=4)
+    sched.submit(a)
+    (bucket, (got_a,)), = sched.admit().items()
+    assert got_a is a and a.shared_pages == []
+    # adopt A's prefill: two fresh pages, registered for later arrivals
+    pages_a = [pool.alloc(), pool.alloc()]
+    a.pages.extend(pages_a)
+    a.reserved_pages -= 2
+    sched.register_prefix(a, pages_a)
+
+    sched.submit(b)
+    (bucket_b, (got_b,)), = sched.admit().items()
+    assert got_b is b
+    assert b.shared_pages == [pages_a[0]]
+    assert pool.refcount(pages_a[0]) == 2
+    assert b.reserved_pages == 1  # (64 + 4)//32 - 1 shared
+    assert bucket_b == 32  # divergent suffix only: one block, not two
+    # full budget: 2 allocated (A) + A's remaining 0 + B's 1 = 3 == capacity
+    assert pool.committed == 3
+    sched.complete(a)
+    # shared page survives A via B's reference and stays committed
+    assert pool.refcount(pages_a[0]) == 1
+    assert pool.committed == 2  # page 0 (shared) + B's reservation
+    sched.complete(b)
+    assert pool.committed == 0 and pool.n_free == pool.capacity
+
+
+# --------------------------------------------------------------------------
+# Device ops: copy_pages replication, dequant_prior round-trip,
+# prefix_suffix_attention == causal-attention tail
+# --------------------------------------------------------------------------
+
+def test_copy_pages_replicates_all_pool_fields():
+    pc = qcache.init_paged_cache(8, 2, 2, 64, 4, bits=4, block_n=BLOCK)
+    # stack a layer dim like the engine state does
+    pc = jax.tree.map(lambda a: jnp.broadcast_to(a, (3, *a.shape)), pc)
+    rng = np.random.default_rng(2)
+    pc = dataclasses.replace(
+        pc,
+        kw=jnp.asarray(rng.integers(0, 2**31 - 1, pc.kw.shape), jnp.int32),
+        k_scale=jnp.asarray(rng.normal(size=pc.k_scale.shape), jnp.bfloat16),
+        v_zero=jnp.asarray(rng.normal(size=pc.v_zero.shape), jnp.bfloat16),
+    )
+    out = qcache.copy_pages(pc, jnp.asarray([5, 3]), jnp.asarray([6, 7]))
+    for f in qcache._PAGED_POOL_FIELDS:
+        src_pool = getattr(pc, f)
+        dst_pool = getattr(out, f)
+        np.testing.assert_array_equal(
+            np.asarray(dst_pool[:, 6]), np.asarray(src_pool[:, 5]))
+        np.testing.assert_array_equal(
+            np.asarray(dst_pool[:, 7]), np.asarray(src_pool[:, 3]))
+        # untouched pages identical
+        np.testing.assert_array_equal(
+            np.asarray(dst_pool[:, :3]), np.asarray(src_pool[:, :3]))
+
+
+def test_dequant_prior_round_trips_pool_pages():
+    from repro.kernels.kv_quant import ref as kq_ref
+    from repro.core import quantizer
+
+    H, D = 2, 64
+    rng = jax.random.PRNGKey(3)
+    k = jax.random.normal(rng, (1, H, BLOCK, D)).astype(jnp.bfloat16)
+    kw, ks, kz = kq_ref.quantize_kv_ref(k, 4, "channel", block_n=BLOCK)
+    want = quantizer.unpack_and_dequantize(kw, ks, kz, 4, "channel")
+    # place the block at pool page 5 (one stacking layer dim, like the engine)
+    pc = qcache.init_paged_cache(8, 2, H, D, 4, bits=4, block_n=BLOCK)
+    pc = jax.tree.map(lambda a: jnp.broadcast_to(a, (1, *a.shape)), pc)
+    pc = dataclasses.replace(
+        pc,
+        kw=pc.kw.at[:, 5].set(kw[:, :, 0]),
+        k_scale=pc.k_scale.at[:, 5].set(ks[:, :, 0]),
+        k_zero=pc.k_zero.at[:, 5].set(kz[:, :, 0]),
+    )
+    kp, vp = qcache.dequant_prior(pc, jnp.asarray([[5]], jnp.int32))
+    assert kp.shape == (1, 1, BLOCK, H, D)
+    np.testing.assert_allclose(
+        np.asarray(kp[0, 0], jnp.float32),
+        np.asarray(want[0, :, 0].transpose(1, 0, 2), jnp.float32),
+        rtol=0, atol=0,
+    )
+    assert not np.asarray(vp).any()  # v pools were empty
+
+
+def test_prefix_suffix_attention_matches_causal_tail():
+    """With a raw prior, the suffix attention rows equal the corresponding
+    rows of full causal attention over the concatenated sequence — per
+    sequence, at ragged prior lengths."""
+    B, T, S, HQ, HKV, D = 2, 48, 16, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    kp = jax.random.normal(ks[0], (B, T, HKV, D)).astype(jnp.bfloat16)
+    vp = jax.random.normal(ks[1], (B, T, HKV, D)).astype(jnp.bfloat16)
+    prior_len = jnp.asarray([48, 17], jnp.int32)
+    k = jax.random.normal(ks[2], (B, S, HKV, D)).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, HKV, D)).astype(jnp.bfloat16)
+    q = jax.random.normal(ks[3], (B, S, HQ, D)).astype(jnp.bfloat16)
+    got = catt.prefix_suffix_attention(q, k, v, kp, vp, prior_len)
+    for b in range(B):
+        pl = int(prior_len[b])
+        kc = jnp.concatenate([kp[b : b + 1, :pl], k[b : b + 1]], axis=1)
+        vc = jnp.concatenate([vp[b : b + 1, :pl], v[b : b + 1]], axis=1)
+        want = catt.blockwise_attention(
+            q[b : b + 1], kc, vc, causal=True, q_offset=pl
+        )
+        np.testing.assert_allclose(
+            np.asarray(got[b], jnp.float32), np.asarray(want[0], jnp.float32),
+            rtol=2e-2, atol=2e-2,
+        )
+
+
+# --------------------------------------------------------------------------
+# Engine end-to-end: shared pages, suffix-only prefill, lifecycle, COW
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = smoke_config("llama3-8b").with_(kv_bits=4, kv_block=BLOCK)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompt(cfg, rng, n):
+    return rng.integers(0, cfg.vocab, n).astype(np.int32)
+
+
+def test_shared_prefix_consumes_k_shared_plus_private_suffix_pages(small_model):
+    """Acceptance criterion: B sharing A's k-block prefix holds exactly A's k
+    pages (refcounted, counted once) plus private pages for its divergent
+    suffix, and prefill runs only over the suffix."""
+    cfg, model, params = small_model
+    engine = ServeEngine(model, params, slots=2, max_seq=256)
+    rng = np.random.default_rng(5)
+    pa = _prompt(cfg, rng, 3 * BLOCK)  # 96 tokens = 3 full blocks
+    pb = np.concatenate([pa[: 2 * BLOCK], _prompt(cfg, rng, 16)])  # diverges
+
+    a = Request(uid=0, prompt=pa, max_new_tokens=4)
+    b = Request(uid=1, prompt=pb, max_new_tokens=4)
+    engine.submit(a)
+    engine.step()  # A adopted + registered
+    used_after_a = engine.pool.n_used
+    assert used_after_a == 3
+    tokens_after_a = engine.stats["prefill_tokens"]
+
+    engine.submit(b)
+    engine.step()
+    # B shares A's first two pages...
+    assert b.shared_pages == a.pages[:2]
+    assert all(engine.pool.refcount(p) == 2 for p in b.shared_pages)
+    # ...allocates only its suffix (16 tokens -> 0 full blocks yet)...
+    assert engine.pool.n_used == 3
+    # ...and prefilled only the 16 divergent tokens
+    assert engine.stats["prefill_tokens"] - tokens_after_a == 16
+    assert engine.stats["prefill_tokens_saved"] == 2 * BLOCK
+    assert engine.sched.stats["prefix_hit_blocks"] == 2
+    assert engine.sched.stats["prefix_hit_requests"] == 1
+
+    engine.run()
+    assert a.done and b.done
+    assert len(a.out_tokens) == 4 and len(b.out_tokens) == 4
+    # refcount lifecycle: every page returned, reservations drained,
+    # the index forgot the dead pages
+    assert engine.pool.n_free == engine.pool.capacity
+    assert engine.pool.reserved == 0
+    assert len(engine.sched.index) == 0
+    assert engine.summary()["prefix_hit_rate"] > 0
+
+
+def test_shared_prefix_outputs_match_unshared_oracle(small_model):
+    """Divergence mid-stream: both sharers decode past a flush; the shared
+    pages are never written (A's decode output is bitwise the solo run), and
+    B's divergent suffix decodes to completion."""
+    cfg, model, params = small_model
+
+    def solo(prompt, max_new):
+        eng = ServeEngine(model, params, slots=2, max_seq=256,
+                          share_prefix=False)
+        r = Request(uid=0, prompt=prompt, max_new_tokens=max_new)
+        eng.submit(r)
+        eng.run()
+        return r.out_tokens
+
+    rng = np.random.default_rng(6)
+    pa = _prompt(cfg, rng, 2 * BLOCK)
+    pb = np.concatenate([pa, _prompt(cfg, rng, 8)])  # extends A by 8 tokens
+
+    engine = ServeEngine(model, params, slots=2, max_seq=256)
+    # both decode across a block boundary -> private flush pages
+    a = Request(uid=0, prompt=pa, max_new_tokens=BLOCK + 4)
+    b = Request(uid=1, prompt=pb.copy(), max_new_tokens=BLOCK + 4)
+    engine.submit(a)
+    engine.step()
+    engine.submit(b)
+    engine.step()  # B admitted here: sharing visible before retirement
+    assert len(b.shared_pages) == 2
+    engine.run()
+    assert a.done and b.done
+    # A's computation is untouched by sharing: bitwise vs its solo run
+    assert a.out_tokens == solo(pa, BLOCK + 4)
+    assert len(b.out_tokens) == BLOCK + 4
+    assert engine.pool.n_free == engine.pool.capacity
+
+
+def test_cow_on_spec_tail_bitwise_parity(small_model):
+    """Acceptance criterion, COW edition: B's prompt is a strict mid-block
+    prefix of A's resident block, so B adopts A's page as its speculative
+    flush destination; B's first flush diverges -> copy-on-write gives B a
+    private replica and repoints only B's column.  B never *reads* the
+    shared page before the COW, so its decode output is bitwise identical
+    to an unshared run — and A's page survives untouched."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(7)
+    pa = _prompt(cfg, rng, BLOCK + 8)  # block 0 committed at adoption
+    pb = pa[:8].copy()                 # strict prefix, ends mid-block 0
+
+    def solo_tokens(prompt, max_new):
+        eng = ServeEngine(model, params, slots=2, max_seq=256,
+                          share_prefix=False)
+        r = Request(uid=0, prompt=prompt, max_new_tokens=max_new)
+        eng.submit(r)
+        eng.run()
+        return r.out_tokens
+
+    engine = ServeEngine(model, params, slots=2, max_seq=256)
+    a = Request(uid=0, prompt=pa, max_new_tokens=2 * BLOCK)  # stays active
+    b = Request(uid=1, prompt=pb, max_new_tokens=BLOCK)      # fills block 0
+    engine.submit(a)
+    engine.step()
+    page_a = a.pages[0]
+    engine.submit(b)
+    engine.step()
+    assert b.spec_page == page_a
+    assert engine.pool.refcount(page_a) == 2
+    assert engine.sched.stats["spec_tail_adoptions"] == 1
+    kw_before = np.asarray(engine.state["caches"][0].kw[:, page_a]).copy()
+
+    engine.run()
+    assert engine.stats["cow_copies"] == 1
+    assert a.done and b.done
+    # bitwise parity vs the no-sharing oracle, for both requests
+    assert b.out_tokens == solo_tokens(pb, BLOCK)
+    assert a.out_tokens == solo_tokens(pa, 2 * BLOCK)
+    assert engine.pool.n_free == engine.pool.capacity
+
+
+def test_spec_tail_page_freed_without_cow_on_early_exit(small_model):
+    """A sharer that retires before its residual fills never COWs: the
+    speculative page just drops its extra reference."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(8)
+    pa = _prompt(cfg, rng, BLOCK + 8)
+    engine = ServeEngine(model, params, slots=2, max_seq=256)
+    a = Request(uid=0, prompt=pa, max_new_tokens=2 * BLOCK)
+    engine.submit(a)
+    engine.step()
+    b = Request(uid=1, prompt=pa[:8].copy(), max_new_tokens=3)  # exits early
+    engine.submit(b)
+    engine.step()
+    assert b.spec_page is not None
+    engine.run()
+    assert engine.stats["cow_copies"] == 0
+    assert engine.pool.n_free == engine.pool.capacity
+
+
+def test_sharing_disabled_flag(small_model):
+    cfg, model, params = small_model
+    engine = ServeEngine(model, params, slots=2, max_seq=256,
+                         share_prefix=False)
+    assert engine.sched.index is None
+    rng = np.random.default_rng(9)
+    pa = _prompt(cfg, rng, 2 * BLOCK)
+    a = Request(uid=0, prompt=pa, max_new_tokens=2)
+    b = Request(uid=1, prompt=pa.copy(), max_new_tokens=2)
+    engine.submit(a)
+    engine.step()
+    engine.submit(b)
+    engine.run()
+    assert b.shared_pages == [] and engine.stats["prefill_tokens_saved"] == 0
+
+
+def test_shared_pages_valid_under_splitkv_table_walk(small_model):
+    """Replicated pools + sharded table walk: a sharing run through the
+    cross-chip split-KV decode path produces the same tokens as the plain
+    path (shared page ids may appear in several table rows — each shard
+    walks its columns against the full pools, dist/state_specs.py)."""
+    cfg, model, params = small_model
+    if jax.device_count() < 1:
+        pytest.skip("no devices")
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    rng = np.random.default_rng(10)
+    pa = _prompt(cfg, rng, 2 * BLOCK)
+    pb = np.concatenate([pa, _prompt(cfg, rng, 8)])
+
+    def run(**kw):
+        eng = ServeEngine(model, params, slots=2, max_seq=256, **kw)
+        a = Request(uid=0, prompt=pa, max_new_tokens=6)
+        b = Request(uid=1, prompt=pb.copy(), max_new_tokens=6)
+        eng.submit(a)
+        eng.step()
+        eng.submit(b)
+        eng.run()
+        return a.out_tokens, b.out_tokens, eng
+
+    base_a, base_b, _ = run()
+    sk_a, sk_b, eng = run(mesh=mesh, splitkv="always")
+    assert eng.stats["splitkv_steps"] > 0
+    assert sk_a == base_a and sk_b == base_b
