@@ -1,6 +1,6 @@
 """Serving-throughput sweeps for the paged continuous-batching engine.
 
-Two sweeps, both appending to BENCH_serve.json so future PRs track them:
+Three sweeps, all appending to BENCH_serve.json so future PRs track them:
 
 * **offered load** (default): requests arrive on a virtual clock (the
   measured engine wall time) at a configured rate with a prompt-length mix;
@@ -12,6 +12,12 @@ Two sweeps, both appending to BENCH_serve.json so future PRs track them:
   computed vs. served from resident pages, pool pages used with vs. without
   sharing, and copy-on-write counts — the serving face of the prefix-sharing
   tentpole (docs/SERVING.md §4-5).
+* **cache families** (``--family {attn,mla,hybrid}``): the same mixed
+  workload through the unified paged engine per cache family — plain/GQA
+  K/V pools, MLA shared-kv latent pools, hybrid paged-attention +
+  dense SSM side-state — reporting per-family throughput, latency, and the
+  per-family page byte size (``kv_page_bytes``; a hybrid page spans
+  ``n_super`` layer-caches, an MLA page has no V stream).
 
 CPU smoke scale by default; the same sweeps run unchanged on TPU.
 """
@@ -26,6 +32,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.configs.base import smoke_config
+from repro.launch import serve as _serve_cli
 from repro.models.zoo import build_model
 from repro.serve.engine import Request, ServeEngine
 
@@ -201,9 +208,79 @@ def run_shared_prefix_sweep(*, shared_fracs=(0.0, 0.5, 0.9),
     return records
 
 
+# representative archs per cache family — shared with the serving CLI so
+# the bench rows always exercise what `repro.launch.serve --family` runs
+# (xlstm is CLI-only: the shim has no page accounting to sweep)
+_FAMILY_ARCHS = {
+    f: a for f, a in _serve_cli.FAMILY_ARCHS.items() if f != "xlstm"
+}
+
+
+def run_family_sweep(*, families=("attn", "mla", "hybrid"), n_requests=6,
+                     max_new=8, slots=4, max_seq=256,
+                     out_path: Path | None = None):
+    """Per-cache-family serving sweep through the unified paged engine: the
+    same mixed prompt-length workload per family, throughput/latency plus
+    the per-family page accounting (kv_page_bytes differs: a hybrid page
+    spans only the shared-attention invocations, an MLA latent page has no
+    V stream at all)."""
+    records = []
+    for family in families:
+        cfg = smoke_config(_FAMILY_ARCHS[family]).with_(kv_bits=4, kv_block=32)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(zlib.crc32(f"family:{family}".encode()))
+        plens = [8, 40, 70]
+        reqs = [
+            Request(
+                uid=i,
+                prompt=rng.integers(0, cfg.vocab, plens[i % len(plens)]).astype(np.int32),
+                max_new_tokens=max_new,
+            )
+            for i in range(n_requests)
+        ]
+        engine = ServeEngine(model, params, slots=slots, max_seq=max_seq)
+        import time as _time
+
+        t0 = _time.perf_counter()
+        for r in reqs:
+            engine.submit(r)
+        engine.run()
+        stats = engine.summary(wall_s=_time.perf_counter() - t0)
+        rec = {
+            "family": family,
+            "arch": cfg.name,
+            "paged": engine.paged,
+            "shared_kv": bool(engine.spec.shared_kv),
+            "exact_prefill": bool(engine.spec.exact_prefill),
+            "n_requests": n_requests,
+            "decoded_tokens": stats["decoded_tokens"],
+            "tokens_per_s": round(stats["tokens_per_s"], 2),
+            "latency_p50_ms": round(stats["latency_p50_ms"], 2),
+            "latency_p99_ms": round(stats["latency_p99_ms"], 2),
+            "prefill_calls": stats["prefill_calls"],
+            "kv_page_bytes": stats["kv_page_bytes"],
+            "occupancy_max": round(stats["occupancy_max"], 4),
+        }
+        records.append(rec)
+        emit(
+            f"serve.family.{family}", stats["latency_p50_ms"] * 1e3,
+            f"tok/s={rec['tokens_per_s']};p99_ms={rec['latency_p99_ms']}"
+            f";page_B={rec['kv_page_bytes']};prefills={rec['prefill_calls']}",
+        )
+    out_path = _BENCH_SERVE if out_path is None else out_path
+    _append(out_path, {
+        "backend": jax.default_backend(),
+        "sweep": "family",
+        "records": records,
+    })
+    return records
+
+
 def run():
     run_serve_sweep()
     run_shared_prefix_sweep()
+    run_family_sweep()
 
 
 if __name__ == "__main__":
@@ -212,8 +289,16 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--shared-prefix", action="store_true",
                     help="run only the shared-prefix grid")
+    ap.add_argument("--family", nargs="*", choices=sorted(_FAMILY_ARCHS),
+                    default=None,
+                    help="run only the cache-family sweep (optionally a "
+                         "subset of families)")
     args = ap.parse_args()
     if args.shared_prefix:
         run_shared_prefix_sweep()
+    elif args.family is not None:
+        run_family_sweep(
+            families=tuple(args.family) if args.family else
+            ("attn", "mla", "hybrid"))
     else:
         run()

@@ -29,7 +29,8 @@ def main():
             max_new_tokens=int(rng.integers(4, 24)),
         ))
     print(f"submitted {n_requests} requests into 4 slots "
-          f"({'paged' if engine.paged else 'dense'} engine, int4 KV cache)")
+          f"({'paged' if engine.paged else 'exact-length shim'} engine, "
+          "int4 KV cache)")
     stats = engine.run()
     print(f"served: {stats['decoded_tokens']} tokens in {stats['steps']} "
           f"batched steps, {stats['tokens_per_s']:.1f} tok/s (CPU), "

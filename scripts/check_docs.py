@@ -5,13 +5,16 @@ Checks:
 
 * README's "Kernel families" table rows match the actual kernel directories
   under src/repro/kernels/;
-* docs/SERVING.md's backticked dotted ``repro.*`` symbol references resolve
-  to real attributes (import + getattr walk);
+* backticked dotted ``repro.*`` symbol references in docs/SERVING.md *and*
+  docs/ARCHITECTURE.md resolve to real attributes (import + getattr walk) —
+  this is what keeps protocol names like ``repro.models.family.PagedSpec``
+  honest;
 * docs/SERVING.md's "Engine flags" table rows are real keyword parameters
   of ``ServeEngine.__init__``;
 * docs/SERVING.md's counter table rows appear as string literals in the
-  serving sources (engine.py / scheduler.py), modulo the ``sched_`` prefix
-  the engine adds when folding scheduler stats into ``summary()``.
+  serving sources (engine.py / scheduler.py / pages.py), modulo the
+  ``sched_`` prefix the engine adds when folding scheduler stats into
+  ``summary()``.
 
 Run directly (exit 1 on drift) or via tests/test_docs.py in the tier-1
 suite.
@@ -27,6 +30,7 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 README = REPO / "README.md"
 SERVING = REPO / "docs" / "SERVING.md"
+ARCHITECTURE = REPO / "docs" / "ARCHITECTURE.md"
 KERNELS = REPO / "src" / "repro" / "kernels"
 SERVE_SRC = REPO / "src" / "repro" / "serve"
 
@@ -101,13 +105,19 @@ def table_rows(text: str, heading_match: str) -> set[str]:
     return rows
 
 
+def check_symbols(text: str, doc_name: str) -> list[str]:
+    """Unresolvable backticked ``repro.*`` references in one doc."""
+    return [
+        f"{doc_name} references `{sym}` which does not resolve to a repro "
+        "symbol"
+        for sym in sorted(serving_symbols(text))
+        if not resolve_symbol(sym)
+    ]
+
+
 def check_serving(text: str) -> list[str]:
     """Drift errors for docs/SERVING.md against the serving sources."""
-    errors = []
-    for sym in sorted(serving_symbols(text)):
-        if not resolve_symbol(sym):
-            errors.append(f"docs/SERVING.md references `{sym}` which does "
-                          "not resolve to a repro symbol")
+    errors = check_symbols(text, "docs/SERVING.md")
     from repro.serve.engine import ServeEngine
 
     params = set(inspect.signature(ServeEngine.__init__).parameters)
@@ -118,7 +128,8 @@ def check_serving(text: str) -> list[str]:
         errors.append(f"docs/SERVING.md documents engine flag `{flag}` but "
                       "ServeEngine.__init__ has no such parameter")
     serve_src = "".join(
-        (SERVE_SRC / f).read_text() for f in ("engine.py", "scheduler.py")
+        (SERVE_SRC / f).read_text()
+        for f in ("engine.py", "scheduler.py", "pages.py")
     )
     counters = table_rows(text, "counters")
     if not counters:
@@ -154,6 +165,12 @@ def check() -> list[str]:
         errors.append("missing docs/SERVING.md")
     else:
         errors.extend(check_serving(SERVING.read_text()))
+    if not ARCHITECTURE.exists():
+        errors.append("missing docs/ARCHITECTURE.md")
+    else:
+        errors.extend(
+            check_symbols(ARCHITECTURE.read_text(), "docs/ARCHITECTURE.md")
+        )
     return errors
 
 

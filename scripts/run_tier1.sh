@@ -2,9 +2,13 @@
 # Tier-1 verification: the invariant every PR keeps green.
 #   scripts/run_tier1.sh [extra pytest args]
 # Runs the full test suite (PYTHONPATH=src, fail-fast, quiet) followed by the
-# docs-drift check (README kernel inventory + docs/SERVING.md symbol/flag/
-# counter sync).  The suite includes the serving gates: tests/test_serve_paged.py
-# (paged engine) and tests/test_serve_prefix.py (prefix sharing + COW parity).
+# docs-drift check (README kernel inventory + SERVING/ARCHITECTURE symbol/
+# flag/counter sync).  The suite includes the serving gates:
+# tests/test_serve_paged.py (paged engine + exact-length shim),
+# tests/test_serve_prefix.py (prefix sharing + COW parity), and
+# tests/test_serve_families.py (unified paged decode across cache families:
+# MLA latent paging, hybrid mixed states, SSM page-table-free jaxpr proof) —
+# plus the shared_kv paged kernel grid in tests/test_kernels_paged.py.
 # CI (.github/workflows/ci.yml) calls exactly this script, so local and CI
 # runs cannot diverge.
 set -euo pipefail

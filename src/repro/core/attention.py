@@ -93,8 +93,8 @@ def decode_attention(
     """
     if isinstance(cache, PagedQuantKVCache):
         return _paged_decode_attention(
-            q, cache, sm_scale=sm_scale, impl=impl, num_splits=num_splits,
-            return_lse=return_lse,
+            q, cache, sm_scale=sm_scale, d_v=d_v, impl=impl,
+            num_splits=num_splits, return_lse=return_lse,
         )
     if _SPLITKV["mesh"] is not None and not return_lse:
         from repro.dist import splitkv as _sk
@@ -124,18 +124,21 @@ def _paged_decode_attention(
     cache: PagedQuantKVCache,
     *,
     sm_scale: float | None,
+    d_v: int | None,
     impl: str,
     num_splits,
     return_lse: bool,
 ):
     """Paged decode dispatch: page-table walk through kernels/paged_bitdecode
-    (or, under :class:`use_splitkv`, the table walk sharded across chips)."""
+    (or, under :class:`use_splitkv`, the table walk sharded across chips).
+    ``d_v`` is required for shared_kv (MLA latent) caches — the V width is a
+    channel slice of the latent, not a stored pool dimension."""
     if _SPLITKV["mesh"] is not None and not return_lse:
         from repro.dist import splitkv as _sk
 
         return _sk.splitkv_paged_decode_attention(
             q, cache, _SPLITKV["mesh"], axis=_SPLITKV["axis"],
-            sm_scale=sm_scale, impl=impl, num_splits=num_splits,
+            sm_scale=sm_scale, d_v=d_v, impl=impl, num_splits=num_splits,
         )
     h_kv = cache.kw.shape[1]
     qt = query_transform(q, h_kv)
@@ -145,8 +148,8 @@ def _paged_decode_attention(
         cache.k_res, cache.v_res,
         cache.page_table, cache.pack_blocks, cache.res_len,
         bits=cache.bits, block_n=cache.block_n, sm_scale=sm_scale,
-        k_gran=cache.k_gran, impl=impl, num_splits=num_splits,
-        return_lse=return_lse,
+        k_gran=cache.k_gran, shared_kv=cache.shared_kv, d_v=d_v,
+        impl=impl, num_splits=num_splits, return_lse=return_lse,
     )
     if return_lse:
         o, lse = out

@@ -326,20 +326,22 @@ class PagedQuantKVCache:
     * ``length = pack_blocks * block_n + res_len`` exactly as in the dense
       cache.
 
-    ``shared_kv`` (MLA latent) is not supported in paged mode — the paged
-    decode kernel is K/V-split only; MLA serving uses the dense engine path.
+    ``shared_kv=True`` (the MLA latent mode) pages a *single* quantized
+    latent stream: the V-side pools and residual are ``None`` and the decode
+    kernel slices V out of the dequantized K tile, exactly as the dense
+    shared mode does (kernels/paged_bitdecode).
     """
 
     # shared page pools
     kw: jax.Array           # int32 [P, H, npr, d_k]
     k_scale: jax.Array      # [P, H, d_k] (channel) | [P, H, block_n] (tensor)
     k_zero: jax.Array
-    vw: jax.Array           # int32 [P, H, npr, d_v]
-    v_scale: jax.Array      # [P, H, block_n]
-    v_zero: jax.Array
+    vw: jax.Array | None    # int32 [P, H, npr, d_v]; None when shared_kv
+    v_scale: jax.Array | None  # [P, H, block_n]
+    v_zero: jax.Array | None
     # dense per-slot residual tail
     k_res: jax.Array        # bf16 [B, H, block_n, d_k]
-    v_res: jax.Array
+    v_res: jax.Array | None
     # per-sequence block table + occupancy
     page_table: jax.Array   # int32 [B, nb_max]
     pack_blocks: jax.Array  # int32 [B]
@@ -348,11 +350,7 @@ class PagedQuantKVCache:
     bits: int
     block_n: int
     k_gran: str
-
-    # shared-code compatibility (``_append_residual`` keys on it)
-    @property
-    def shared_kv(self) -> bool:
-        return False
+    shared_kv: bool = False
 
     @property
     def length(self) -> jax.Array:
@@ -369,7 +367,7 @@ jax.tree_util.register_dataclass(
         "kw", "k_scale", "k_zero", "vw", "v_scale", "v_zero",
         "k_res", "v_res", "page_table", "pack_blocks", "res_len",
     ],
-    meta_fields=["bits", "block_n", "k_gran"],
+    meta_fields=["bits", "block_n", "k_gran", "shared_kv"],
 )
 
 
@@ -384,6 +382,7 @@ def init_paged_cache(
     bits: int = 4,
     block_n: int = 128,
     k_gran: str = "channel",
+    shared_kv: bool = False,
     param_dtype=jnp.bfloat16,
     res_dtype=jnp.bfloat16,
 ) -> PagedQuantKVCache:
@@ -393,14 +392,14 @@ def init_paged_cache(
     per-slot scratch pages required by the flush-destination injectivity
     contract.  ``nb_max`` is the page-table width (max packed blocks any one
     sequence can hold).  The fresh ``page_table`` points every entry at the
-    owning slot's scratch page.
+    owning slot's scratch page.  ``shared_kv=True`` allocates the MLA latent
+    layout: a single K-side pool set, no V pools/residual.
     """
     if n_pages <= batch:
         raise ValueError(
             f"n_pages={n_pages} must exceed batch={batch} (the first "
             "`batch` pages are reserved per-slot scratch)"
         )
-    d_v = d_v if d_v is not None else d_k
     npr = layout.words_per_block(block_n, bits)
     kp_shape = (n_pages, h_kv, d_k) if k_gran == "channel" else (n_pages, h_kv, block_n)
     z32 = lambda s: jnp.zeros(s, jnp.int32)  # noqa: E731
@@ -408,26 +407,32 @@ def init_paged_cache(
     table = jnp.broadcast_to(
         jnp.arange(batch, dtype=jnp.int32)[:, None], (batch, nb_max)
     )
+    if shared_kv:
+        vw = v_scale = v_zero = v_res = None
+    else:
+        d_v = d_v if d_v is not None else d_k
+        vw = z32((n_pages, h_kv, npr, d_v))
+        v_scale = zp((n_pages, h_kv, block_n))
+        v_zero = zp((n_pages, h_kv, block_n))
+        v_res = jnp.zeros((batch, h_kv, block_n, d_v), res_dtype)
     return PagedQuantKVCache(
         kw=z32((n_pages, h_kv, npr, d_k)),
         k_scale=zp(kp_shape),
         k_zero=zp(kp_shape),
-        vw=z32((n_pages, h_kv, npr, d_v)),
-        v_scale=zp((n_pages, h_kv, block_n)),
-        v_zero=zp((n_pages, h_kv, block_n)),
+        vw=vw, v_scale=v_scale, v_zero=v_zero,
         k_res=jnp.zeros((batch, h_kv, block_n, d_k), res_dtype),
-        v_res=jnp.zeros((batch, h_kv, block_n, d_v), res_dtype),
+        v_res=v_res,
         page_table=table,
         pack_blocks=z32((batch,)),
         res_len=z32((batch,)),
-        bits=bits, block_n=block_n, k_gran=k_gran,
+        bits=bits, block_n=block_n, k_gran=k_gran, shared_kv=shared_kv,
     )
 
 
 def paged_append_decode(
     cache: PagedQuantKVCache,
     k_new: jax.Array,  # [B, H, 1, d_k]
-    v_new: jax.Array,  # [B, H, 1, d_v]
+    v_new: jax.Array | None,  # [B, H, 1, d_v]; None when shared_kv
     *,
     quant_impl: str = "auto",
 ) -> PagedQuantKVCache:
@@ -451,17 +456,32 @@ def paged_append_decode(
     dest = jnp.where(full, dest, jnp.arange(b, dtype=jnp.int32))
     dest = jnp.clip(dest, 0, cache.n_pages - 1)
 
-    pools = (cache.kw, cache.k_scale, cache.k_zero,
-             cache.vw, cache.v_scale, cache.v_zero)
+    if cache.shared_kv:
+        pools = (cache.kw, cache.k_scale, cache.k_zero)
+    else:
+        pools = (cache.kw, cache.k_scale, cache.k_zero,
+                 cache.vw, cache.v_scale, cache.v_zero)
 
     def flush(p):
-        return rf_ops.paged_residual_flush(
-            *p, k_res, v_res, full.astype(jnp.int32), dest,
+        if cache.shared_kv:
+            kw, ks, kz = p
+            vw = vs = vz = None
+        else:
+            kw, ks, kz, vw, vs, vz = p
+        out = rf_ops.paged_residual_flush(
+            kw, ks, kz, vw, vs, vz, k_res, v_res,
+            full.astype(jnp.int32), dest,
             bits=cache.bits, block_n=cache.block_n, k_gran=cache.k_gran,
-            impl=quant_impl,
+            shared_kv=cache.shared_kv, impl=quant_impl,
         )
+        return out[:3] if cache.shared_kv else out
 
-    kw, ks, kz, vw, vs, vz = lax.cond(jnp.any(full), flush, lambda p: p, pools)
+    pools = lax.cond(jnp.any(full), flush, lambda p: p, pools)
+    if cache.shared_kv:
+        kw, ks, kz = pools
+        vw = vs = vz = None
+    else:
+        kw, ks, kz, vw, vs, vz = pools
     return dataclasses.replace(
         cache, kw=kw, k_scale=ks, k_zero=kz, vw=vw, v_scale=vs, v_zero=vz,
         k_res=k_res, v_res=v_res,
@@ -511,6 +531,8 @@ def copy_pages(
     upd = {}
     for f in _PAGED_POOL_FIELDS:
         pool = getattr(cache, f)
+        if pool is None:  # shared_kv latent layout has no V-side pools
+            continue
         moved = jnp.moveaxis(pool, _page_axis(pool, f), 0)
         moved = moved.at[dst].set(moved[src])
         upd[f] = jnp.moveaxis(moved, 0, _page_axis(pool, f))
@@ -533,6 +555,11 @@ def dequant_prior(
     suffix tokens see the shared prefix exactly as decode attention would
     (dequantized), which is the same approximation the paper's decode path
     already makes.
+
+    ``shared_kv`` caches (the MLA latent pools) return ``(latent, None)``:
+    there is no V-side pool, and the per-head K/V views are derived from the
+    latent by the model's own up-projections
+    (``repro.models.mla.mla_prefill_cache`` with ``prior=``).
     """
     pages = jnp.asarray(pages, jnp.int32)
 
@@ -549,7 +576,9 @@ def dequant_prior(
         )
 
     k = dq(gather("kw"), gather("k_scale"), gather("k_zero"), cache.k_gran)
-    v = dq(gather("vw"), gather("v_scale"), gather("v_zero"), "tensor")
+    v = None if cache.shared_kv else dq(
+        gather("vw"), gather("v_scale"), gather("v_zero"), "tensor"
+    )
 
     def to_prior(x):
         # [B, J, *lead, H, n, d] -> [*lead, B, J*n, H, d]
@@ -563,7 +592,7 @@ def dequant_prior(
         x = jnp.transpose(x, perm)
         return x.reshape(*lead, b, j * n, h, d).astype(jnp.bfloat16)
 
-    return to_prior(k), to_prior(v)
+    return to_prior(k), (None if v is None else to_prior(v))
 
 
 def _quantize_full_region(cache, k, v, n_full: int, quant_impl: str) -> dict:

@@ -166,6 +166,7 @@ def splitkv_paged_decode_attention(
     *,
     axis: str = "data",
     sm_scale: float | None = None,
+    d_v: int | None = None,
     impl: str = "auto",
     num_splits: int | str | None = "auto",
 ):
@@ -187,7 +188,9 @@ def splitkv_paged_decode_attention(
 
     q: [B, 1, h_q, d_k]; cache: PagedQuantKVCache.  Returns
     [B, 1, h_q, d_v], replicated along ``axis``.  Composes with the
-    in-kernel split (``num_splits``) per chip.
+    in-kernel split (``num_splits``) per chip.  ``shared_kv`` caches (the
+    MLA latent pools) shard the same way — one pool set, no V operands —
+    with ``d_v`` naming the latent's value slice.
     """
     from repro.core.attention import inverse_query_transform, query_transform
 
@@ -207,15 +210,29 @@ def splitkv_paged_decode_attention(
         # axis (serve engine does) to keep the per-step path pad-free
         table = jnp.pad(table, ((0, 0), (0, pad)))
 
+    shared = cache.shared_kv
     rep = PS()
-    operands = (
-        qt, cache.kw, cache.k_scale, cache.k_zero,
-        cache.vw, cache.v_scale, cache.v_zero,
-        cache.k_res, cache.v_res, table, cache.pack_blocks, cache.res_len,
-    )
-    in_specs = (rep,) * 9 + (PS(None, axis), rep, rep)
+    if shared:
+        operands = (
+            qt, cache.kw, cache.k_scale, cache.k_zero,
+            cache.k_res, table, cache.pack_blocks, cache.res_len,
+        )
+        in_specs = (rep,) * 5 + (PS(None, axis), rep, rep)
+    else:
+        operands = (
+            qt, cache.kw, cache.k_scale, cache.k_zero,
+            cache.vw, cache.v_scale, cache.v_zero,
+            cache.k_res, cache.v_res, table, cache.pack_blocks, cache.res_len,
+        )
+        in_specs = (rep,) * 9 + (PS(None, axis), rep, rep)
 
-    def local(qt_, kw_, ks_, kz_, vw_, vs_, vz_, kres_, vres_, tbl_, pb_, rl_):
+    def local(*args):
+        if shared:
+            qt_, kw_, ks_, kz_, kres_, tbl_, pb_, rl_ = args
+            vw_ = vs_ = vz_ = vres_ = None
+        else:
+            (qt_, kw_, ks_, kz_, vw_, vs_, vz_, kres_, vres_, tbl_, pb_,
+             rl_) = args
         idx = lax.axis_index(axis)
         nb_local = tbl_.shape[1]
         lo = idx * nb_local
@@ -225,8 +242,8 @@ def splitkv_paged_decode_attention(
             qt_, kw_, ks_, kz_, vw_, vs_, vz_, kres_, vres_,
             tbl_, pb_local, rl_local,
             bits=cache.bits, block_n=cache.block_n, sm_scale=sm_scale,
-            k_gran=cache.k_gran, impl=impl, num_splits=num_splits,
-            return_lse=True,
+            k_gran=cache.k_gran, shared_kv=shared, d_v=d_v,
+            impl=impl, num_splits=num_splits, return_lse=True,
         )
         return merge_collective(o, lse, axis)
 

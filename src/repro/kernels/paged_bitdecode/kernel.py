@@ -14,6 +14,11 @@ split and the partials are combined by the shared logsumexp merge epilogue
 (bitdecode.kernel.merge_partials).
 
 Pools are [n_pages, H, ...]; everything else matches kernels/bitdecode.
+
+``shared_kv=True`` is the MLA latent-cache mode, mirrored from the dense
+kernel: the pools hold a single quantized latent stream, there are no V-side
+pools at all, and the V tile is a channel slice (``[:, :d_v]``) of the
+dequantized K tile — one pool page read per grid step feeds both matmuls.
 """
 from __future__ import annotations
 
@@ -31,10 +36,11 @@ from repro.kernels.bitdecode.kernel import (_CompilerParams, _unpack,
                                             init_carries, make_flash_update)
 
 
-def _kernel(pt_ref, pb_ref, rl_ref, q_ref, kw_ref, ks_ref, kz_ref,
-            vw_ref, vs_ref, vz_ref, kres_ref, vres_ref,
-            o_ref, lse_ref, m_scr, l_scr, acc_scr,
-            *, bits, block_n, bps, num_splits, res_n, sm_scale, k_gran):
+def _paged_body(pt_ref, pb_ref, rl_ref, q_ref, kw_ref, ks_ref, kz_ref,
+                vw_ref, vs_ref, vz_ref, kres_ref, vres_ref,
+                o_ref, lse_ref, m_scr, l_scr, acc_scr,
+                *, bits, block_n, bps, num_splits, res_n, sm_scale, k_gran,
+                shared_kv, d_v):
     b = pl.program_id(0)
     s = pl.program_id(2)
     j = pl.program_id(3)
@@ -51,14 +57,20 @@ def _kernel(pt_ref, pb_ref, rl_ref, q_ref, kw_ref, ks_ref, kz_ref,
     def _packed_page():
         kq = _unpack(kw_ref[0, 0], bits)  # pool block (1,1,npr,dk) -> [0,0]
         k_hat = dequant_tile(kq, ks_ref[0, 0], kz_ref[0, 0], k_gran)
-        vq = _unpack(vw_ref[0, 0], bits)
-        v_hat = dequant_tile(vq, vs_ref[0, 0], vz_ref[0, 0], "tensor")
+        if shared_kv:
+            v_hat = k_hat[:, :d_v]
+        else:
+            vq = _unpack(vw_ref[0, 0], bits)
+            v_hat = dequant_tile(vq, vs_ref[0, 0], vz_ref[0, 0], "tensor")
         update(k_hat, v_hat)
 
     @pl.when(jnp.logical_and(j == bps, s == num_splits - 1))
     def _residual():
         kr = kres_ref[0, 0].astype(jnp.bfloat16)
-        vr = vres_ref[0, 0].astype(jnp.bfloat16)
+        if shared_kv:
+            vr = kres_ref[0, 0, :, :d_v].astype(jnp.bfloat16)
+        else:
+            vr = vres_ref[0, 0].astype(jnp.bfloat16)
         mask = lax.broadcasted_iota(jnp.int32, (1, res_n), 1) < rl_ref[b]
         update(kr, vr, row_mask=mask)
 
@@ -67,30 +79,44 @@ def _kernel(pt_ref, pb_ref, rl_ref, q_ref, kw_ref, ks_ref, kz_ref,
         finalize(o_ref, lse_ref, m_scr, l_scr, acc_scr)
 
 
+def _kernel_standard(pt, pb, rl, q, kw, ks, kz, vw, vs, vz, kres, vres,
+                     o, lse, m, l, acc, **kw_args):
+    _paged_body(pt, pb, rl, q, kw, ks, kz, vw, vs, vz, kres, vres,
+                o, lse, m, l, acc, **kw_args)
+
+
+def _kernel_shared(pt, pb, rl, q, kw, ks, kz, kres, o, lse, m, l, acc,
+                   **kw_args):
+    _paged_body(pt, pb, rl, q, kw, ks, kz, None, None, None, kres, None,
+                o, lse, m, l, acc, **kw_args)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("bits", "block_n", "sm_scale", "k_gran", "num_splits",
-                     "interpret"),
+    static_argnames=("bits", "block_n", "sm_scale", "k_gran", "shared_kv",
+                     "d_v", "num_splits", "interpret"),
 )
 def paged_bitdecode_attention_pallas(
     q,             # [B, H, g, d_k]  (pre-padded)
     kw_pool,       # int32 [P, H, npr, d_k]
     k_scale_pool,  # [P, H, d_k] (channel) or [P, H, block_n]
     k_zero_pool,
-    vw_pool,       # int32 [P, H, npr, d_v]
-    v_scale_pool,  # [P, H, block_n]
+    vw_pool,       # int32 [P, H, npr, d_v]; None when shared_kv
+    v_scale_pool,  # [P, H, block_n]; None when shared_kv
     v_zero_pool,
-    k_res, v_res,  # [B, H, res_n, d]
+    k_res, v_res,  # [B, H, res_n, d]; v_res None when shared_kv
     page_table,    # int32 [B, nb_max]
     pack_blocks, res_len,
     *,
     bits: int, block_n: int, sm_scale: float, k_gran: str,
+    shared_kv: bool = False, d_v: int | None = None,
     num_splits: int = 1, interpret: bool,
 ):
     """Returns per-split partials (o [S,B,H,g,d_v], lse [S,B,H,g])."""
     b, h, g, d_k = q.shape
     _, _, npr, _ = kw_pool.shape
-    d_v = vw_pool.shape[-1]
+    if not shared_kv:
+        d_v = vw_pool.shape[-1]
     nb = page_table.shape[1]
     res_n = k_res.shape[2]
     num_splits = max(1, min(num_splits, nb))
@@ -110,16 +136,27 @@ def paged_bitdecode_attention_pallas(
     kp_spec = pl.BlockSpec(
         (1, 1, kp_last), lambda i, hh, s, j, pt, pb, rl: (page(s, j, pt, i), hh, 0)
     )
-    vw_spec = pl.BlockSpec(
-        (1, 1, npr, d_v), lambda i, hh, s, j, pt, pb, rl: (page(s, j, pt, i), hh, 0, 0)
-    )
-    vp_spec = pl.BlockSpec(
-        (1, 1, block_n), lambda i, hh, s, j, pt, pb, rl: (page(s, j, pt, i), hh, 0)
-    )
     res_spec_k = pl.BlockSpec(
         (1, 1, res_n, d_k), lambda i, hh, s, j, *_: (i, hh, 0, 0))
-    res_spec_v = pl.BlockSpec(
-        (1, 1, res_n, d_v), lambda i, hh, s, j, *_: (i, hh, 0, 0))
+
+    in_specs = [q_spec, kw_spec, kp_spec, kp_spec]
+    operands = [q, kw_pool, k_scale_pool, k_zero_pool]
+    if not shared_kv:
+        vw_spec = pl.BlockSpec(
+            (1, 1, npr, d_v), lambda i, hh, s, j, pt, pb, rl: (page(s, j, pt, i), hh, 0, 0)
+        )
+        vp_spec = pl.BlockSpec(
+            (1, 1, block_n), lambda i, hh, s, j, pt, pb, rl: (page(s, j, pt, i), hh, 0)
+        )
+        res_spec_v = pl.BlockSpec(
+            (1, 1, res_n, d_v), lambda i, hh, s, j, *_: (i, hh, 0, 0))
+        in_specs += [vw_spec, vp_spec, vp_spec, res_spec_k, res_spec_v]
+        operands += [vw_pool, v_scale_pool, v_zero_pool, k_res, v_res]
+        kernel = _kernel_standard
+    else:
+        in_specs += [res_spec_k]
+        operands += [k_res]
+        kernel = _kernel_shared
 
     out_specs = [
         pl.BlockSpec((1, 1, 1, g, d_v), lambda i, hh, s, j, *_: (s, i, hh, 0, 0)),
@@ -128,8 +165,7 @@ def paged_bitdecode_attention_pallas(
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(b, h, num_splits, n_steps),
-        in_specs=[q_spec, kw_spec, kp_spec, kp_spec, vw_spec, vp_spec, vp_spec,
-                  res_spec_k, res_spec_v],
+        in_specs=in_specs,
         out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((g, 128), jnp.float32),
@@ -138,8 +174,9 @@ def paged_bitdecode_attention_pallas(
         ],
     )
     body = functools.partial(
-        _kernel, bits=bits, block_n=block_n, bps=bps,
+        kernel, bits=bits, block_n=block_n, bps=bps,
         num_splits=num_splits, res_n=res_n, sm_scale=sm_scale, k_gran=k_gran,
+        shared_kv=shared_kv, d_v=d_v,
     )
     out, lse = pl.pallas_call(
         body,
@@ -153,7 +190,5 @@ def paged_bitdecode_attention_pallas(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
         ),
     )(page_table.astype(jnp.int32), pack_blocks.astype(jnp.int32),
-      res_len.astype(jnp.int32), q,
-      kw_pool, k_scale_pool, k_zero_pool, vw_pool, v_scale_pool, v_zero_pool,
-      k_res, v_res)
+      res_len.astype(jnp.int32), *operands)
     return out, lse

@@ -1,4 +1,10 @@
-"""Public entry point for paged low-bit decode attention (Page setting)."""
+"""Public entry point for paged low-bit decode attention (Page setting).
+
+``shared_kv=True`` is the MLA latent-cache mode: the pools hold a single
+quantized latent stream (V-side pools and residual are ``None``), the kernel
+reads each page once and slices the V tile out of the dequantized K tile —
+the paged twin of ``kernels/bitdecode``'s shared mode, same split-KV grid.
+"""
 from __future__ import annotations
 
 import jax
@@ -22,11 +28,16 @@ def paged_bitdecode_attention(
     page_table, pack_blocks, res_len,
     *,
     bits: int, block_n: int = 128, sm_scale: float | None = None,
-    k_gran: str = "channel", impl: str = "auto",
+    k_gran: str = "channel", shared_kv: bool = False, d_v: int | None = None,
+    impl: str = "auto",
     num_splits: int | str | None = "auto", return_lse: bool = False,
 ):
     b, h, g, d_k = q.shape
-    d_v = vw_pool.shape[-1]
+    if shared_kv:
+        if d_v is None:
+            raise ValueError("shared_kv requires d_v")
+    else:
+        d_v = vw_pool.shape[-1]
     if sm_scale is None:
         sm_scale = 1.0 / (d_k**0.5)
     if impl == "auto":
@@ -40,13 +51,13 @@ def paged_bitdecode_attention(
             q, kw_pool, k_scale_pool, k_zero_pool, vw_pool, v_scale_pool,
             v_zero_pool, k_res, v_res, page_table, pack_blocks, res_len,
             bits=bits, block_n=block_n, sm_scale=sm_scale, k_gran=k_gran,
-            num_splits=num_splits,
+            shared_kv=shared_kv, d_v=d_v, num_splits=num_splits,
         )
         return (out, lse) if return_lse else out
     if impl != "pallas":
         raise ValueError(impl)
 
-    g_p, dk_p, dv_p = max(8, _round_up(g, 8)), _round_up(d_k, 128), _round_up(d_v, 128)
+    g_p, dk_p = max(8, _round_up(g, 8)), _round_up(d_k, 128)
 
     def pad(x, axis_pads):
         cfg = [(0, 0)] * x.ndim
@@ -62,14 +73,26 @@ def paged_bitdecode_attention(
         kz_p = pad(k_zero_pool, [(2, dk_p - d_k)])
     else:
         ks_p, kz_p = k_scale_pool, k_zero_pool
-    vw_p = pad(vw_pool, [(3, dv_p - d_v)])
     kres_p = pad(k_res, [(3, dk_p - d_k)])
-    vres_p = pad(v_res, [(3, dv_p - d_v)])
+    if shared_kv:
+        # the V tile is a channel slice of the dequantized K tile; it must
+        # stay a lane-aligned slice of the (padded) latent width
+        if d_v % 128:
+            raise ValueError(f"shared_kv requires d_v % 128 == 0, got {d_v}")
+        vw_p = vs_p = vz_p = vres_p = None
+        dv_eff = d_v
+    else:
+        dv_p = _round_up(d_v, 128)
+        vw_p = pad(vw_pool, [(3, dv_p - d_v)])
+        vs_p, vz_p = v_scale_pool, v_zero_pool
+        vres_p = pad(v_res, [(3, dv_p - d_v)])
+        dv_eff = dv_p
 
     o_parts, lse_parts = _kernel.paged_bitdecode_attention_pallas(
-        q_p, kw_p, ks_p, kz_p, vw_p, v_scale_pool, v_zero_pool,
+        q_p, kw_p, ks_p, kz_p, vw_p, vs_p, vz_p,
         kres_p, vres_p, page_table, pack_blocks, res_len,
         bits=bits, block_n=block_n, sm_scale=float(sm_scale), k_gran=k_gran,
+        shared_kv=shared_kv, d_v=dv_eff if shared_kv else None,
         num_splits=num_splits, interpret=jax.default_backend() != "tpu",
     )
     if o_parts.shape[0] == 1:  # unsplit: partials are already the answer

@@ -1,5 +1,5 @@
 """Oracle for paged low-bit decode attention: gather pages, then reuse the
-dense bitdecode reference."""
+dense bitdecode reference (which also owns the shared_kv latent semantics)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -9,6 +9,8 @@ from repro.kernels.bitdecode import ref as bd_ref
 
 def _gather(pool, table):
     """pool [P, H, ...] + table [B, nb] -> [B, H, nb, ...]."""
+    if pool is None:  # shared_kv: no V-side pools
+        return None
     g = jnp.take(pool, table, axis=0)  # [B, nb, H, ...]
     return jnp.moveaxis(g, 2, 1)
 
@@ -16,12 +18,13 @@ def _gather(pool, table):
 def paged_bitdecode_attention_ref(
     q,
     kw_pool, k_scale_pool, k_zero_pool,   # [P,H,npr,dk], [P,H,dk|block]
-    vw_pool, v_scale_pool, v_zero_pool,
+    vw_pool, v_scale_pool, v_zero_pool,   # None when shared_kv
     k_res, v_res,                          # dense residual per sequence
     page_table,                            # int32 [B, nb_max]
     pack_blocks, res_len,
     *,
-    bits, block_n=128, sm_scale=None, k_gran="channel", num_splits=1,
+    bits, block_n=128, sm_scale=None, k_gran="channel",
+    shared_kv=False, d_v=None, num_splits=1,
 ):
     kw = _gather(kw_pool, page_table)
     ks = _gather(k_scale_pool, page_table)
@@ -32,5 +35,5 @@ def paged_bitdecode_attention_ref(
     return bd_ref.bitdecode_attention_ref(
         q, kw, ks, kz, vw, vs, vz, k_res, v_res, pack_blocks, res_len,
         bits=bits, block_n=block_n, sm_scale=sm_scale, k_gran=k_gran,
-        num_splits=num_splits,
+        shared_kv=shared_kv, d_v=d_v, num_splits=num_splits,
     )

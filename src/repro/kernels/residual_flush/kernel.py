@@ -239,24 +239,18 @@ def _paged_body(
     full_ref,
     dest_ref,
     kres_ref,
-    vres_ref,
-    kw_in,
-    ks_in,
-    kz_in,
-    vw_in,
-    vs_in,
-    vz_in,
-    kw_out,
-    ks_out,
-    kz_out,
-    vw_out,
-    vs_out,
-    vz_out,
-    *,
+    *refs,
     bits,
     k_gran,
+    shared_kv,
     param_dtype,
 ):
+    if shared_kv:
+        (kw_in, ks_in, kz_in, kw_out, ks_out, kz_out) = refs
+        vres_ref = vw_in = vs_in = vz_in = vw_out = vs_out = vz_out = None
+    else:
+        (vres_ref, kw_in, ks_in, kz_in, vw_in, vs_in, vz_in,
+         kw_out, ks_out, kz_out, vw_out, vs_out, vz_out) = refs
     b = pl.program_id(0)
     full = full_ref[b] != 0
 
@@ -269,13 +263,14 @@ def _paged_body(
         kw_out[0, 0] = w
         ks_out[0, 0] = s
         kz_out[0, 0] = z
-        v = vres_ref[0, 0].astype(jnp.float32)
-        wv, sv, zv = quant_block_tile(
-            v, bits=bits, granularity="tensor", param_dtype=param_dtype
-        )
-        vw_out[0, 0] = wv
-        vs_out[0, 0] = sv
-        vz_out[0, 0] = zv
+        if not shared_kv:
+            v = vres_ref[0, 0].astype(jnp.float32)
+            wv, sv, zv = quant_block_tile(
+                v, bits=bits, granularity="tensor", param_dtype=param_dtype
+            )
+            vw_out[0, 0] = wv
+            vs_out[0, 0] = sv
+            vz_out[0, 0] = zv
 
     @pl.when(jnp.logical_not(full))
     def _keep():
@@ -284,14 +279,15 @@ def _paged_body(
         kw_out[0, 0] = kw_in[0, 0]
         ks_out[0, 0] = ks_in[0, 0]
         kz_out[0, 0] = kz_in[0, 0]
-        vw_out[0, 0] = vw_in[0, 0]
-        vs_out[0, 0] = vs_in[0, 0]
-        vz_out[0, 0] = vz_in[0, 0]
+        if not shared_kv:
+            vw_out[0, 0] = vw_in[0, 0]
+            vs_out[0, 0] = vs_in[0, 0]
+            vz_out[0, 0] = vz_in[0, 0]
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bits", "block_n", "k_gran", "interpret"),
+    static_argnames=("bits", "block_n", "k_gran", "shared_kv", "interpret"),
 )
 def paged_residual_flush_pallas(
     kw_pool,
@@ -308,20 +304,24 @@ def paged_residual_flush_pallas(
     bits: int,
     block_n: int,
     k_gran: str,
+    shared_kv: bool = False,
     interpret: bool,
 ):
     """Commit ``k_res[b]``/``v_res[b]`` into pool page ``dest_page[b]`` of the
     shared ``[P, H, ...]`` page pools for every sequence with ``full[b] != 0``;
     other sequences' destination pages pass through untouched (callers point
     them at per-slot scratch pages so destinations stay pairwise distinct).
-    Returns the six updated pool arrays, aliased in place on TPU.
+    Returns the six updated pool arrays (V side ``None`` when ``shared_kv`` —
+    the MLA latent pools have no V stream), aliased in place on TPU.
     """
     n_pages, h, npr, d_k = kw_pool.shape
-    d_v = vw_pool.shape[-1]
     b = k_res.shape[0]
     param_dtype = k_scale_pool.dtype
     if not interpret:
-        minor = aliased_minor_dims(d_k, d_v, block_n, k_gran, False)
+        minor = aliased_minor_dims(
+            d_k, None if shared_kv else vw_pool.shape[-1], block_n, k_gran,
+            shared_kv,
+        )
         if any(m % 128 for m in minor):
             raise ValueError(
                 "paged_residual_flush_pallas writes the pools in place and "
@@ -338,24 +338,35 @@ def paged_residual_flush_pallas(
     )
     kp_shape = (1, 1, d_k) if k_gran == "channel" else (1, 1, block_n)
     kp_spec = pl.BlockSpec(kp_shape, lambda i, j, f, dr: (dst(i, j, f, dr), j, 0))
-    vw_spec = pl.BlockSpec(
-        (1, 1, npr, d_v), lambda i, j, f, dr: (dst(i, j, f, dr), j, 0, 0)
-    )
-    vp_spec = pl.BlockSpec(
-        (1, 1, block_n), lambda i, j, f, dr: (dst(i, j, f, dr), j, 0)
-    )
     kres_spec = pl.BlockSpec((1, 1, block_n, d_k), lambda i, j, f, dr: (i, j, 0, 0))
-    vres_spec = pl.BlockSpec((1, 1, block_n, d_v), lambda i, j, f, dr: (i, j, 0, 0))
 
-    pool_specs = [w_spec, kp_spec, kp_spec, vw_spec, vp_spec, vp_spec]
-    pools = [kw_pool, k_scale_pool, k_zero_pool, vw_pool, v_scale_pool, v_zero_pool]
-    in_specs = [kres_spec, vres_spec] + pool_specs
-    operands = [k_res, v_res] + pools
+    if shared_kv:
+        pool_specs = [w_spec, kp_spec, kp_spec]
+        pools = [kw_pool, k_scale_pool, k_zero_pool]
+        in_specs = [kres_spec] + pool_specs
+        operands = [k_res] + pools
+        n_lead = 3  # full, dest_page, k_res precede the aliased pools
+    else:
+        d_v = vw_pool.shape[-1]
+        vw_spec = pl.BlockSpec(
+            (1, 1, npr, d_v), lambda i, j, f, dr: (dst(i, j, f, dr), j, 0, 0)
+        )
+        vp_spec = pl.BlockSpec(
+            (1, 1, block_n), lambda i, j, f, dr: (dst(i, j, f, dr), j, 0)
+        )
+        vres_spec = pl.BlockSpec(
+            (1, 1, block_n, d_v), lambda i, j, f, dr: (i, j, 0, 0))
+        pool_specs = [w_spec, kp_spec, kp_spec, vw_spec, vp_spec, vp_spec]
+        pools = [kw_pool, k_scale_pool, k_zero_pool, vw_pool, v_scale_pool,
+                 v_zero_pool]
+        in_specs = [kres_spec, vres_spec] + pool_specs
+        operands = [k_res, v_res] + pools
+        n_lead = 4  # full, dest_page, k_res, v_res precede the aliased pools
     out_shape = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in pools]
 
-    # alias each pool input onto its output; indices count the two
-    # scalar-prefetch operands (full, dest_page) and the two residual inputs
-    aliases = {4 + i: i for i in range(len(pools))}
+    # alias each pool input onto its output; indices count the scalar-prefetch
+    # operands (full, dest_page) and the residual inputs
+    aliases = {n_lead + i: i for i in range(len(pools))}
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -364,7 +375,8 @@ def paged_residual_flush_pallas(
         out_specs=pool_specs,
     )
     body = functools.partial(
-        _paged_body, bits=bits, k_gran=k_gran, param_dtype=param_dtype
+        _paged_body, bits=bits, k_gran=k_gran, shared_kv=shared_kv,
+        param_dtype=param_dtype,
     )
     out = pl.pallas_call(
         body,
@@ -376,4 +388,7 @@ def paged_residual_flush_pallas(
             dimension_semantics=("parallel", "parallel")
         ),
     )(full.astype(jnp.int32), dest_page.astype(jnp.int32), *operands)
+    if shared_kv:
+        kw_pool, k_scale_pool, k_zero_pool = out
+        return kw_pool, k_scale_pool, k_zero_pool, None, None, None
     return tuple(out)

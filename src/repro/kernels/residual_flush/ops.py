@@ -78,6 +78,7 @@ def paged_residual_flush(
     bits: int,
     block_n: int,
     k_gran: str,
+    shared_kv: bool = False,
     impl: str = "auto",
 ):
     """Paged face of the fused residual flush: commit the bf16 residual of
@@ -89,7 +90,8 @@ def paged_residual_flush(
     paged injectivity contract: ``dest_page`` entries must be pairwise
     distinct.  Callers satisfy it by pointing non-flushing sequences at their
     reserved per-slot scratch page (pool pages ``[0, B)``, never allocated to
-    requests — serve/pages.py).
+    requests — serve/pages.py).  ``shared_kv`` is the MLA latent-pool mode
+    (no V-side pools; V operands are ``None``).
 
     impl: 'pallas' | 'xla' | 'auto' (pallas on TPU when the pool minor dims
     are lane-aligned, xla otherwise — the aliased pools cannot be lane-padded
@@ -97,7 +99,8 @@ def paged_residual_flush(
     """
     if impl == "auto":
         minor = _kernel.aliased_minor_dims(
-            kw_pool.shape[-1], vw_pool.shape[-1], block_n, k_gran, False
+            kw_pool.shape[-1], None if shared_kv else vw_pool.shape[-1],
+            block_n, k_gran, shared_kv,
         )
         lane_ok = not any(m % 128 for m in minor)
         impl = "pallas" if jax.default_backend() == "tpu" and lane_ok else "xla"
@@ -105,13 +108,13 @@ def paged_residual_flush(
         return _kernel.paged_residual_flush_pallas(
             kw_pool, k_scale_pool, k_zero_pool, vw_pool, v_scale_pool,
             v_zero_pool, k_res, v_res, full, dest_page,
-            bits=bits, block_n=block_n, k_gran=k_gran,
+            bits=bits, block_n=block_n, k_gran=k_gran, shared_kv=shared_kv,
             interpret=jax.default_backend() != "tpu",
         )
     if impl == "xla":
         return _ref.paged_residual_flush_ref(
             kw_pool, k_scale_pool, k_zero_pool, vw_pool, v_scale_pool,
             v_zero_pool, k_res, v_res, full, dest_page,
-            bits=bits, block_n=block_n, k_gran=k_gran,
+            bits=bits, block_n=block_n, k_gran=k_gran, shared_kv=shared_kv,
         )
     raise ValueError(f"unknown impl {impl!r}")

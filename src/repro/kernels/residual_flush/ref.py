@@ -93,6 +93,7 @@ def paged_residual_flush_ref(
     bits: int,
     block_n: int,
     k_gran: str,
+    shared_kv: bool = False,
 ):
     """Oracle for :func:`..kernel.paged_residual_flush_pallas`: quantize every
     residual, gather the current destination pages, select against ``full``,
@@ -101,7 +102,8 @@ def paged_residual_flush_ref(
     reserved per-slot scratch page), so the scatter has no duplicate indices.
 
     kw_pool: int32 [P, H, npr, d_k]; k_res: [B, H, block_n, d_k];
-    full/dest_page: int32 [B].  Returns the six updated pool arrays.
+    full/dest_page: int32 [B].  Returns the six updated pool arrays (V side
+    ``None`` when ``shared_kv`` — the MLA latent pools have no V stream).
     """
     param_dtype = k_scale_pool.dtype
     if block_n != layout.words_per_block(block_n, bits) * layout.packing_ratio(bits):
@@ -112,15 +114,23 @@ def paged_residual_flush_ref(
     w, s, z = jax.vmap(
         lambda r: quantizer.quantize_and_pack(r, bits, k_gran, param_dtype=param_dtype)
     )(k_res)
-    wv, sv, zv = jax.vmap(
-        lambda r: quantizer.quantize_and_pack(r, bits, "tensor", param_dtype=param_dtype)
-    )(v_res)
 
     def commit(pool, new):
         cur = jnp.take(pool, dest, axis=0)
         keep = fl.reshape((-1,) + (1,) * (new.ndim - 1))
         return pool.at[dest].set(jnp.where(keep, new.astype(pool.dtype), cur))
 
+    if shared_kv:
+        return (
+            commit(kw_pool, w),
+            commit(k_scale_pool, s),
+            commit(k_zero_pool, z),
+            None, None, None,
+        )
+
+    wv, sv, zv = jax.vmap(
+        lambda r: quantizer.quantize_and_pack(r, bits, "tensor", param_dtype=param_dtype)
+    )(v_res)
     return (
         commit(kw_pool, w),
         commit(k_scale_pool, s),

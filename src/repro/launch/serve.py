@@ -1,9 +1,17 @@
 """Serving launcher: continuous-batching paged serving with the quantized
-KV cache (dense slot fallback for models without a paged decode path).
+KV cache — every cache family decodes through the page table (plain/GQA
+attention, MLA latent pools, hybrid Mamba2+attention; no-KV recurrent
+models serve through the exact-length shim).
 
 Usage (CPU demo with a reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
       --requests 16 --slots 4 --max-new 24
+  PYTHONPATH=src python -m repro.launch.serve --family mla --smoke \
+      --requests 8
+
+``--family {attn,mla,hybrid,xlstm}`` picks a representative arch for the
+cache family (llama3-8b / deepseek-v3-671b / zamba2-7b / xlstm-1.3b) so the
+unified paged engine is exercisable from the CLI for all families.
 
 Page-pool sizing: --pages bounds the KV pool; by default the pool is fully
 provisioned (slots * max_seq worth of pages).  Undersize it (e.g.
@@ -21,10 +29,20 @@ from repro.configs.base import get_config, smoke_config
 from repro.models.zoo import build_model
 from repro.serve.engine import Request, ServeEngine
 
+FAMILY_ARCHS = {
+    "attn": "llama3-8b",
+    "mla": "deepseek-v3-671b",
+    "hybrid": "zamba2-7b",
+    "xlstm": "xlstm-1.3b",
+}
+
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="explicit architecture (overrides --family)")
+    ap.add_argument("--family", choices=sorted(FAMILY_ARCHS), default=None,
+                    help="serve a representative arch of this cache family")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
@@ -35,7 +53,7 @@ def main():
     ap.add_argument("--pages", type=int, default=None,
                     help="page-pool size (default: fully provisioned)")
     ap.add_argument("--dense", action="store_true",
-                    help="force the legacy dense slot engine")
+                    help="force the exact-length shim (dense decode state)")
     ap.add_argument("--splitkv", choices=("auto", "always", "never"),
                     default="auto", help="cross-chip split-KV routing policy")
     ap.add_argument("--shared-prefix-len", type=int, default=0,
@@ -45,6 +63,10 @@ def main():
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable the scheduler's prompt-prefix index")
     args = ap.parse_args()
+    if args.arch is None:
+        if args.family is None:
+            ap.error("one of --arch / --family is required")
+        args.arch = FAMILY_ARCHS[args.family]
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = cfg.with_(kv_bits=args.kv_bits)
@@ -55,8 +77,9 @@ def main():
         paged=False if args.dense else None, n_pages=args.pages,
         splitkv=args.splitkv, share_prefix=not args.no_prefix_sharing,
     )
-    print(f"[serve] engine mode: {'paged' if engine.paged else 'dense'}"
-          + (f", pool={engine.n_pages} pages" if engine.paged else ""))
+    print(f"[serve] engine mode: {'paged' if engine.paged else 'exact-length shim'}"
+          + (f", pool={engine.n_pages} pages "
+             f"({engine.kv_page_bytes} B/page)" if engine.paged else ""))
 
     rng = np.random.default_rng(0)
     sharing_demo = (

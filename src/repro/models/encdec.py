@@ -23,6 +23,11 @@ class EncDecLM:
     def __init__(self, cfg):
         self.cfg = cfg
 
+    def paged_spec(self):
+        """Not serveable by the engine: prefill needs encoder frame
+        embeddings, which Requests don't carry (repro.models.family)."""
+        return None
+
     def _enc_def(self):
         cfg = self.cfg
         return {

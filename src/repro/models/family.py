@@ -1,0 +1,78 @@
+"""Cache-family protocol: what a model declares about its decode state.
+
+Every backbone exposes ``model.paged_spec() -> PagedSpec | None`` and the
+serving engine (serve/engine.py) is driven *entirely* by the returned spec —
+there is no per-architecture branching in the engine anymore:
+
+* ``PagedSpec(paged=True, ...)`` — the model's KV layers decode through the
+  page table (``model.init_paged_decode_state`` returns a state whose
+  ``state["caches"]`` is a list of layer-stacked
+  :class:`repro.core.qcache.PagedQuantKVCache`).  ``shared_kv`` marks the
+  MLA latent layout (one pool set, V sliced from K); ``side_state`` names
+  the constant-size per-slot pytrees that ride along *outside* the page
+  table (HybridLM's SSM recurrent states) together with the batch axis the
+  engine splices them on at admission.
+* ``PagedSpec(paged=False, ...)`` — the model has no growing KV at all
+  (xLSTM: every state is constant-size recurrent).  The engine serves it
+  through the thin exact-length shim: per-request exact-length prefill
+  spliced into the batched dense state, same scheduler, same decode cycle.
+* ``None`` — the model cannot be served by the engine (its prefill needs
+  inputs beyond ``tokens``: enc-dec frame embeddings, VLM patches).
+
+``pages_per_token`` and ``page_layers`` are the per-family page accounting:
+one page-table column covers ``block_n`` tokens across *all* ``page_layers``
+paged layer-caches, so a hybrid page is a factor ``n_layers / n_super``
+smaller than a dense transformer's at equal width; both surface in the
+engine's ``summary()`` next to the measured ``kv_page_bytes``.  ``d_k`` /
+``d_v`` / ``shared_kv`` declare the pool layout — the engine validates them
+against the pools ``init_paged_decode_state`` actually allocates, so a
+model whose spec and state constructor drift apart fails at construction,
+not mid-decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedSpec:
+    """Declared decode-cache capabilities of one model family."""
+
+    paged: bool           # KV layers decode through the page table
+    block_n: int          # tokens per page-table column
+    n_kv_heads: int       # KV heads per paged layer (1 for the MLA latent)
+    d_k: int              # packed K (or latent) width
+    d_v: int              # value width (latent slice when shared_kv)
+    shared_kv: bool = False   # single latent pool (MLA) vs split K/V pools
+    page_layers: int = 0      # layer-cache instances behind each table column
+    # constant-size per-slot state spliced at admission: ("path", batch_dim)
+    # pairs, where "path" is a '/'-joined key path into the decode state
+    side_state: tuple = ()
+    # prompts must prefill at their exact length (recurrent side-state would
+    # absorb right-padding) — admission buckets become exact lengths
+    exact_prefill: bool = False
+    # the model supports suffix prefill against a dequantized prior
+    # (``model.prefill(prior=...)``) — the prefix-sharing prerequisite
+    supports_prior: bool = False
+
+    @property
+    def pages_per_token(self) -> float:
+        """Page-table columns consumed per cached token (per family)."""
+        return 1.0 / self.block_n if self.paged else 0.0
+
+
+def get_path(tree, path: str):
+    """Resolve a '/'-joined ``side_state`` path inside a decode state."""
+    node = tree
+    for part in path.split("/"):
+        node = node[part]
+    return node
+
+
+def set_path(tree, path: str, value) -> None:
+    """Write a '/'-joined ``side_state`` path inside a decode state."""
+    parts = path.split("/")
+    node = tree
+    for part in parts[:-1]:
+        node = node[part]
+    node[parts[-1]] = value

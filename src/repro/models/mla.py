@@ -90,10 +90,74 @@ def mla_init_cache(cfg, batch: int, max_seq: int, *, block_align=None):
     )
 
 
+def mla_init_paged_cache(cfg, n_pages: int, batch: int, nb_max: int):
+    """Paged latent cache (serving engine layout): the single quantized
+    latent stream lives in shared ``shared_kv`` page pools — no V-side pools
+    at all — and decodes through ``kernels/paged_bitdecode``'s latent walk."""
+    return qcache.init_paged_cache(
+        n_pages, batch, 1, cfg.kv_lora + cfg.qk_rope, nb_max,
+        bits=cfg.kv_bits, block_n=cfg.kv_block, k_gran="channel",
+        shared_kv=True,
+    )
+
+
+def _expand_latent(p, cfg, lat):
+    """Latent ``[B, T, kv_lora + qk_rope]`` -> expanded per-head
+    (k [B,T,h,qk_nope+qk_rope], v [B,T,h,v_head_dim]) via the up-projections.
+
+    Algebraically the absorbed decode score ``q_eff · lat`` equals the
+    expanded ``q · k`` (``q_nope·(c@W_uk) == (q_nope@W_uk)·c``), so attending
+    an expanded *dequantized* latent prior gives the suffix prefill the same
+    numeric view of shared pages that paged latent decode has.
+    """
+    b, t = lat.shape[:2]
+    c = lat[..., : cfg.kv_lora]
+    r = lat[..., cfg.kv_lora :]
+    k_nope = jnp.einsum("btl,lhk->bthk", c, p["k_up"])
+    k = jnp.concatenate(
+        [k_nope,
+         jnp.broadcast_to(r[:, :, None, :], (b, t, cfg.n_heads, cfg.qk_rope)
+                          ).astype(k_nope.dtype)],
+        axis=-1,
+    )
+    v = jnp.einsum("btl,lhk->bthk", c, p["v_up"])
+    return k, v
+
+
 def mla_prefill_cache(p, cfg, x, positions, max_seq: int, *, quant_impl="auto",
-                      lengths=None, block_align=None):
-    out = mla_train(p, cfg, x, positions)
+                      lengths=None, block_align=None, prior=None,
+                      prior_len=None):
+    """Prefill attention + latent cache build.
+
+    ``prior`` (prefix sharing, serving engine) is the dequantized shared
+    latent prior ``(lat [B, T, 1, kv_lora+qk_rope], None)`` from
+    ``qcache.dequant_prior`` on a shared_kv paged cache: ``x`` holds only the
+    divergent suffix, whose expanded Q/K/V attend the expanded prior through
+    :func:`repro.core.attention.prefix_suffix_attention` (callers pass
+    suffix-global ``positions``).  The built cache holds suffix latents only.
+    """
     c_kv, k_rope = _latent(p, cfg, x, positions)
+    if prior is None:
+        out = mla_train(p, cfg, x, positions)
+    else:
+        b, s = x.shape[:2]
+        q_nope, q_rope = _queries(p, cfg, x, positions)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_nope = jnp.einsum("bsl,lhk->bshk", c_kv, p["k_up"])
+        k = jnp.concatenate(
+            [k_nope,
+             jnp.broadcast_to(k_rope[:, :, None, :],
+                              (b, s, cfg.n_heads, cfg.qk_rope)
+                              ).astype(k_nope.dtype)],
+            axis=-1,
+        )
+        v = jnp.einsum("bsl,lhk->bshk", c_kv, p["v_up"])
+        k_prior, v_prior = _expand_latent(p, cfg, prior[0][:, :, 0, :])
+        out = catt.prefix_suffix_attention(
+            q, k, v, k_prior, v_prior, prior_len,
+            sm_scale=1.0 / (cfg.qk_nope + cfg.qk_rope) ** 0.5,
+        )
+        out = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
     lat = jnp.concatenate([c_kv, k_rope], axis=-1)[:, None]  # [B,1,S,kvl+dr]
     cache = mla_init_cache(cfg, x.shape[0], max_seq, block_align=block_align)
     cache = qcache.prefill(cache, lat, None, lengths=lengths, quant_impl=quant_impl)

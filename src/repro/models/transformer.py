@@ -27,6 +27,7 @@ from jax import lax
 from repro.core import qcache
 from repro.models import attention as mattn
 from repro.models import layers, mamba2, mla, moe, xlstm
+from repro.models.family import PagedSpec
 from repro.models.params import P, init_tree, shape_tree, spec_tree, stack
 
 
@@ -221,7 +222,7 @@ class DecoderLM:
         if cfg.mixer == "mla":
             a, cache = mla.mla_prefill_cache(
                 p["attn"], cfg, h, positions, max_seq, lengths=lengths,
-                block_align=block_align,
+                block_align=block_align, prior=prior, prior_len=prior_len,
             )
         else:
             a, cache = mattn.attn_prefill_cache(
@@ -256,18 +257,20 @@ class DecoderLM:
         ``(k_prior, v_prior)`` pairs (``[layers, B, T, H, d]``, dequantized
         shared pool pages) whose first ``prior_len[b]`` tokens the suffix
         attends through :func:`~repro.core.attention.prefix_suffix_attention`.
+        For MLA stacks the prior is the latent stream itself
+        (``(lat, None)`` from a shared_kv paged cache) and each layer expands
+        it through its own up-projections (``mla.mla_prefill_cache``).
         Token positions (RoPE) are offset by ``prior_len`` so the suffix lands
         at its unshared global positions; the returned caches hold *suffix*
-        content only and ``pos`` counts ``prior_len + lengths``.  Requires the
-        plain-attention path (no MLA / vision / M-RoPE — the same models the
-        paged serving engine accepts).
+        content only and ``pos`` counts ``prior_len + lengths``.  Requires a
+        token-only front (no vision / M-RoPE).
         """
         cfg = self.cfg
         if prior is not None:
-            if cfg.mixer != "attn" or cfg.vision_stub or cfg.mrope_sections:
+            if cfg.vision_stub or cfg.mrope_sections:
                 raise ValueError(
-                    "suffix prefill (prior=) requires plain attention "
-                    "without vision/M-RoPE fronts"
+                    "suffix prefill (prior=) requires a token-only front "
+                    "(no vision/M-RoPE)"
                 )
             if lengths is None or prior_len is None:
                 raise ValueError("suffix prefill needs lengths and prior_len")
@@ -289,6 +292,18 @@ class DecoderLM:
                     return x, cache
 
                 x, cache_stack = lax.scan(body, x, params[f"stack_{i}"])
+            elif prior[i][1] is None:  # latent prior (MLA shared_kv pools)
+                def body_l(x, xs, _kind=kind):
+                    lp, kp = xs
+                    x, cache = self._block_prefill(
+                        lp, _kind, x, positions, max_seq, cache_lengths,
+                        block_align, prior=(kp, None), prior_len=prior_len,
+                    )
+                    return x, cache
+
+                x, cache_stack = lax.scan(
+                    body_l, x, (params[f"stack_{i}"], prior[i][0])
+                )
             else:
                 def body_p(x, xs, _kind=kind):
                     lp, kp, vp = xs
@@ -343,24 +358,52 @@ class DecoderLM:
             "pos": jnp.zeros((batch_size,), jnp.int32),
         }
 
+    def paged_spec(self) -> PagedSpec | None:
+        """Declared cache family (see repro.models.family).  Plain attention
+        and MLA both page; token-plus-patch fronts (VLM stub, M-RoPE) return
+        ``None`` — the serving engine cannot feed their prefill."""
+        cfg = self.cfg
+        if cfg.vision_stub or cfg.mrope_sections:
+            return None
+        n_layers = sum(n for _, n in self.stacks)
+        if cfg.mixer == "mla":
+            return PagedSpec(
+                paged=True, block_n=cfg.kv_block, n_kv_heads=1,
+                d_k=cfg.kv_lora + cfg.qk_rope, d_v=cfg.kv_lora,
+                shared_kv=True, page_layers=n_layers, supports_prior=True,
+            )
+        if cfg.mixer == "attn":
+            return PagedSpec(
+                paged=True, block_n=cfg.kv_block, n_kv_heads=cfg.n_kv_heads,
+                d_k=cfg.head_dim, d_v=cfg.head_dim,
+                page_layers=n_layers, supports_prior=True,
+            )
+        return None
+
     def init_paged_decode_state(self, batch_size: int, *, n_pages: int,
                                 nb_max: int):
         """Paged decode state for the serving engine: per-stack
         :class:`~repro.core.qcache.PagedQuantKVCache` pools (stacked along
-        layers, page tables managed host-side by serve/pages.py).  Requires
-        plain K/V attention — MLA's shared latent stream has no paged decode
-        kernel and serves through the dense engine path instead."""
+        layers, page tables managed host-side by serve/pages.py).  MLA stacks
+        allocate the shared_kv latent pool layout
+        (``mla.mla_init_paged_cache``); both families decode through
+        ``kernels/paged_bitdecode``."""
         cfg = self.cfg
-        if cfg.mixer != "attn":
+        spec = self.paged_spec()
+        if spec is None or not spec.paged:
             raise ValueError(
-                f"paged decode state requires mixer='attn', got {cfg.mixer!r}"
+                f"no paged decode path for mixer={cfg.mixer!r} with this "
+                "front (see DecoderLM.paged_spec)"
             )
         caches = []
         for kind, n in self.stacks:
-            one = qcache.init_paged_cache(
-                n_pages, batch_size, cfg.n_kv_heads, cfg.head_dim, nb_max,
-                bits=cfg.kv_bits, block_n=cfg.kv_block, k_gran=cfg.kv_gran,
-            )
+            if cfg.mixer == "mla":
+                one = mla.mla_init_paged_cache(cfg, n_pages, batch_size, nb_max)
+            else:
+                one = qcache.init_paged_cache(
+                    n_pages, batch_size, cfg.n_kv_heads, cfg.head_dim, nb_max,
+                    bits=cfg.kv_bits, block_n=cfg.kv_block, k_gran=cfg.kv_gran,
+                )
             caches.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (n, *a.shape)), one))
         return {
             "caches": caches,
@@ -507,29 +550,70 @@ class HybridLM:
         logits = layers.unembed(params["unembed"], x, cfg.vocab)
         return _ce_loss(logits[:, :-1], batch["labels"][:, 1:], batch["loss_mask"][:, 1:])
 
-    def init_decode_state(self, batch_size: int, max_seq: int, *, mesh=None,
-                          splitkv_axis: str = "data"):
+    def paged_spec(self) -> PagedSpec:
+        """Mixed cache family: the shared attention block's caches (one per
+        super-block invocation) page; the Mamba2 recurrent states are
+        constant-size per-slot ``side_state`` the engine splices at admission
+        and that carry no page-table work (asserted by the jaxpr proof in
+        tests/test_serve_families.py).  ``exact_prefill``: the recurrent
+        states would absorb right-padding, so prompts prefill at exact
+        lengths; prefix sharing would additionally need prefix SSM states
+        cached per page, which pages don't hold — ``supports_prior=False``."""
+        cfg = self.cfg
+        side = (("ssm_main", 2),) + ((("ssm_tail", 1),) if self.tail else ())
+        return PagedSpec(
+            paged=True, block_n=cfg.kv_block, n_kv_heads=cfg.n_kv_heads,
+            d_k=cfg.head_dim, d_v=cfg.head_dim, page_layers=self.n_super,
+            side_state=side, exact_prefill=True, supports_prior=False,
+        )
+
+    def _side_states(self, batch_size: int):
         cfg = self.cfg
         one_m = mamba2.mamba2_init_state(cfg, batch_size)
-        cache = qcache.init_cache(
-            batch_size, cfg.n_kv_heads, cfg.head_dim, max_seq,
-            bits=cfg.kv_bits, block_n=cfg.kv_block, k_gran=cfg.kv_gran,
-            block_align=qcache.splitkv_block_align(mesh, splitkv_axis),
-        )
         st = {
             "ssm_main": jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (self.n_super, cfg.attn_every, *a.shape)), one_m
             ),
-            "attn_caches": jax.tree.map(
-                lambda a: jnp.broadcast_to(a, (self.n_super, *a.shape)), cache
-            ),
-            "pos": jnp.zeros((batch_size,), jnp.int32),
         }
         if self.tail:
             st["ssm_tail"] = jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (self.tail, *a.shape)), one_m
             )
         return st
+
+    def init_decode_state(self, batch_size: int, max_seq: int, *, mesh=None,
+                          splitkv_axis: str = "data"):
+        cfg = self.cfg
+        cache = qcache.init_cache(
+            batch_size, cfg.n_kv_heads, cfg.head_dim, max_seq,
+            bits=cfg.kv_bits, block_n=cfg.kv_block, k_gran=cfg.kv_gran,
+            block_align=qcache.splitkv_block_align(mesh, splitkv_axis),
+        )
+        return {
+            **self._side_states(batch_size),
+            "caches": [jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (self.n_super, *a.shape)), cache
+            )],
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+        }
+
+    def init_paged_decode_state(self, batch_size: int, *, n_pages: int,
+                                nb_max: int):
+        """Paged decode state: one PagedQuantKVCache pool set stacked over
+        the ``n_super`` shared-attention invocations; SSM recurrent states
+        stay dense per slot (they never touch the page table)."""
+        cfg = self.cfg
+        one = qcache.init_paged_cache(
+            n_pages, batch_size, cfg.n_kv_heads, cfg.head_dim, nb_max,
+            bits=cfg.kv_bits, block_n=cfg.kv_block, k_gran=cfg.kv_gran,
+        )
+        return {
+            **self._side_states(batch_size),
+            "caches": [jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (self.n_super, *a.shape)), one
+            )],
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+        }
 
     def decode_step(self, params, state, tokens, *, impl="auto", quant_impl="auto"):
         cfg = self.cfg
@@ -560,9 +644,9 @@ class HybridLM:
             return x, (sst, cache)
 
         x, (ssm_main, caches) = lax.scan(
-            super_body, x, (params["main"], state["ssm_main"], state["attn_caches"])
+            super_body, x, (params["main"], state["ssm_main"], state["caches"][0])
         )
-        new_state = dict(state, ssm_main=ssm_main, attn_caches=caches, pos=pos + 1)
+        new_state = dict(state, ssm_main=ssm_main, caches=[caches], pos=pos + 1)
         if self.tail:
             def tail_body(x, ys):
                 lp, st = ys
@@ -603,7 +687,7 @@ class HybridLM:
         x, (ssm_main, caches) = lax.scan(super_body, x, params["main"])
         state = {
             "ssm_main": ssm_main,
-            "attn_caches": caches,
+            "caches": [caches],
             "pos": jnp.full((b,), s, jnp.int32),
         }
         if self.tail:
@@ -705,6 +789,17 @@ class XLSTMLM:
         x = layers.apply_norm(cfg.norm, params["final_norm"], x)
         logits = layers.unembed(params["unembed"], x, cfg.vocab)
         return _ce_loss(logits[:, :-1], batch["labels"][:, 1:], batch["loss_mask"][:, 1:])
+
+    def paged_spec(self) -> PagedSpec:
+        """No growing KV anywhere: every state is a constant-size recurrent
+        pytree.  ``paged=False`` routes the serving engine's exact-length
+        shim; ``side_state`` tells it where the recurrent states live and on
+        which axis their batch sits (after the super-block stacking dims)."""
+        return PagedSpec(
+            paged=False, block_n=self.cfg.kv_block, n_kv_heads=0, d_k=0,
+            d_v=0, side_state=(("blocks/mlstm", 2), ("blocks/slstm", 1)),
+            exact_prefill=True,
+        )
 
     def init_decode_state(self, batch_size: int, max_seq: int = 0):
         cfg = self.cfg

@@ -1,6 +1,7 @@
-"""Paged-first continuous-batching serving engine.
+"""Paged continuous-batching serving engine — single decode path, driven by
+the model's declared cache family (``model.paged_spec()``).
 
-The engine composes the three serving-layer pieces into the per-cycle loop:
+The engine composes the serving-layer pieces into one per-cycle loop:
 
 * :class:`~repro.serve.scheduler.Scheduler` — request lifecycle
   (WAITING → PREFILL → DECODE → DONE), strict-FIFO admission gated on slot
@@ -12,48 +13,52 @@ The engine composes the three serving-layer pieces into the per-cycle loop:
   ``kernels/paged_bitdecode`` with the fused paged residual flush on the
   append path (``qcache.paged_append_decode``).
 
+**Every cache family decodes through the page table.**  What differs per
+family is declared, not forked (`repro.models.family.PagedSpec`):
+
+* plain/GQA attention — split K/V pools, pow2-bucketed ragged prefill,
+  prefix sharing + speculative-tail COW;
+* MLA — a single ``shared_kv`` latent pool set per stack (V is a channel
+  slice of the dequantized latent, in-kernel), same prefix sharing: the
+  suffix prefill expands dequantized latent prior pages through each
+  layer's up-projections;
+* hybrid (Mamba2 + shared attention) — the attention caches page; the
+  constant-size SSM recurrent states are ``side_state`` the engine splices
+  per slot at admission and that never touch the page table.  Recurrent
+  state cannot absorb right-padding, so admission groups are *exact-length*
+  (``exact_prefill``) and prefix sharing stays off (``supports_prior``);
+* no-KV recurrent models (xLSTM) — ``PagedSpec(paged=False)``: served by a
+  thin exact-length shim (per-request prefill spliced into the batched
+  dense state) that shares this engine's scheduler and decode cycle;
+  ``paged_spec() is None`` (enc-dec, VLM stub) means the engine cannot feed
+  the model's prefill at all and refuses at construction.
+
 One cycle (:meth:`ServeEngine.step`):
 
-1. admit waiting requests into free slots; the scheduler's prefix index
-   maps each prompt's shared leading blocks onto resident pool pages
-   (retained, counted once — see serve/scheduler.py), and **one jitted
-   prefill per divergent-suffix length bucket** computes only the unshared
-   tail of each prompt (suffix tokens attend the dequantized shared prefix
-   via ``model.prefill(prior=...)``; the jit cache keys on the bucket
-   length plus the padded prior width).  The resulting dense suffix blocks
-   adopt into freshly allocated pages *behind* the shared ones
-   (``adopt_prefill(base_blocks=...)``), and the prompt's blocks register
-   in the index for later arrivals;
-2. allocate the destination page for any sequence whose residual fills on
-   this step (host mirrors the length counters, so this is exact, and the
-   admission reservation guarantees the allocation succeeds).  If the
-   destination column holds a page with refcount > 1 (a speculative shared
-   tail), **copy-on-write** fires first: a private page is allocated, the
-   shared page's packed block is replicated device-side
-   (``qcache.copy_pages``), and only this request's page-table column is
-   repointed — other holders never observe the flush;
-3. push the page table to the device if it changed, then run one jitted
-   batched decode step over all slots — through the cross-chip split-KV
-   path when a mesh is attached and the cycle is long-context/low-occupancy
-   (``auto_num_splits`` handles the in-kernel split either way; shared
-   pages stay valid there because the pools are replicated and only the
-   table *walk* is sharded — dist/state_specs.py);
-4. collect next tokens host-side, retire finished requests (their pages
-   return to the pool once their last holder drops them), record per-token
-   latency, pool occupancy, and prefix-sharing hit counters.
+1. admit waiting requests into free slots; paged families run **one jitted
+   prefill per suffix-length bucket** (the scheduler's prefix index maps
+   shared leading blocks onto resident pool pages, and suffix tokens attend
+   the dequantized shared prefix via ``model.prefill(prior=...)``), adopt
+   the resulting blocks into freshly allocated pages behind the shared ones
+   (``adopt_prefill(base_blocks=...)``), and splice any declared dense
+   side-state; the shim prefills per request at exact length;
+2. (paged) allocate the destination page for any sequence whose residual
+   fills on this step; a destination holding a refcount>1 page (speculative
+   shared tail) is **copy-on-written** first (``qcache.copy_pages``);
+3. push the page table if it changed, then run one jitted batched decode
+   step over all slots — through the cross-chip split-KV path when a mesh
+   is attached and the cycle is long-context/low-occupancy;
+4. advance per-token accounting (one shared code path: ``req.pos``
+   increments every decoded token, forced retirement counts ``evicted``
+   exactly once), retire finished requests, record latency/occupancy.
 
 Idle slots keep decoding garbage into their private scratch pages (their
 page-table rows point at scratch, see serve/pages.py) — wasted lanes, never
 corruption.
-
-Models without a paged decode path (MLA latent caches, SSM hybrids,
-enc-dec) fall back to the legacy dense slot engine: per-request exact-length
-prefill spliced into a dense batched state.
 """
 from __future__ import annotations
 
 import time
-from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +67,7 @@ import numpy as np
 from repro.core import attention as catt
 from repro.core import qcache
 from repro.kernels.bitdecode import ops as bd_ops
+from repro.models.family import get_path, set_path
 from repro.serve import pages as pg
 from repro.serve.scheduler import (  # noqa: F401 (Phase/Request re-exported)
     Phase,
@@ -83,18 +89,20 @@ class ServeEngine:
                  mesh=None, splitkv_axis: str = "data",
                  splitkv: str = "auto", share_prefix: bool = True,
                  spec_tail: bool = True):
-        """``paged=None`` auto-detects (paged when the model can);
-        ``n_pages`` bounds the KV pool (default: full provisioning,
-        ``slots * nb_max`` + scratch — lower it to oversubscribe and exercise
-        admission backpressure).  ``mesh``/``splitkv_axis`` attach the
-        cross-chip split-KV decode path; ``splitkv`` is the routing policy:
-        'auto' (engage on long-context low-occupancy cycles), 'always',
-        'never'.  ``share_prefix`` enables the scheduler's prompt-prefix
-        index (paged mode only): admitted prompts reuse resident pool pages
-        for their shared leading blocks and prefill only the divergent
-        suffix.  ``spec_tail`` additionally adopts a matching donor block as
-        the speculative flush destination when a prompt ends mid-block —
-        the copy-on-write candidate (see docs/SERVING.md)."""
+        """``paged=None`` follows the model's ``paged_spec()`` (paged when it
+        declares a paged family); ``paged=False`` forces the exact-length
+        shim for any token-prefill model (debug/baseline path); ``paged=True``
+        raises if the model declares no paged family.  ``n_pages`` bounds the
+        KV pool (default: full provisioning, ``slots * nb_max`` + scratch —
+        lower it to oversubscribe and exercise admission backpressure).
+        ``mesh``/``splitkv_axis`` attach the cross-chip split-KV decode path;
+        ``splitkv`` is the routing policy: 'auto' (engage on long-context
+        low-occupancy cycles), 'always', 'never'.  ``share_prefix`` enables
+        the scheduler's prompt-prefix index for families that support suffix
+        prefill (``PagedSpec.supports_prior``); ``spec_tail`` additionally
+        adopts a matching donor block as the speculative flush destination
+        when a prompt ends mid-block — the copy-on-write candidate (see
+        docs/SERVING.md)."""
         self.model = model
         self.params = params
         self.slots = slots
@@ -104,24 +112,25 @@ class ServeEngine:
         self.splitkv_axis = splitkv_axis
         self.splitkv = splitkv
         cfg = getattr(model, "cfg", None)
-        self.block_n = getattr(cfg, "kv_block", 128)
-        self._h_kv = getattr(cfg, "n_kv_heads", 1)
 
-        can_page = (
-            hasattr(model, "init_paged_decode_state")
-            and cfg is not None
-            and getattr(cfg, "mixer", None) == "attn"
-            and not getattr(cfg, "vision_stub", False)
-            and not getattr(cfg, "encdec", False)
-        )
-        if paged and not can_page:
+        spec = model.paged_spec() if hasattr(model, "paged_spec") else None
+        if spec is None:
             raise ValueError(
-                "model has no paged decode path (needs plain K/V attention)"
+                "model declares no serveable cache family (paged_spec() is "
+                "None): its prefill needs inputs beyond tokens"
             )
-        self.paged = can_page if paged is None else paged
+        if paged and not spec.paged:
+            raise ValueError(
+                "model declares no paged decode capability "
+                "(see repro.models.family.PagedSpec)"
+            )
+        self.spec = spec
+        self.paged = (spec is not None and spec.paged) if paged is None else bool(paged)
+        self.block_n = spec.block_n if spec is not None else getattr(cfg, "kv_block", 128)
+        self._h_kv = spec.n_kv_heads if spec is not None else getattr(cfg, "n_kv_heads", 1)
 
-        # both modes share the one jitted decode step (static shapes) and the
-        # host-side next-token buffer (one device->host pull per cycle)
+        # one jitted decode step (static shapes) shared by every family, and
+        # the host-side next-token buffer (one device->host pull per cycle)
         self._step = jax.jit(
             lambda p, s, t: model.decode_step(
                 p, s, t, impl=impl, quant_impl=quant_impl
@@ -159,18 +168,44 @@ class ServeEngine:
             self.n_pages = (
                 n_pages if n_pages is not None else slots * nb_max + slots
             )
-            self.pool = pg.PagePool(self.n_pages, n_scratch=slots)
+            self.state = model.init_paged_decode_state(
+                slots, n_pages=self.n_pages, nb_max=nb_max
+            )
+            # the allocated pools must match the declared family — catches a
+            # model whose spec and init_paged_decode_state drift apart
+            first = self.state["caches"][0]
+            if (first.shared_kv != spec.shared_kv
+                    or first.kw.shape[-1] != spec.d_k
+                    or (not spec.shared_kv
+                        and first.vw.shape[-1] != spec.d_v)):
+                raise ValueError(
+                    "paged_spec() disagrees with init_paged_decode_state: "
+                    f"declared (shared_kv={spec.shared_kv}, d_k={spec.d_k}, "
+                    f"d_v={spec.d_v}) vs allocated (shared_kv="
+                    f"{first.shared_kv}, d_k={first.kw.shape[-1]})"
+                )
+            # per-family page size in bytes: one table column spans every
+            # paged layer-cache (spec.page_layers of them), measured exactly
+            # from the allocated pools
+            self.kv_page_bytes = sum(
+                getattr(pc, f).nbytes
+                for pc in self.state["caches"]
+                for f in qcache._PAGED_POOL_FIELDS
+                if getattr(pc, f) is not None
+            ) // self.n_pages
+            self.pool = pg.PagePool(
+                self.n_pages, n_scratch=slots, page_bytes=self.kv_page_bytes
+            )
+            share = share_prefix and spec.supports_prior
             self.sched = Scheduler(
                 slots=slots, pool=self.pool, block_n=self.block_n,
                 max_seq=max_seq, min_bucket=min_bucket,
-                share_prefix=share_prefix, spec_tail=spec_tail,
+                share_prefix=share, spec_tail=spec_tail and share,
+                exact_buckets=spec.exact_prefill,
                 namespace=(
                     f"{getattr(cfg, 'name', 'model')}/b{getattr(cfg, 'kv_bits', 4)}"
                     f"/n{self.block_n}/{getattr(cfg, 'kv_gran', 'channel')}"
                 ),
-            )
-            self.state = model.init_paged_decode_state(
-                slots, n_pages=self.n_pages, nb_max=nb_max
             )
             # host mirror of the device page table; unassigned entries point
             # at the slot's scratch page (flush-destination injectivity)
@@ -180,11 +215,18 @@ class ServeEngine:
             self._table_dirty = False
             # one jitted bucketed prefill; jit cache keys on the padded
             # token shape = (slots, bucket_len) -> one compile per bucket
-            self._prefill = jax.jit(
-                lambda p, toks, lengths: model.prefill(
-                    p, {"tokens": toks}, toks.shape[1], lengths=lengths
+            # (per exact length for exact_prefill families)
+            if spec.exact_prefill:
+                self._prefill = jax.jit(
+                    lambda p, toks: model.prefill(p, {"tokens": toks},
+                                                  toks.shape[1])
                 )
-            )
+            else:
+                self._prefill = jax.jit(
+                    lambda p, toks, lengths: model.prefill(
+                        p, {"tokens": toks}, toks.shape[1], lengths=lengths
+                    )
+                )
             # shared-prefix suffix prefill: dequantizes the prior pages from
             # the pools and attends them from the divergent suffix; the jit
             # cache keys on (bucket_len, padded prior blocks) — prior width
@@ -198,10 +240,12 @@ class ServeEngine:
 
             self._prefill_shared = jax.jit(_suffix_prefill)
         else:
+            # exact-length shim: dense state, per-request prefill, no pool
             self.pool = None
-            self.sched = None
-            self.queue: deque[Request] = deque()
-            self.active: list[Request | None] = [None] * slots
+            self.sched = Scheduler(
+                slots=slots, pool=None, block_n=self.block_n, max_seq=max_seq,
+                share_prefix=False, spec_tail=False, exact_buckets=True,
+            )
             self.state = model.init_decode_state(slots, max_seq)
             self._prefill = jax.jit(
                 lambda p, b: model.prefill(p, b, self.max_seq)
@@ -210,13 +254,7 @@ class ServeEngine:
     # ------------------------------------------------------------ public
 
     def submit(self, req: Request) -> None:
-        if self.paged:
-            self.sched.submit(req)
-        else:
-            self.queue.append(req)
-
-    def step(self) -> bool:
-        return self._step_paged() if self.paged else self._step_dense()
+        self.sched.submit(req)
 
     def run(self, max_cycles: int = 10_000):
         t0 = time.perf_counter()
@@ -235,14 +273,20 @@ class ServeEngine:
             **self.stats,
             "wall_s": wall_s,
             "tokens_per_s": self.stats["decoded_tokens"] / max(wall_s, 1e-9),
+            **{f"sched_{k}": v for k, v in self.sched.stats.items()},
+            "latency_p50_ms": 1e3 * _percentile(self._token_latencies, 50),
+            "latency_p99_ms": 1e3 * _percentile(self._token_latencies, 99),
         }
         if self.paged:
             out.update(
-                **{f"sched_{k}": v for k, v in self.sched.stats.items()},
-                latency_p50_ms=1e3 * _percentile(self._token_latencies, 50),
-                latency_p99_ms=1e3 * _percentile(self._token_latencies, 99),
                 occupancy_mean=float(np.mean(self._occupancy)) if self._occupancy else 0.0,
                 occupancy_max=float(np.max(self._occupancy)) if self._occupancy else 0.0,
+                # per-family page accounting (repro.models.family.PagedSpec):
+                # one table column spans spec.page_layers layer-caches
+                kv_page_bytes=self.kv_page_bytes,
+                kv_bytes_in_use=self.pool.bytes_in_use,
+                kv_page_layers=self.spec.page_layers,
+                pages_per_token=self.spec.pages_per_token,
                 # fraction of admitted full prompt blocks served from
                 # resident pages instead of prefill compute
                 prefix_hit_rate=(
@@ -253,11 +297,83 @@ class ServeEngine:
         return out
 
     def _has_work(self) -> bool:
-        if self.paged:
-            return self.sched.has_work
-        return bool(self.queue or any(r is not None for r in self.active))
+        return self.sched.has_work
 
-    # ------------------------------------------------------- paged cycle
+    # ------------------------------------------------ the one decode cycle
+
+    def step(self) -> bool:
+        t0 = time.perf_counter()
+        if self.paged:
+            self._admit_and_prefill()
+        else:
+            self._admit_exact()
+        if not self.sched.active:
+            return False
+        if self.paged:
+            self._ensure_flush_pages()
+            if self._table_dirty:
+                self.state["caches"] = pg.set_page_tables(
+                    self.state["caches"], self._table
+                )
+                self._table_dirty = False
+
+        if self._use_splitkv_now():
+            step_fn = self._step_splitkv
+            self.stats["splitkv_steps"] += 1
+        else:
+            step_fn = self._step
+        logits, self.state = step_fn(
+            self.params, self.state, jnp.asarray(self.tokens)
+        )
+        # one host sync per cycle: the logits pull; current tokens already
+        # live host-side, and the write-back below is plain numpy
+        nxt = np.argmax(np.asarray(logits)[:, 0], axis=-1)
+        self.stats["steps"] += 1
+        self._advance(nxt, time.perf_counter() - t0)
+        if self.paged:
+            self._occupancy.append(self.pool.occupancy)
+        return True
+
+    def _advance(self, nxt: np.ndarray, dt: float) -> None:
+        """Shared per-token accounting for every family: record the decoded
+        token, advance ``req.pos`` (this step appended its KV), retire on
+        EOS or the token budget — forced retirement counts ``evicted``
+        exactly once."""
+        for slot, req in list(self.sched.active.items()):
+            tok = int(self.tokens[slot, 0])
+            req.out_tokens.append(tok)
+            req.pos += 1
+            req.token_latencies_s.append(dt)
+            self._token_latencies.append(dt)
+            self.stats["decoded_tokens"] += 1
+            hit_eos = self.eos_id is not None and tok == self.eos_id
+            if hit_eos or len(req.out_tokens) >= req.max_new_tokens:
+                if not hit_eos:
+                    self.stats["evicted"] += 1  # forced retirement
+                if self.paged:
+                    self._table[slot, :] = slot  # stale entries -> scratch
+                    self._table_dirty = True
+                self.sched.complete(req)
+            else:
+                self.tokens[slot, 0] = int(nxt[slot])
+
+    def _use_splitkv_now(self) -> bool:
+        if self._step_splitkv is None or self.splitkv == "never":
+            return False
+        if self.splitkv == "always":
+            return True
+        axis_size = int(self.mesh.shape[self.splitkv_axis])
+        if axis_size <= 1:
+            return False
+        active = self.sched.active.values()
+        max_blocks = max((r.pos // self.block_n for r in active), default=0)
+        cores = bd_ops.default_splitkv_cores()
+        return (
+            len(self.sched.active) * self._h_kv < cores
+            and max_blocks >= 2 * axis_size
+        )
+
+    # ----------------------------------------------------- paged admission
 
     def _alloc_page(self, req: Request) -> int:
         """Pool alloc charged to ``req``: converts one of its reservation
@@ -266,6 +382,33 @@ class ServeEngine:
         req.reserved_pages = max(req.reserved_pages - 1, 0)
         req.pages.append(page)
         return page
+
+    def _splice_side_state(self, dstate, slot_ids) -> list[str]:
+        """Copy the declared dense side-state (``PagedSpec.side_state`` —
+        e.g. HybridLM's SSM recurrent states) of just-prefilled rows into
+        their decode slots (prefill row ``r`` -> slot ``slot_ids[r]``); the
+        page table never sees these pytrees.  Returns the top-level state
+        keys handled (the shim skips them in its generic splice)."""
+        if not self.spec.side_state:
+            return []
+        sidx = jnp.asarray(slot_ids, jnp.int32)
+        rows = jnp.arange(len(slot_ids), dtype=jnp.int32)
+        handled = []
+        for path, bdim in self.spec.side_state:
+            dst = get_path(self.state, path)
+            src = get_path(dstate, path)
+
+            def put(d, s):
+                idx = [slice(None)] * d.ndim
+                idx[bdim] = sidx
+                src_idx = [slice(None)] * s.ndim
+                src_idx[bdim] = rows
+                return d.at[tuple(idx)].set(
+                    s[tuple(src_idx)].astype(d.dtype))
+
+            set_path(self.state, path, jax.tree.map(put, dst, src))
+            handled.append(path.split("/")[0])
+        return handled
 
     def _admit_and_prefill(self) -> None:
         groups = self.sched.admit()
@@ -281,7 +424,12 @@ class ServeEngine:
                 lens[r] = sl
                 self.stats["prefill_tokens"] += sl
                 self.stats["prefill_tokens_saved"] += req.prompt_len - sl
-            if p_max == 0:
+            if self.spec.exact_prefill:
+                # all admitted rows carry exactly bucket_len real tokens —
+                # recurrent side-state tolerates no right-padding, and the
+                # model's prefill returns last-token logits directly
+                logits, dstate = self._prefill(self.params, jnp.asarray(toks))
+            elif p_max == 0:
                 logits, dstate = self._prefill(
                     self.params, jnp.asarray(toks), jnp.asarray(lens)
                 )
@@ -327,6 +475,7 @@ class ServeEngine:
                 pages_per_req=pages_per_req, block_n=self.block_n,
                 base_blocks=shared_blocks,
             )
+            self._splice_side_state(dstate, slot_ids)
             sidx = jnp.asarray(slot_ids, jnp.int32)
             self.state["pos"] = self.state["pos"].at[sidx].set(
                 jnp.asarray([r.prompt_len for r in reqs], jnp.int32)
@@ -380,72 +529,24 @@ class ServeEngine:
                 self.state["caches"], cow_src, cow_dst
             )
 
-    def _use_splitkv_now(self) -> bool:
-        if self._step_splitkv is None or self.splitkv == "never":
-            return False
-        if self.splitkv == "always":
-            return True
-        axis_size = int(self.mesh.shape[self.splitkv_axis])
-        if axis_size <= 1:
-            return False
-        active = self.sched.active.values()
-        max_blocks = max((r.pos // self.block_n for r in active), default=0)
-        cores = bd_ops.default_splitkv_cores()
-        return (
-            len(self.sched.active) * self._h_kv < cores
-            and max_blocks >= 2 * axis_size
-        )
+    # ------------------------------------------------- exact-length shim
 
-    def _step_paged(self) -> bool:
-        t0 = time.perf_counter()
-        self._admit_and_prefill()
-        if not self.sched.active:
-            return False
-        self._ensure_flush_pages()
-        if self._table_dirty:
-            self.state["caches"] = pg.set_page_tables(
-                self.state["caches"], self._table
-            )
-            self._table_dirty = False
+    def _admit_exact(self) -> None:
+        """Shim admission for dense-state models: the same scheduler (pool-
+        less, exact-length groups), one per-request exact-length prefill
+        spliced into the batched state."""
+        for reqs in self.sched.admit().values():
+            for req in reqs:
+                self._fill_slot(req)
 
-        if self._use_splitkv_now():
-            step_fn = self._step_splitkv
-            self.stats["splitkv_steps"] += 1
-        else:
-            step_fn = self._step
-        logits, self.state = step_fn(
-            self.params, self.state, jnp.asarray(self.tokens)
-        )
-        nxt = np.argmax(np.asarray(logits)[:, 0], axis=-1)
-        self.stats["steps"] += 1
-        dt = time.perf_counter() - t0
-
-        for slot, req in list(self.sched.active.items()):
-            tok = int(self.tokens[slot, 0])
-            req.out_tokens.append(tok)
-            req.pos += 1  # this step appended tok's KV
-            req.token_latencies_s.append(dt)
-            self._token_latencies.append(dt)
-            self.stats["decoded_tokens"] += 1
-            hit_eos = self.eos_id is not None and tok == self.eos_id
-            if hit_eos or len(req.out_tokens) >= req.max_new_tokens:
-                if not hit_eos:
-                    self.stats["evicted"] += 1  # forced retirement
-                self._table[slot, :] = slot  # stale entries -> scratch
-                self._table_dirty = True
-                self.sched.complete(req)
-            else:
-                self.tokens[slot, 0] = int(nxt[slot])
-        self._occupancy.append(self.pool.occupancy)
-        return True
-
-    # ---------------------------------------------- dense fallback cycle
-
-    def _fill_slot(self, i: int, req: Request):
-        """Prefill one request into slot i (single-sequence prefill, then the
-        per-slot cache rows are spliced into the batched state)."""
+    def _fill_slot(self, req: Request) -> None:
+        i = req.slot
         batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
         logits, st = self._prefill(self.params, batch)
+
+        # declared recurrent side-state splices on its true batch axis (the
+        # same routine the paged admission uses, with one row -> one slot)
+        handled = self._splice_side_state(st, [i])
 
         def splice(dst, src):
             if dst is None:
@@ -460,42 +561,12 @@ class ServeEngine:
             src_idx[bdim] = 0
             return dst.at[tuple(idx)].set(src[tuple(src_idx)].astype(dst.dtype))
 
-        self.state = jax.tree.map(splice, self.state, st)
+        for key in self.state:
+            if key in handled:
+                continue
+            self.state[key] = jax.tree.map(splice, self.state[key], st[key])
         self.tokens[i, 0] = int(np.argmax(np.asarray(logits)[0, -1]))
         self.stats["prefill_calls"] += 1
+        self.stats["prefill_tokens"] += req.prompt_len
         req.phase = Phase.DECODE
         req.pos = req.prompt_len
-        self.active[i] = req
-
-    def _step_dense(self) -> bool:
-        """Legacy slot engine: refill free slots one request at a time, one
-        batched decode step, retire finished/evicted requests."""
-        for i in range(self.slots):
-            if self.active[i] is None and self.queue:
-                self._fill_slot(i, self.queue.popleft())
-
-        if all(r is None for r in self.active):
-            return False
-
-        logits, self.state = self._step(
-            self.params, self.state, jnp.asarray(self.tokens)
-        )
-        # one host sync per cycle: the logits pull; current tokens already
-        # live host-side, and the write-back below is plain numpy
-        nxt = np.argmax(np.asarray(logits)[:, 0], axis=-1)
-        self.stats["steps"] += 1
-        for i, req in enumerate(self.active):
-            if req is None:
-                continue
-            tok = int(self.tokens[i, 0])
-            req.out_tokens.append(tok)
-            self.stats["decoded_tokens"] += 1
-            hit_eos = self.eos_id is not None and tok == self.eos_id
-            if hit_eos or len(req.out_tokens) >= req.max_new_tokens:
-                if not hit_eos and len(req.out_tokens) >= req.max_new_tokens:
-                    self.stats["evicted"] += 1  # forced retirement
-                req.phase = Phase.DONE
-                self.active[i] = None
-            else:
-                self.tokens[i, 0] = int(nxt[i])
-        return True

@@ -52,13 +52,19 @@ from repro.core import qcache as _qc
 class PagePool:
     """Free-list page allocator with commitment accounting and refcounts."""
 
-    def __init__(self, n_pages: int, *, n_scratch: int):
+    def __init__(self, n_pages: int, *, n_scratch: int, page_bytes: int = 0):
+        """``page_bytes`` is the per-family byte size of one page across
+        every paged layer-cache (the engine measures it from the allocated
+        pools), so occupancy can be reported in bytes — a hybrid page covers
+        ``n_super`` layer-caches, a dense transformer's covers ``n_layers``,
+        and an MLA latent page has no V stream at all."""
         if n_pages <= n_scratch:
             raise ValueError(
                 f"n_pages={n_pages} must exceed n_scratch={n_scratch}"
             )
         self.n_pages = n_pages
         self.n_scratch = n_scratch
+        self.page_bytes = page_bytes
         self._free: deque[int] = deque(range(n_scratch, n_pages))
         self._refcount = np.zeros(n_pages, np.int32)
         self.reserved = 0  # pages promised but not yet allocated
@@ -90,6 +96,11 @@ class PagePool:
     def occupancy(self) -> float:
         """Physically allocated fraction of the allocatable pool."""
         return self.n_used / max(1, self.capacity)
+
+    @property
+    def bytes_in_use(self) -> int:
+        """Pool bytes behind allocated pages (per-family ``page_bytes``)."""
+        return self.n_used * self.page_bytes
 
     # -------------------------------------------------------- reservations
 
@@ -214,6 +225,8 @@ def adopt_prefill(
             pidx = jnp.asarray(pages, jnp.int32)
             for f in _POOL_FIELDS:
                 pool = getattr(pc, f)
+                if pool is None:  # shared_kv latent pools have no V side
+                    continue
                 dn = getattr(dc, f)
                 # dn [L, m, H, nb, ...]; advanced idx at dims (1, 3) -> [N, L, H, ...]
                 blocks = dn[:, ridx, :, bidx]
@@ -222,8 +235,9 @@ def adopt_prefill(
                 )
         upd["k_res"] = pc.k_res.at[:, sidx].set(
             dc.k_res[:, rrow].astype(pc.k_res.dtype))
-        upd["v_res"] = pc.v_res.at[:, sidx].set(
-            dc.v_res[:, rrow].astype(pc.v_res.dtype))
+        if pc.v_res is not None:
+            upd["v_res"] = pc.v_res.at[:, sidx].set(
+                dc.v_res[:, rrow].astype(pc.v_res.dtype))
         upd["pack_blocks"] = pc.pack_blocks.at[:, sidx].set(pack)
         upd["res_len"] = pc.res_len.at[:, sidx].set(res)
         out.append(dataclasses.replace(pc, **upd))

@@ -203,13 +203,20 @@ class Scheduler:
     def __init__(self, *, slots: int, pool: PagePool | None, block_n: int,
                  max_seq: int, min_bucket: int = 16,
                  share_prefix: bool = True, spec_tail: bool = True,
-                 namespace: str = "default"):
+                 exact_buckets: bool = False, namespace: str = "default"):
+        """``exact_buckets`` groups admissions by *exact* suffix length
+        instead of power-of-two buckets — required by cache families whose
+        prefill cannot be right-padded (recurrent side-state absorbs pad
+        tokens: HybridLM's SSM states, xLSTM; ``PagedSpec.exact_prefill``).
+        Costs one prefill compile per distinct prompt length instead of per
+        bucket — the documented trade-off of those families."""
         self.slots = slots
         self.pool = pool
         self.block_n = block_n
         self.max_seq = max_seq
         self.min_bucket = min_bucket
         self.spec_tail = spec_tail
+        self.exact_buckets = exact_buckets
         self.index: PrefixIndex | None = None
         if share_prefix and pool is not None:
             self.index = PrefixIndex(namespace, block_n)
@@ -317,9 +324,12 @@ class Scheduler:
                 self.stats["prefix_lookup_blocks"] += len(chain)
             if spec is not None:
                 self.stats["spec_tail_adoptions"] += 1
-            bucket = bucket_for(
-                req.suffix_len(self.block_n), min_bucket=self.min_bucket
-            )
+            if self.exact_buckets:
+                bucket = req.suffix_len(self.block_n)
+            else:
+                bucket = bucket_for(
+                    req.suffix_len(self.block_n), min_bucket=self.min_bucket
+                )
             groups.setdefault(bucket, []).append(req)
         return groups
 

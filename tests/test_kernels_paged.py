@@ -1,5 +1,6 @@
 """Paged (Page-setting) kernel vs oracle, including shared page pools with
-scrambled page tables and per-sequence lengths."""
+scrambled page tables and per-sequence lengths, and the shared_kv (MLA
+latent-pool) parity grid against the dense shared_kv oracle."""
 import functools
 
 import jax
@@ -7,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.bitdecode import ops as bd_ops
 from repro.kernels.kv_quant import ref as kq_ref
 from repro.kernels.paged_bitdecode import ops as pg_ops
 
@@ -48,8 +50,6 @@ def test_paged_matches_ref(bits, k_gran):
 
 def test_paged_equals_dense_on_same_blocks():
     """A paged cache with identity page table == the dense kernel."""
-    from repro.kernels.bitdecode import ops as bd_ops
-
     b, h, g, d, block_n, nb = 1, 2, 4, 128, 128, 4
     args = _make(jax.random.PRNGKey(1), b=b, h=h, g=g, d=d, n_pages=nb,
                  nb=nb, block_n=block_n, bits=4, k_gran="channel")
@@ -66,3 +66,102 @@ def test_paged_equals_dense_on_same_blocks():
         dense(vzp), k_res, v_res, pb, rl, bits=4, block_n=block_n,
         impl="pallas")
     np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_d), rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# shared_kv (MLA latent pools): paged walk vs the dense shared_kv oracle
+# --------------------------------------------------------------------------
+
+def _make_shared(key, *, b, h, g, d, n_pages, nb, block_n, bits, k_gran):
+    """Latent pool set (no V side) + scrambled table + latent residual."""
+    ks = jax.random.split(key, 4)
+    lat = jax.random.normal(
+        ks[0], (1, h, n_pages * block_n, d), jnp.float32).astype(jnp.bfloat16)
+    kw, ksc, kzp = kq_ref.quantize_kv_ref(lat, bits, k_gran, block_n=block_n)
+    pool = lambda x: jnp.moveaxis(x[0], 1, 0)  # noqa: E731
+    q = jax.random.normal(ks[1], (b, h, g, d), jnp.float32).astype(jnp.bfloat16)
+    k_res = jax.random.normal(
+        ks[2], (b, h, block_n, d), jnp.float32).astype(jnp.bfloat16)
+    table = jax.random.permutation(ks[3], n_pages)[: b * nb].reshape(b, nb).astype(jnp.int32)
+    return q, pool(kw), pool(ksc), pool(kzp), k_res, table
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+@pytest.mark.parametrize("k_gran", ["channel", "tensor"])
+@pytest.mark.parametrize("num_splits", [1, 2])
+@pytest.mark.parametrize("res_len", [0, 17])  # empty vs partial residual
+def test_paged_shared_kv_matches_ref(bits, k_gran, num_splits, res_len):
+    """The satellite grid: bits x granularity x num_splits x partial
+    residual — paged shared_kv Pallas vs the (dense-ref-backed) oracle."""
+    b, h, g, d, dv, block_n, nb, n_pages = 2, 1, 8, 256, 128, 64, 3, 8
+    q, kwp, ksp, kzp, k_res, table = _make_shared(
+        jax.random.PRNGKey(2), b=b, h=h, g=g, d=d, n_pages=n_pages, nb=nb,
+        block_n=block_n, bits=bits, k_gran=k_gran)
+    pb = jnp.asarray([nb, nb - 1], jnp.int32)
+    rl = jnp.asarray([res_len, 0], jnp.int32)
+    fn = functools.partial(
+        pg_ops.paged_bitdecode_attention, bits=bits, block_n=block_n,
+        k_gran=k_gran, shared_kv=True, d_v=dv, return_lse=True,
+    )
+    out_p, lse_p = fn(q, kwp, ksp, kzp, None, None, None, k_res, None,
+                      table, pb, rl, impl="pallas", num_splits=num_splits)
+    out_r, lse_r = fn(q, kwp, ksp, kzp, None, None, None, k_res, None,
+                      table, pb, rl, impl="xla", num_splits=num_splits)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(lse_p), np.asarray(lse_r),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_paged_shared_kv_equals_dense_shared_oracle():
+    """Paged shared_kv over a scrambled table == the dense shared_kv kernel
+    over the table-gathered blocks (bitwise: same compute, same order)."""
+    b, h, g, d, dv, block_n, nb, n_pages = 2, 1, 8, 256, 128, 64, 3, 8
+    q, kwp, ksp, kzp, k_res, table = _make_shared(
+        jax.random.PRNGKey(3), b=b, h=h, g=g, d=d, n_pages=n_pages, nb=nb,
+        block_n=block_n, bits=4, k_gran="channel")
+    pb = jnp.asarray([nb, nb - 1], jnp.int32)
+    rl = jnp.asarray([9, 0], jnp.int32)
+    out_p = pg_ops.paged_bitdecode_attention(
+        q, kwp, ksp, kzp, None, None, None, k_res, None, table, pb, rl,
+        bits=4, block_n=block_n, shared_kv=True, d_v=dv, impl="pallas")
+    gather = lambda x: jnp.moveaxis(jnp.take(x, table, axis=0), 2, 1)  # noqa: E731
+    out_d = bd_ops.bitdecode_attention(
+        q, gather(kwp), gather(ksp), gather(kzp), None, None, None,
+        k_res, None, pb, rl, bits=4, block_n=block_n, shared_kv=True,
+        d_v=dv, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out_d))
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_paged_shared_flush_commits_latent_through_table(impl):
+    """Shared-kv paged flush: a filled latent residual commits into the pool
+    page its table points at, bitwise-identical packing to the dense shared
+    flush of the same content; other pages untouched."""
+    import dataclasses
+
+    from repro.core import qcache
+
+    B, H, D, BLOCK = 2, 1, 256, 64
+    k = jax.random.normal(jax.random.PRNGKey(4), (B, H, BLOCK, D)).astype(jnp.bfloat16)
+    pc = qcache.init_paged_cache(8, B, H, D, 3, bits=4, block_n=BLOCK,
+                                 shared_kv=True)
+    assert pc.vw is None and pc.v_res is None
+    table = np.asarray(pc.page_table).copy()
+    table[1, 0] = 5
+    pc = dataclasses.replace(
+        pc, page_table=jnp.asarray(table),
+        k_res=pc.k_res.at[1, :, : BLOCK - 1].set(k[1, :, : BLOCK - 1]),
+        res_len=jnp.asarray([3, BLOCK - 1], jnp.int32),
+    )
+    pc2 = qcache.paged_append_decode(
+        pc, k[:, :, BLOCK - 1 : BLOCK], None, quant_impl=impl)
+    assert int(pc2.pack_blocks[1]) == 1 and int(pc2.res_len[1]) == 0
+    kw_want, ks_want, _ = kq_ref.quantize_kv_ref(
+        np.asarray(pc2.k_res[1])[None], 4, "channel", block_n=BLOCK)
+    np.testing.assert_array_equal(np.asarray(pc2.kw[5]),
+                                  np.asarray(kw_want)[0, :, 0])
+    np.testing.assert_array_equal(np.asarray(pc2.k_scale[5]),
+                                  np.asarray(ks_want)[0, :, 0])
+    assert not np.asarray(pc2.kw[6]).any()  # untouched page
+    assert not np.asarray(pc2.kw[0]).any()  # slot 0's scratch page

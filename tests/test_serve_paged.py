@@ -349,14 +349,14 @@ def test_mesh_aligned_init_cache_block_align():
     assert c2.kw.shape[2] == 5
 
 
-def test_dense_fallback_engine_still_serves():
-    """Models without a paged path (MLA latent cache) serve via the legacy
-    dense slot engine under the same API."""
+def test_mla_serves_paged_by_default():
+    """MLA's latent cache now pages (shared_kv pools) — no dense fork."""
     cfg = smoke_config("deepseek-v3-671b").with_(kv_bits=4)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(model, params, slots=2, max_seq=64)
-    assert not engine.paged
+    assert engine.paged and engine.spec.shared_kv
+    assert engine.state["caches"][0].vw is None  # no V-side pools at all
     rng = np.random.default_rng(5)
     reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, 6).astype(np.int32),
                     max_new_tokens=3) for i in range(3)]
@@ -365,3 +365,49 @@ def test_dense_fallback_engine_still_serves():
     stats = engine.run()
     assert all(r.done for r in reqs)
     assert stats["decoded_tokens"] == 9
+
+
+def test_nokv_shim_engine_serves_and_accounts():
+    """xLSTM (no KV anywhere) serves through the exact-length shim: same
+    scheduler, same decode cycle, per-token accounting intact (pos advances
+    with every decoded token; forced retirement counts `evicted` once)."""
+    cfg = smoke_config("xlstm-1.3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, slots=2, max_seq=64)
+    assert not engine.paged and engine.pool is None
+    rng = np.random.default_rng(6)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, 7).astype(np.int32),
+                    max_new_tokens=3) for i in range(3)]
+    for r in reqs:
+        engine.submit(r)
+    stats = engine.run()
+    assert all(r.done for r in reqs)
+    assert all(r.pos == 7 + 3 for r in reqs)  # the dense-shim drift fix
+    assert stats["decoded_tokens"] == 9
+    assert stats["evicted"] == 3  # forced retirements, counted exactly once
+
+
+def test_forced_shim_matches_paged_outputs():
+    """`paged=False` forces the exact-length shim for a paged-capable model;
+    outputs stay bitwise identical to the paged engine."""
+    cfg = smoke_config("llama3-8b").with_(kv_bits=4, kv_block=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32) for n in (9, 40)]
+
+    def run(paged):
+        engine = ServeEngine(model, params, slots=2, max_seq=128, paged=paged)
+        reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=5)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            engine.submit(r)
+        engine.run()
+        return [r.out_tokens for r in reqs], engine
+
+    want, shim = run(False)
+    assert not shim.paged
+    got, paged_eng = run(None)
+    assert paged_eng.paged
+    assert got == want
