@@ -1,6 +1,6 @@
 """Serving-throughput sweeps for the paged continuous-batching engine.
 
-Three sweeps, all appending to BENCH_serve.json so future PRs track them:
+Four sweeps, all appending to BENCH_serve.json so future PRs track them:
 
 * **offered load** (default): requests arrive on a virtual clock (the
   measured engine wall time) at a configured rate with a prompt-length mix;
@@ -18,6 +18,12 @@ Three sweeps, all appending to BENCH_serve.json so future PRs track them:
   dense SSM side-state — reporting per-family throughput, latency, and the
   per-family page byte size (``kv_page_bytes``; a hybrid page spans
   ``n_super`` layer-caches, an MLA page has no V stream).
+* **oversubscription** (``--oversubscribe``): the pool capped at
+  0.5x/0.75x/1.0x of the workload's worst-case concurrent page demand under
+  ``reserve_policy="expected"`` — the pressure face of
+  preemption-by-rematerialization (docs/SERVING.md §10): each cell reports
+  the preemption rate, replayed (rematerialized) tokens, tokens/s, and
+  occupancy, with the invariant auditor enabled every cycle.
 
 CPU smoke scale by default; the same sweeps run unchanged on TPU.
 """
@@ -277,10 +283,107 @@ def run_family_sweep(*, families=("attn", "mla", "hybrid"), n_requests=6,
     return records
 
 
+def run_oversubscribe_sweep(*, factors=(0.5, 0.75, 1.0), n_requests=6,
+                            max_new=24, slots=2, max_seq=128,
+                            out_path: Path | None = None):
+    """Pressure sweep: the data-page pool capped at ``factor`` x the
+    workload's worst-case concurrent page demand (the top-``slots``
+    per-request page totals), run under ``reserve_policy="expected"`` with
+    the most aggressive quantile (0.0 — reserve only what is certain).
+    Undersized cells force preemption-by-rematerialization; every cell also
+    runs once against an ample pool and checks the outputs are bitwise
+    identical (docs/SERVING.md §10), with the invariant auditor on every
+    cycle."""
+    cfg = smoke_config("llama3-8b").with_(kv_bits=4, kv_block=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plens = [34, 48, 40, 44, 36, 46]
+
+    def _reqs(rng):
+        return [
+            Request(
+                uid=i,
+                prompt=rng.integers(
+                    0, cfg.vocab, plens[i % len(plens)]).astype(np.int32),
+                max_new_tokens=max_new,
+            )
+            for i in range(n_requests)
+        ]
+
+    import math
+    import time as _time
+
+    # worst-case concurrent demand: the `slots` largest per-request totals
+    per_req = sorted(
+        ((p + max_new) // cfg.kv_block for p in plens[:n_requests]),
+        reverse=True,
+    )
+    worst = sum(per_req[:slots])
+
+    # unpressured reference outputs (ample pool, worst-case reservations)
+    base = ServeEngine(model, params, slots=slots, max_seq=max_seq)
+    base_reqs = _reqs(np.random.default_rng(zlib.crc32(b"oversub")))
+    for r in base_reqs:
+        base.submit(r)
+    base.run()
+    base_out = {r.uid: list(r.out_tokens) for r in base_reqs}
+
+    records = []
+    for factor in factors:
+        rng = np.random.default_rng(zlib.crc32(b"oversub"))
+        n_pages = slots + math.ceil(factor * worst)
+        engine = ServeEngine(
+            model, params, slots=slots, max_seq=max_seq, n_pages=n_pages,
+            reserve_policy="expected", expected_quantile=0.0, audit_every=1,
+        )
+        reqs = _reqs(rng)
+        t0 = _time.perf_counter()
+        for r in reqs:
+            engine.submit(r)
+        engine.run()
+        stats = engine.summary(wall_s=_time.perf_counter() - t0)
+        out = {r.uid: list(r.out_tokens) for r in reqs}
+        rec = {
+            "oversubscribe": factor,
+            "n_pages": n_pages - slots,
+            "worst_case_pages": worst,
+            "n_requests": n_requests,
+            "slots": slots,
+            "preempted": stats["preempted"],
+            "preemptions_per_request": round(
+                stats["preempted"] / n_requests, 4),
+            "preempt_remat_tokens": stats["preempt_remat_tokens"],
+            "decoded_tokens": stats["decoded_tokens"],
+            "tokens_per_s": round(stats["tokens_per_s"], 2),
+            "latency_p50_ms": round(stats["latency_p50_ms"], 2),
+            "latency_p99_ms": round(stats["latency_p99_ms"], 2),
+            "backpressure_events": stats["sched_backpressure_events"],
+            "occupancy_max": round(stats["occupancy_max"], 4),
+            "audits": stats["audits"],
+            "bitwise_match": out == base_out,
+        }
+        records.append(rec)
+        emit(
+            f"serve.oversub.x{factor:g}", stats["tokens_per_s"],
+            f"preempted={rec['preempted']}"
+            f";remat_tok={rec['preempt_remat_tokens']}"
+            f";p99_ms={rec['latency_p99_ms']}"
+            f";match={rec['bitwise_match']}",
+        )
+    out_path = _BENCH_SERVE if out_path is None else out_path
+    _append(out_path, {
+        "backend": jax.default_backend(),
+        "sweep": "oversubscribe",
+        "records": records,
+    })
+    return records
+
+
 def run():
     run_serve_sweep()
     run_shared_prefix_sweep()
     run_family_sweep()
+    run_oversubscribe_sweep()
 
 
 if __name__ == "__main__":
@@ -293,9 +396,14 @@ if __name__ == "__main__":
                     default=None,
                     help="run only the cache-family sweep (optionally a "
                          "subset of families)")
+    ap.add_argument("--oversubscribe", action="store_true",
+                    help="run only the pool-pressure sweep (0.5x/0.75x/1.0x "
+                         "of worst-case page demand)")
     args = ap.parse_args()
     if args.shared_prefix:
         run_shared_prefix_sweep()
+    elif args.oversubscribe:
+        run_oversubscribe_sweep()
     elif args.family is not None:
         run_family_sweep(
             families=tuple(args.family) if args.family else

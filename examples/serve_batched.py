@@ -34,7 +34,7 @@ def main():
     stats = engine.run()
     print(f"served: {stats['decoded_tokens']} tokens in {stats['steps']} "
           f"batched steps, {stats['tokens_per_s']:.1f} tok/s (CPU), "
-          f"evicted={stats['evicted']}")
+          f"budget_retired={stats['budget_retired']}")
     if engine.paged:
         print(f"paged: {stats['prefill_calls']} bucketed prefill calls, "
               f"p50 per-token latency {stats['latency_p50_ms']:.0f} ms, "

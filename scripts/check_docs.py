@@ -12,9 +12,9 @@ Checks:
 * docs/SERVING.md's "Engine flags" table rows are real keyword parameters
   of ``ServeEngine.__init__``;
 * docs/SERVING.md's counter table rows appear as string literals in the
-  serving sources (engine.py / scheduler.py / pages.py), modulo the
-  ``sched_`` prefix the engine adds when folding scheduler stats into
-  ``summary()``.
+  serving sources (engine.py / scheduler.py / pages.py / audit.py /
+  faults.py), modulo the ``sched_`` prefix the engine adds when folding
+  scheduler stats into ``summary()``.
 
 Run directly (exit 1 on drift) or via tests/test_docs.py in the tier-1
 suite.
@@ -129,7 +129,8 @@ def check_serving(text: str) -> list[str]:
                       "ServeEngine.__init__ has no such parameter")
     serve_src = "".join(
         (SERVE_SRC / f).read_text()
-        for f in ("engine.py", "scheduler.py", "pages.py")
+        for f in ("engine.py", "scheduler.py", "pages.py", "audit.py",
+                  "faults.py")
     )
     counters = table_rows(text, "counters")
     if not counters:

@@ -3,18 +3,31 @@
 #   scripts/run_tier1.sh [extra pytest args]
 # Runs the full test suite (PYTHONPATH=src, fail-fast, quiet) followed by the
 # docs-drift check (README kernel inventory + SERVING/ARCHITECTURE symbol/
-# flag/counter sync).  The suite includes the serving gates:
+# flag/counter sync) and the named serve-pressure gate.  The suite includes
+# the serving gates:
 # tests/test_serve_paged.py (paged engine + exact-length shim),
-# tests/test_serve_prefix.py (prefix sharing + COW parity), and
+# tests/test_serve_prefix.py (prefix sharing + COW parity),
 # tests/test_serve_families.py (unified paged decode across cache families:
-# MLA latent paging, hybrid mixed states, SSM page-table-free jaxpr proof) —
+# MLA latent paging, hybrid mixed states, SSM page-table-free jaxpr proof),
+# and tests/test_serve_pressure.py (preemption-by-rematerialization parity,
+# lifecycle guards, pool-invariant auditor, deterministic fault injection) —
 # plus the shared_kv paged kernel grid in tests/test_kernels_paged.py.
 # CI (.github/workflows/ci.yml) calls exactly this script, so local and CI
 # runs cannot diverge.
+#
+#   scripts/run_tier1.sh --serve-pressure   # run only the pressure gate
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
 cd "$ROOT"
+
+if [[ "${1:-}" == "--serve-pressure" ]]; then
+    shift
+    echo "[tier1] serve-pressure gate (preemption parity, faults, auditor)"
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m pytest -x -q tests/test_serve_pressure.py "$@"
+    exit 0
+fi
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 python scripts/check_docs.py

@@ -16,7 +16,12 @@ unified paged engine is exercisable from the CLI for all families.
 Page-pool sizing: --pages bounds the KV pool; by default the pool is fully
 provisioned (slots * max_seq worth of pages).  Undersize it (e.g.
 --pages 12) to exercise admission backpressure: requests wait in the queue
-until completions return pages.
+until completions return pages.  With ``--reserve-policy expected`` the
+scheduler admits against a quantile of the remaining decode budget instead
+of the worst case; if the pool later runs dry the engine preempts a victim
+(``--preempt-policy``) and rematerializes it bitwise-identically on
+re-admission (docs/SERVING.md §10).  ``--audit-every N`` cross-checks the
+pool/page-table/prefix-index invariants every N cycles.
 """
 from __future__ import annotations
 
@@ -62,6 +67,27 @@ def main():
                          "pages (docs/SERVING.md)")
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable the scheduler's prompt-prefix index")
+    ap.add_argument("--reserve-policy", choices=("worst_case", "expected"),
+                    default="worst_case",
+                    help="admission reservation: full lifetime worst case, "
+                         "or a quantile of the remaining decode budget "
+                         "(backed by preemption-by-rematerialization)")
+    ap.add_argument("--expected-quantile", type=float, default=0.5,
+                    help="decode-budget quantile reserved under "
+                         "--reserve-policy expected (0=only what is certain)")
+    ap.add_argument("--preempt-policy", choices=("youngest", "fewest_pages"),
+                    default="youngest",
+                    help="victim selection when the pool runs dry mid-decode")
+    ap.add_argument("--audit-every", type=int, default=0,
+                    help="run the pool/table/index invariant auditor every N "
+                         "engine cycles (0 disables; always audits at drain "
+                         "when enabled)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request TTL on the engine clock; overdue "
+                         "requests retire as EXPIRED")
+    ap.add_argument("--strict", action="store_true",
+                    help="raise on unadmittable submissions instead of "
+                         "retiring them as REJECTED")
     args = ap.parse_args()
     if args.arch is None:
         if args.family is None:
@@ -76,6 +102,10 @@ def main():
         model, params, slots=args.slots, max_seq=args.max_seq,
         paged=False if args.dense else None, n_pages=args.pages,
         splitkv=args.splitkv, share_prefix=not args.no_prefix_sharing,
+        reserve_policy=args.reserve_policy,
+        expected_quantile=args.expected_quantile,
+        preempt_policy=args.preempt_policy,
+        audit_every=args.audit_every, strict=args.strict,
     )
     print(f"[serve] engine mode: {'paged' if engine.paged else 'exact-length shim'}"
           + (f", pool={engine.n_pages} pages "
@@ -100,9 +130,16 @@ def main():
             uid=uid,
             prompt=np.concatenate([prefix, tail]),
             max_new_tokens=args.max_new + (uid % 3 if sharing_demo else 0),
+            deadline_s=args.deadline_s,
         ))
     stats = engine.run()
     print(f"[serve] {stats}")
+    if stats.get("preempted"):
+        print(
+            f"[serve] pressure: preempted={stats['preempted']}"
+            f" preempt_remat_tokens={stats['preempt_remat_tokens']}"
+            f" audits={stats['audits']}"
+        )
     if engine.paged and not args.no_prefix_sharing:
         print(
             f"[serve] prefix sharing: hit_rate={stats['prefix_hit_rate']:.3f}"

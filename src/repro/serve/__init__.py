@@ -1,5 +1,9 @@
 """Serving subsystem: continuous-batching scheduler, page-pool allocator,
-and the paged-first ServeEngine.  See docs/ARCHITECTURE.md §7."""
+the paged-first ServeEngine, and its pressure/self-checking layer (invariant
+auditor, deterministic fault injection).  See docs/ARCHITECTURE.md §7 and
+docs/SERVING.md §10."""
+from repro.serve.audit import AuditError, AuditReport, audit_engine  # noqa: F401
 from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.faults import FaultPlan  # noqa: F401
 from repro.serve.pages import PagePool  # noqa: F401
 from repro.serve.scheduler import Phase, Request, Scheduler  # noqa: F401

@@ -49,12 +49,37 @@ One cycle (:meth:`ServeEngine.step`):
    step over all slots — through the cross-chip split-KV path when a mesh
    is attached and the cycle is long-context/low-occupancy;
 4. advance per-token accounting (one shared code path: ``req.pos``
-   increments every decoded token, forced retirement counts ``evicted``
-   exactly once), retire finished requests, record latency/occupancy.
+   increments every decoded token, budget-capped retirement counts
+   ``budget_retired`` exactly once), retire finished requests, record
+   latency/occupancy.
 
 Idle slots keep decoding garbage into their private scratch pages (their
 page-table rows point at scratch, see serve/pages.py) — wasted lanes, never
 corruption.
+
+**Pressure handling** (docs/SERVING.md §10).  Under
+``reserve_policy="expected"`` the scheduler under-reserves and a request
+that outlives its expected decode length extends its reservation one page
+at a time in ``_alloc_page``; when the pool cannot grant the unit the
+engine **preempts** a victim (``preempt_policy``: ``"youngest"`` /
+``"fewest_pages"``) — its pages are freed through the refcounted pool (so
+shared prefixes survive via their other holders) and it requeues at the
+FIFO head.  Re-admission re-prefills its prompt through the ordinary
+suffix path, then **replays** its already-decoded tokens teacher-forced
+through the decode path — the same computation that built them, so the
+quantized cache (and every future token) is reconstructed bitwise; the
+parked decoded-but-unfed token is restored after the replay, continuing
+the *exact* token stream of a never-preempted run.
+
+**Lifecycle guards**: per-request ``deadline_s`` TTLs retire to EXPIRED at
+the top of each cycle, :meth:`ServeEngine.cancel` retires to CANCELLED, and
+a poisoned step (non-finite logits row / out-of-vocab token) retires just
+that request ERRORED — the engine loop and every other slot continue.
+
+**Self-checking**: ``audit_every=N`` cross-checks pool refcounts vs page
+tables vs prefix index vs per-request page lists every N cycles
+(`repro.serve.audit`); ``faults=FaultPlan(...)`` injects deterministic
+failures at the named sites (`repro.serve.faults`) for chaos tests.
 """
 from __future__ import annotations
 
@@ -69,6 +94,7 @@ from repro.core import qcache
 from repro.kernels.bitdecode import ops as bd_ops
 from repro.models.family import get_path, set_path
 from repro.serve import pages as pg
+from repro.serve.audit import audit_engine
 from repro.serve.scheduler import (  # noqa: F401 (Phase/Request re-exported)
     Phase,
     Request,
@@ -88,7 +114,11 @@ class ServeEngine:
                  n_pages: int | None = None, min_bucket: int = 16,
                  mesh=None, splitkv_axis: str = "data",
                  splitkv: str = "auto", share_prefix: bool = True,
-                 spec_tail: bool = True):
+                 spec_tail: bool = True, reserve_policy: str = "worst_case",
+                 expected_quantile: float = 0.5,
+                 preempt_policy: str = "youngest", audit_every: int = 0,
+                 faults=None, strict: bool = False,
+                 guard_logits: bool = True, clock=None):
         """``paged=None`` follows the model's ``paged_spec()`` (paged when it
         declares a paged family); ``paged=False`` forces the exact-length
         shim for any token-prefill model (debug/baseline path); ``paged=True``
@@ -102,7 +132,20 @@ class ServeEngine:
         prefill (``PagedSpec.supports_prior``); ``spec_tail`` additionally
         adopts a matching donor block as the speculative flush destination
         when a prompt ends mid-block — the copy-on-write candidate (see
-        docs/SERVING.md)."""
+        docs/SERVING.md).
+
+        Pressure handling (docs/SERVING.md §10): ``reserve_policy`` /
+        ``expected_quantile`` select the admission reservation (worst-case
+        lifetime vs expected decode length — serve/scheduler.py);
+        ``preempt_policy`` picks the victim when a reservation extension
+        cannot be granted: ``"youngest"`` (latest admission) or
+        ``"fewest_pages"`` (cheapest rematerialization).  ``audit_every=N``
+        runs the invariant auditor every N cycles (0 disables);
+        ``faults`` attaches a `repro.serve.faults.FaultPlan`;
+        ``strict=True`` makes never-admittable submissions raise instead of
+        retiring REJECTED; ``guard_logits=False`` disables the per-row
+        poisoned-step isolation (benchmarking); ``clock`` (default
+        ``time.monotonic``) drives ``deadline_s`` TTL enforcement."""
         self.model = model
         self.params = params
         self.slots = slots
@@ -111,6 +154,16 @@ class ServeEngine:
         self.mesh = mesh
         self.splitkv_axis = splitkv_axis
         self.splitkv = splitkv
+        if preempt_policy not in ("youngest", "fewest_pages"):
+            raise ValueError(f"unknown preempt_policy {preempt_policy!r}")
+        self.preempt_policy = preempt_policy
+        self.audit_every = audit_every
+        self.faults = faults
+        self.guard_logits = guard_logits
+        self.clock = clock if clock is not None else time.monotonic
+        self._cycle = 0
+        # delayed-release fault parking lot: (ready_cycle, uid, pages)
+        self._deferred: list[tuple[int, int, list[int]]] = []
         cfg = getattr(model, "cfg", None)
 
         spec = model.paged_spec() if hasattr(model, "paged_spec") else None
@@ -152,9 +205,14 @@ class ServeEngine:
 
         self.tokens = np.zeros((slots, 1), np.int32)
         self.stats = {
-            "decoded_tokens": 0, "steps": 0, "evicted": 0,
+            "decoded_tokens": 0, "steps": 0,
             "prefill_calls": 0, "splitkv_steps": 0,
             "prefill_tokens": 0, "prefill_tokens_saved": 0, "cow_copies": 0,
+            # retirement breakdown (each request counts in at most one):
+            # budget_retired = hit max_new_tokens without EOS (the stat
+            # formerly overloaded as "evicted")
+            "budget_retired": 0, "preempted": 0, "preempt_remat_tokens": 0,
+            "expired": 0, "cancelled": 0, "errored": 0, "audits": 0,
         }
         self._token_latencies: list[float] = []
         self._occupancy: list[float] = []
@@ -202,6 +260,9 @@ class ServeEngine:
                 max_seq=max_seq, min_bucket=min_bucket,
                 share_prefix=share, spec_tail=spec_tail and share,
                 exact_buckets=spec.exact_prefill,
+                reserve_policy=reserve_policy,
+                expected_quantile=expected_quantile,
+                strict=strict, clock=self.clock,
                 namespace=(
                     f"{getattr(cfg, 'name', 'model')}/b{getattr(cfg, 'kv_bits', 4)}"
                     f"/n{self.block_n}/{getattr(cfg, 'kv_gran', 'channel')}"
@@ -245,6 +306,7 @@ class ServeEngine:
             self.sched = Scheduler(
                 slots=slots, pool=None, block_n=self.block_n, max_seq=max_seq,
                 share_prefix=False, spec_tail=False, exact_buckets=True,
+                strict=strict, clock=self.clock,
             )
             self.state = model.init_decode_state(slots, max_seq)
             self._prefill = jax.jit(
@@ -253,8 +315,30 @@ class ServeEngine:
 
     # ------------------------------------------------------------ public
 
-    def submit(self, req: Request) -> None:
-        self.sched.submit(req)
+    def submit(self, req: Request) -> bool:
+        """Queue ``req``; False when it was retired REJECTED at submission
+        (``req.error`` names the reason; raises instead under ``strict``)."""
+        return self.sched.submit(req)
+
+    def cancel(self, uid: int) -> Request | None:
+        """Cancel a waiting or active request by uid; returns the retired
+        request (phase CANCELLED, resources released, page-table row reset)
+        or None when no live request has that uid."""
+        for req in list(self.sched.waiting):
+            if req.uid == uid:
+                self.sched.waiting.remove(req)
+                self._retire(req, Phase.CANCELLED, reason="cancelled")
+                return req
+        for req in list(self.sched.active.values()):
+            if req.uid == uid:
+                self._retire(req, Phase.CANCELLED, reason="cancelled")
+                return req
+        return None
+
+    def audit(self):
+        """Run the invariant auditor now (`repro.serve.audit.audit_engine`)."""
+        self.stats["audits"] += 1
+        return audit_engine(self)
 
     def run(self, max_cycles: int = 10_000):
         t0 = time.perf_counter()
@@ -262,6 +346,8 @@ class ServeEngine:
         while self._has_work() and cycles < max_cycles:
             self.step()
             cycles += 1
+        if self.paged and self.audit_every:
+            self.audit().raise_if_violations()  # clean at drain
         return self.summary(wall_s=time.perf_counter() - t0)
 
     def summary(self, *, wall_s: float | None = None) -> dict:
@@ -297,12 +383,20 @@ class ServeEngine:
         return out
 
     def _has_work(self) -> bool:
-        return self.sched.has_work
+        return self.sched.has_work or bool(self._deferred)
 
     # ------------------------------------------------ the one decode cycle
 
     def step(self) -> bool:
         t0 = time.perf_counter()
+        self._cycle += 1
+        self._service_deferred()
+        self._expire()
+        if (self.paged and self.faults is not None
+                and self.faults.fires("forced_preempt", cycle=self._cycle)):
+            victim = self._pick_victim()
+            if victim is not None:
+                self._preempt(victim)
         if self.paged:
             self._admit_and_prefill()
         else:
@@ -311,6 +405,8 @@ class ServeEngine:
             return False
         if self.paged:
             self._ensure_flush_pages()
+            if not self.sched.active:  # everyone self-preempted under faults
+                return False
             if self._table_dirty:
                 self.state["caches"] = pg.set_page_tables(
                     self.state["caches"], self._table
@@ -327,35 +423,165 @@ class ServeEngine:
         )
         # one host sync per cycle: the logits pull; current tokens already
         # live host-side, and the write-back below is plain numpy
-        nxt = np.argmax(np.asarray(logits)[:, 0], axis=-1)
+        rows = np.array(np.asarray(logits)[:, 0])
+        if self.faults is not None:
+            for slot, req in list(self.sched.active.items()):
+                if self.faults.fires(
+                    "poison_logits", cycle=self._cycle, uid=req.uid
+                ):
+                    rows[slot] = np.nan
+        nxt = np.argmax(rows, axis=-1)
+        bad: dict[int, str] = {}
+        if self.guard_logits:
+            finite = np.isfinite(rows).all(axis=-1)
+            for slot in self.sched.active:
+                if not finite[slot]:
+                    bad[slot] = "non-finite logits row"
+                elif not 0 <= int(nxt[slot]) < rows.shape[-1]:
+                    bad[slot] = f"invalid next token id {int(nxt[slot])}"
         self.stats["steps"] += 1
-        self._advance(nxt, time.perf_counter() - t0)
+        self._advance(nxt, time.perf_counter() - t0, bad=bad)
         if self.paged:
             self._occupancy.append(self.pool.occupancy)
+            if self.audit_every and self._cycle % self.audit_every == 0:
+                self.audit().raise_if_violations()
         return True
 
-    def _advance(self, nxt: np.ndarray, dt: float) -> None:
+    def _advance(self, nxt: np.ndarray, dt: float,
+                 bad: dict[int, str] | None = None) -> None:
         """Shared per-token accounting for every family: record the decoded
         token, advance ``req.pos`` (this step appended its KV), retire on
-        EOS or the token budget — forced retirement counts ``evicted``
-        exactly once."""
+        EOS or the token budget — budget-capped retirement counts
+        ``budget_retired`` exactly once.  Slots in ``bad`` (poisoned step:
+        non-finite logits row, invalid token id) retire ERRORED instead —
+        isolation, not propagation: every other slot advances normally.
+
+        A rematerializing request (``replay_left > 0``) is teacher-forced:
+        the step's KV append is the point (``pos`` advances), its logits are
+        ignored (the next token is recorded, not sampled), and nothing is
+        re-counted as decoded output."""
         for slot, req in list(self.sched.active.items()):
+            if req.replay_left > 0:
+                req.pos += 1
+                req.replay_left -= 1
+                if req.replay_left > 0:
+                    idx = len(req.out_tokens) - req.replay_left
+                    self.tokens[slot, 0] = req.out_tokens[idx]
+                else:
+                    # replay complete: resume the parked unpreempted stream
+                    self.tokens[slot, 0] = req.pending_token
+                    req.pending_token = None
+                continue
             tok = int(self.tokens[slot, 0])
             req.out_tokens.append(tok)
             req.pos += 1
             req.token_latencies_s.append(dt)
             self._token_latencies.append(dt)
             self.stats["decoded_tokens"] += 1
+            if bad and slot in bad:
+                self._retire(
+                    req, Phase.ERRORED,
+                    reason=f"request {req.uid} step {self._cycle}: {bad[slot]}",
+                )
+                continue
             hit_eos = self.eos_id is not None and tok == self.eos_id
             if hit_eos or len(req.out_tokens) >= req.max_new_tokens:
                 if not hit_eos:
-                    self.stats["evicted"] += 1  # forced retirement
-                if self.paged:
-                    self._table[slot, :] = slot  # stale entries -> scratch
-                    self._table_dirty = True
-                self.sched.complete(req)
+                    self.stats["budget_retired"] += 1
+                self._retire(req, Phase.DONE)
             else:
                 self.tokens[slot, 0] = int(nxt[slot])
+
+    # ---------------------------------------- retirement, expiry, preemption
+
+    def _retire(self, req: Request, phase: Phase,
+                reason: str | None = None) -> None:
+        """Single retirement path for every terminal phase: reset the
+        page-table row to scratch, honor an injected delayed-release fault
+        (the pages stay held by the retired uid until serviced), release
+        through the scheduler, bump the per-phase stat."""
+        if self.paged and req.slot is not None:
+            self._table[req.slot, :] = req.slot  # stale entries -> scratch
+            self._table_dirty = True
+        if (self.paged and self.faults is not None and req.pages
+                and self.faults.fires(
+                    "delayed_release", cycle=self._cycle, uid=req.uid
+                )):
+            self._deferred.append(
+                (self._cycle + self.faults.delay_cycles, req.uid,
+                 list(req.pages))
+            )
+            req.pages = []  # scheduler releases reservation + slot only
+        self.sched.retire(req, phase, reason=reason)
+        stat = {
+            Phase.EXPIRED: "expired", Phase.CANCELLED: "cancelled",
+            Phase.ERRORED: "errored",
+        }.get(phase)
+        if stat is not None:
+            self.stats[stat] += 1
+
+    def _service_deferred(self) -> None:
+        """Free pages whose injected release delay has elapsed."""
+        if not self._deferred:
+            return
+        due = [d for d in self._deferred if d[0] <= self._cycle]
+        self._deferred = [d for d in self._deferred if d[0] > self._cycle]
+        for _ready, uid, pages in due:
+            for page in pages:
+                self.pool.free(page, owner=uid)
+
+    def _expire(self) -> None:
+        """Retire every live request whose ``deadline_s`` TTL has passed."""
+        now = self.clock()
+        for req in self.sched.expired(now):
+            if req.phase == Phase.WAITING:
+                self.sched.waiting.remove(req)
+            self._retire(
+                req, Phase.EXPIRED,
+                reason=(
+                    f"request {req.uid}: deadline_s={req.deadline_s} "
+                    "exceeded before completion"
+                ),
+            )
+
+    def _pick_victim(self, exclude: Request | None = None) -> Request | None:
+        """Victim for preemption: an active DECODE-phase request admitted in
+        an *earlier* cycle (same-cycle admissions are mid-adoption — their
+        prefill splice must not be torn down underneath them).  Policy
+        ``"youngest"`` preempts the latest admission (FIFO fairness: the
+        last one in yields first); ``"fewest_pages"`` the cheapest
+        rematerialization, ties to the youngest."""
+        cands = [
+            r for r in self.sched.active.values()
+            if r is not exclude and r.phase == Phase.DECODE
+            and r.admit_cycle < self._cycle
+        ]
+        if not cands:
+            return None
+        if self.preempt_policy == "fewest_pages":
+            return min(cands, key=lambda r: (len(r.pages), -r.admit_seq))
+        return max(cands, key=lambda r: r.admit_seq)
+
+    def _preempt(self, req: Request) -> None:
+        """Preempt-by-rematerialization (docs/SERVING.md §10): park the
+        decoded-but-unfed next token, reset the table row, and hand the
+        request to the scheduler, which queues its decoded tokens for
+        teacher-forced replay and requeues it at the FIFO head.
+
+        A victim caught *mid-replay* (preempted again before its previous
+        rematerialization finished) keeps its originally parked token — the
+        token currently in the feed buffer is a replayed one, already in
+        ``out_tokens``."""
+        slot = req.slot
+        if req.replay_left > 0:
+            pending = req.pending_token
+        else:
+            pending = int(self.tokens[slot, 0])
+        self._table[slot, :] = slot
+        self._table_dirty = True
+        self.stats["preempted"] += 1
+        self.stats["preempt_remat_tokens"] += len(req.out_tokens)
+        self.sched.preempt(req, pending_token=pending)
 
     def _use_splitkv_now(self) -> bool:
         if self._step_splitkv is None or self.splitkv == "never":
@@ -375,11 +601,45 @@ class ServeEngine:
 
     # ----------------------------------------------------- paged admission
 
-    def _alloc_page(self, req: Request) -> int:
+    def _alloc_page(self, req: Request, *,
+                    admission: bool = False) -> int | None:
         """Pool alloc charged to ``req``: converts one of its reservation
-        units (preempt-free guarantee) and joins its page list."""
-        page = self.pool.alloc()
-        req.reserved_pages = max(req.reserved_pages - 1, 0)
+        units and joins its page list.
+
+        Under ``reserve_policy="worst_case"`` the reservation always covers
+        the alloc (the preempt-free guarantee, unchanged).  Under
+        ``"expected"`` a request that outlives its expectation arrives here
+        with ``reserved_pages == 0`` and must *extend* one unit — when the
+        commitment budget is full, a victim is preempted per
+        ``preempt_policy``; with no eligible victim the requester preempts
+        *itself* (returns None; the caller skips — the request is already
+        requeued).  Admission-time allocs never extend: ``reserve_need``
+        floors the reservation at the prompt's own block count, so
+        preemption can only fire on the decode flush path.
+
+        An injected ``alloc_fail`` fault exercises the same victim path
+        deterministically (the alloc itself then proceeds — recovery, not
+        crash, is what the fault probes)."""
+        if (self.faults is not None
+                and self.faults.fires(
+                    "alloc_fail", cycle=self._cycle, uid=req.uid
+                )):
+            victim = self._pick_victim(exclude=req)
+            if victim is not None:
+                self._preempt(victim)
+            elif not admission and req.reserved_pages <= 0:
+                self._preempt(req)
+                return None
+        if req.reserved_pages <= 0:
+            while not self.pool.reserve(1, owner=req.uid):
+                victim = self._pick_victim(exclude=req)
+                if victim is None:
+                    self._preempt(req)
+                    return None
+                self._preempt(victim)
+            req.reserved_pages += 1
+        page = self.pool.alloc(owner=req.uid)
+        req.reserved_pages -= 1
         req.pages.append(page)
         return page
 
@@ -455,7 +715,11 @@ class ServeEngine:
                 s = len(req.shared_pages)
                 sl = req.suffix_len(self.block_n)
                 n_blocks = sl // self.block_n
-                pgs = [self._alloc_page(req) for _ in range(n_blocks)]
+                # covered by the reservation floor — never preempts here
+                pgs = [
+                    self._alloc_page(req, admission=True)
+                    for _ in range(n_blocks)
+                ]
                 self._table[req.slot, :] = req.slot  # fresh scratch row
                 self._table[req.slot, :s] = req.shared_pages
                 if req.spec_page is not None:
@@ -467,7 +731,20 @@ class ServeEngine:
                 pages_per_req.append(pgs)
                 req.phase = Phase.DECODE
                 req.pos = req.prompt_len
-                self.tokens[req.slot, 0] = int(first[r])
+                req.admit_cycle = self._cycle
+                if req.replay_left > 0:
+                    # rematerializing victim: teacher-force its recorded
+                    # decode stream (first replayed token now, the rest in
+                    # `_advance`) — rebuilding the decode-built cache blocks
+                    # through the decode path keeps them bitwise identical
+                    self.tokens[req.slot, 0] = req.out_tokens[0]
+                elif req.pending_token is not None:
+                    # preempted before any decode: resume from the parked
+                    # decoded-but-unfed token, not the re-prefill's argmax
+                    self.tokens[req.slot, 0] = req.pending_token
+                    req.pending_token = None
+                else:
+                    self.tokens[req.slot, 0] = int(first[r])
             self._table_dirty = True
             self.state["caches"] = pg.adopt_prefill(
                 self.state["caches"], dstate["caches"],
@@ -498,25 +775,37 @@ class ServeEngine:
         gets a private page (covered by its reservation: spec-tail pages are
         never discounted at admission), the packed block is replicated
         device-side (``pages.cow_pages``), and only this request's table
-        column is repointed before the flush commits over the replica."""
+        column is repointed before the flush commits over the replica.
+
+        This is the one place preemption can fire (``_alloc_page`` under the
+        expected reservation policy), so the iteration snapshots the active
+        set and re-checks each slot: a request preempted by an earlier
+        allocation this cycle (or that preempted *itself* — alloc returned
+        None) is skipped, its table row already reset to scratch."""
         cow_src, cow_dst = [], []
-        for req in self.sched.active.values():
+        for req in list(self.sched.active.values()):
+            if self.sched.active.get(req.slot) is not req:
+                continue  # preempted by an earlier alloc this cycle
             if req.pos % self.block_n != self.block_n - 1:
                 continue
             blk = req.pos // self.block_n
             entry = int(self._table[req.slot, blk])
             if entry < self.slots:  # still scratch -> fresh private page
                 page = self._alloc_page(req)
+                if page is None:
+                    continue  # self-preempted: requeued, row reset
                 self._table[req.slot, blk] = page
                 self._table_dirty = True
             elif self.pool.refcount(entry) > 1:  # shared -> copy-on-write
                 page = self._alloc_page(req)
+                if page is None:
+                    continue  # self-preempted: requeued, row reset
                 cow_src.append(entry)
                 cow_dst.append(page)
                 req.pages.remove(entry)
                 if req.spec_page == entry:
                     req.spec_page = None
-                self.pool.free(entry)
+                self.pool.free(entry, owner=req.uid)
                 self._table[req.slot, blk] = page
                 self._table_dirty = True
                 self.stats["cow_copies"] += 1
@@ -570,3 +859,4 @@ class ServeEngine:
         self.stats["prefill_tokens"] += req.prompt_len
         req.phase = Phase.DECODE
         req.pos = req.prompt_len
+        req.admit_cycle = self._cycle

@@ -31,6 +31,22 @@ adoption, one page per ``block_n`` decoded tokens just before the flush step
 that commits it.  ``free`` decrements a refcount and returns the page at
 zero (firing ``on_release`` so the scheduler's prefix index can forget it).
 
+**Hardening** (every accounting breach raises at the faulting call, naming
+the page and its holders, instead of silently corrupting ``committed``):
+
+* each page records its *holders* — the owner tags passed to
+  :meth:`PagePool.alloc` / :meth:`PagePool.retain` (the engine passes request
+  uids) — and :meth:`PagePool.free` with an owner that is not a holder raises;
+* reservations carry an optional per-owner ledger: releasing more units than
+  an owner reserved (a double-release) raises naming the owner;
+* a covered :meth:`PagePool.alloc` with no reservation outstanding raises
+  (it would silently exceed the commitment budget another request was
+  promised), and an uncovered alloc refuses to push ``committed`` past
+  ``capacity``.
+
+The invariant auditor (`repro.serve.audit`) cross-checks this state against
+the page tables, the prefix index, and per-request page lists.
+
 Scratch-page invariant (shared with the paged residual-flush kernel): pool
 pages ``[0, n_scratch)`` — one per decode slot — are never allocated.  Page
 tables point unassigned entries at the owning slot's scratch page, so a
@@ -68,6 +84,12 @@ class PagePool:
         self._free: deque[int] = deque(range(n_scratch, n_pages))
         self._refcount = np.zeros(n_pages, np.int32)
         self.reserved = 0  # pages promised but not yet allocated
+        # page -> owner tags (one per reference, in acquisition order);
+        # owner None is the untracked/anonymous caller (unit tests, tooling)
+        self._holders: dict[int, list] = {}
+        # owner -> reservation units outstanding (only owners that reserve
+        # with an explicit tag are tracked; the engine tags request uids)
+        self._owner_reserved: dict = {}
         # fired with the page id when a page's last reference drops and it
         # returns to the free list (prefix-index invalidation hook)
         self.on_release: Callable[[int], None] | None = None
@@ -104,60 +126,126 @@ class PagePool:
 
     # -------------------------------------------------------- reservations
 
-    def reserve(self, n: int) -> bool:
+    def reserve(self, n: int, *, owner=None) -> bool:
         """Reserve ``n`` future allocations for an admitted request; False
         (and no state change) when the commitment budget cannot guarantee
-        them — the scheduler's backpressure signal."""
+        them — the scheduler's backpressure signal.  ``owner`` (the engine
+        passes the request uid) enters the per-owner ledger so a later
+        double-``release`` is caught."""
         if self.committed + n > self.capacity:
             return False
         self.reserved += n
+        if owner is not None:
+            self._owner_reserved[owner] = self._owner_reserved.get(owner, 0) + n
         return True
 
-    def release(self, n: int) -> None:
+    def release(self, n: int, *, owner=None) -> None:
         """Return a request's *remaining* (never-allocated) reservation on
-        completion/eviction; allocations already converted their unit via
-        :meth:`alloc`."""
+        retirement; allocations already converted their unit via
+        :meth:`alloc`.  Releasing more than ``owner`` has outstanding (a
+        double-release) raises immediately."""
         if n > self.reserved:
             raise ValueError(f"release({n}) exceeds reserved={self.reserved}")
+        if owner is not None:
+            held = self._owner_reserved.get(owner, 0)
+            if n > held:
+                raise ValueError(
+                    f"double release: owner {owner!r} releases {n} units but "
+                    f"has {held} reserved"
+                )
+            if held - n:
+                self._owner_reserved[owner] = held - n
+            else:
+                self._owner_reserved.pop(owner, None)
         self.reserved -= n
+
+    def owner_reserved(self, owner) -> int:
+        """Outstanding tracked reservation units of ``owner`` (audit hook)."""
+        return self._owner_reserved.get(owner, 0)
 
     # ------------------------------------------------------ physical pages
 
-    def alloc(self, *, covered: bool = True) -> int:
-        """Pop a free page (refcount 1).  ``covered=True`` (the serving
-        path) converts one reserved unit into an allocated one — guaranteed
-        to succeed for pages a reservation promised.  ``covered=False``
-        (unit tests, tooling) allocates outside any reservation: it leaves
-        ``reserved`` untouched and just grows ``committed``, so it can never
-        steal a unit another request's ``reserve()`` was promised."""
-        if not self._free:
+    def alloc(self, *, covered: bool = True, owner=None) -> int:
+        """Pop a free page (refcount 1, held by ``owner``).
+
+        ``covered=True`` (the serving path) converts one reserved unit into
+        an allocated one — guaranteed to succeed for pages a reservation
+        promised; calling it with *no* reservation outstanding raises (it
+        would silently spend a unit some other request's ``reserve()`` was
+        promised).  ``covered=False`` (unit tests, tooling) allocates
+        outside any reservation: it leaves ``reserved`` untouched and grows
+        ``committed``, refusing to push it past ``capacity``."""
+        if covered:
+            if not self.reserved:
+                raise RuntimeError(
+                    "covered alloc() with no reservation outstanding — the "
+                    "unit would be stolen from the commitment budget"
+                )
+            if owner is not None:
+                held = self._owner_reserved.get(owner, 0)
+                if not held:
+                    raise RuntimeError(
+                        f"covered alloc() by owner {owner!r} exceeds its "
+                        "reservation (0 units left)"
+                    )
+                if held - 1:
+                    self._owner_reserved[owner] = held - 1
+                else:
+                    self._owner_reserved.pop(owner, None)
+        elif self.committed >= self.capacity:
             raise RuntimeError(
-                "page pool exhausted — alloc() outside a reservation?"
+                f"uncovered alloc() would over-commit the pool "
+                f"(committed={self.committed}, capacity={self.capacity})"
             )
+        if not self._free:  # unreachable while the accounting holds
+            raise RuntimeError("page pool exhausted")
         page = self._free.popleft()
         self._refcount[page] = 1
-        if covered and self.reserved:
+        self._holders[page] = [owner]
+        if covered:
             self.reserved -= 1
         return page
 
-    def retain(self, page: int) -> None:
+    def retain(self, page: int, *, owner=None) -> None:
         """Add a reference to an allocated page (prefix sharing)."""
         if self._refcount[page] <= 0:
             raise ValueError(f"retain of unallocated page {page}")
         self._refcount[page] += 1
+        self._holders[page].append(owner)
 
     def refcount(self, page: int) -> int:
         """Current reference count (0 == free). The engine's COW trigger:
         a flush destination with ``refcount > 1`` must be replicated first."""
         return int(self._refcount[page])
 
-    def free(self, page: int) -> None:
+    def holders(self, page: int) -> list:
+        """Owner tags currently holding ``page`` (audit/error reporting)."""
+        return list(self._holders.get(page, ()))
+
+    def free(self, page: int, *, owner=None) -> None:
         """Drop one reference; the page returns to the free list at zero
-        (firing ``on_release``)."""
+        (firing ``on_release``).  Freeing a scratch page, a page that is
+        already free, or — with an explicit ``owner`` — a page that owner
+        does not hold, raises naming the page and its holders."""
+        if page < self.n_scratch:
+            raise ValueError(
+                f"free of scratch page {page} (pages [0, {self.n_scratch}) "
+                "are per-slot scratch and are never allocated)"
+            )
         if self._refcount[page] <= 0:
-            raise ValueError(f"double free of page {page}")
+            raise ValueError(f"double free of page {page} (refcount 0)")
+        held = self._holders[page]
+        if owner is not None and owner not in held:
+            raise ValueError(
+                f"free of page {page} by non-holder {owner!r} "
+                f"(held by {held})"
+            )
+        # anonymous frees drop an anonymous reference first, else the oldest
+        held.remove(owner if owner in held else
+                    (None if None in held else held[0]))
         self._refcount[page] -= 1
         if self._refcount[page] == 0:
+            self._holders.pop(page, None)
             self._free.append(page)
             if self.on_release is not None:
                 self.on_release(page)

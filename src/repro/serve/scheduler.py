@@ -5,19 +5,42 @@ Request lifecycle (the serving subsystem's state machine):
 ```
  submit()            admit()               prefill adopted        retire
 WAITING ──────────► PREFILL ─────────────► DECODE ──────────────► DONE
-   ▲  (slot free AND pages reservable)                │
-   └──────────────── backpressure ◄───────────────────┘
-        (pool cannot reserve worst-case pages          (completion frees
-         -> request stays queued, FIFO)                 pages + reservation)
+   ▲  (slot free AND pages reservable)        │       │
+   │ └───────────── backpressure ◄────────────┼───────┘
+   └─────────────── preempt() ◄───────────────┘  (pool alloc would fail
+   │                                              mid-decode: pages freed,
+   │                                              decoded tokens queued
+   │                                              for replay, FIFO head
+   │                                              requeue)
+   └──► REJECTED (submit: never admittable)     terminal phases:
+        CANCELLED (cancel(uid))                 DONE / REJECTED / CANCELLED
+        EXPIRED   (deadline_s passed)           / EXPIRED / ERRORED
+        ERRORED   (poisoned step, isolated)
 ```
 
 Admission is strict FIFO: the head of the waiting queue is admitted when a
-decode slot is free *and* the page pool can reserve its worst-case *private*
-page count; if the head cannot be admitted nothing behind it is (no
-starvation, deterministic order).  The reservation makes decode-time page
-allocation infallible — steady state never preempts (see serve/pages.py for
-the commitment accounting, and docs/SERVING.md for the invariant as amended
-by sharing).
+decode slot is free *and* the page pool can reserve its page count under the
+configured ``reserve_policy``; if the head cannot be admitted nothing behind
+it is (no starvation, deterministic order).
+
+* ``reserve_policy="worst_case"`` (default) reserves the request's full
+  lifetime page count — decode-time allocation is infallible and steady
+  state never preempts (the PR 3 invariant, unchanged);
+* ``reserve_policy="expected"`` reserves for an *expected* decode length
+  (``ceil(expected_quantile * max_new_tokens)`` generated tokens, never less
+  than the prompt itself needs) — the pool admits more concurrent requests
+  than it could at worst case, and a request that outlives its expectation
+  extends its reservation one page at a time, **preempting** a victim when
+  the commitment budget is full (engine's ``_alloc_page``).  Preemption is
+  recoverable by construction: the victim's pages are freed (shared pages
+  survive through their other holders), re-admission re-prefills its prompt
+  through the ordinary (prefix-sharing) suffix path, and its already-decoded
+  tokens are **replayed teacher-forced through the decode path** — the same
+  computation that built them, so the quantized cache state (and therefore
+  every future token) is reconstructed *bitwise*; a prefill recompute of
+  decode-built blocks would quantize differently and break greedy parity.
+  See docs/SERVING.md §10 for the bounded-preemption invariant that
+  replaces preempt-free.
 
 **Prefix sharing** (:class:`PrefixIndex`): prompts are hashed as a chain of
 ``block_n``-sized chunks under a per-model-config namespace; at admission
@@ -44,6 +67,8 @@ from __future__ import annotations
 import dataclasses
 import enum
 import hashlib
+import math
+import time
 from collections import deque
 
 import numpy as np
@@ -56,6 +81,17 @@ class Phase(enum.Enum):
     PREFILL = "prefill"
     DECODE = "decode"
     DONE = "done"
+    REJECTED = "rejected"    # never admittable (submit-time guard)
+    CANCELLED = "cancelled"  # cancel(uid)
+    EXPIRED = "expired"      # deadline_s passed before completion
+    ERRORED = "errored"      # isolated step-level failure (poisoned row)
+
+
+#: phases a request never leaves (DONE plus the failure retirements)
+TERMINAL_PHASES = frozenset(
+    {Phase.DONE, Phase.REJECTED, Phase.CANCELLED, Phase.EXPIRED,
+     Phase.ERRORED}
+)
 
 
 @dataclasses.dataclass
@@ -64,6 +100,7 @@ class Request:
     prompt: np.ndarray  # [S] int32
     max_new_tokens: int = 32
     out_tokens: list = dataclasses.field(default_factory=list)
+    deadline_s: float | None = None  # TTL from submit() (engine clock)
     # ---- lifecycle, managed by the scheduler/engine ----
     phase: Phase = Phase.WAITING
     slot: int | None = None
@@ -71,11 +108,20 @@ class Request:
     pos: int = 0                 # cached tokens so far (host mirror)
     reserved_pages: int = 0      # remaining un-allocated reservation units
     arrival_s: float = 0.0       # virtual arrival time (bench offered-load)
+    submitted_s: float = 0.0     # scheduler clock at submit (deadline base)
     token_latencies_s: list = dataclasses.field(default_factory=list)
+    error: str | None = None     # reason for REJECTED/EXPIRED/ERRORED/...
     # ---- prefix sharing (set at admission) ----
     shared_pages: list = dataclasses.field(default_factory=list)
     spec_page: int | None = None  # speculative tail page (COW candidate)
     chain: list = dataclasses.field(default_factory=list)  # chunk digests
+    # ---- preemption-by-rematerialization ----
+    remat_tokens: int = 0          # cumulative tokens replayed after preempts
+    replay_left: int = 0           # decoded tokens still to teacher-force
+    pending_token: int | None = None  # decoded-but-unfed token at preemption
+    preemptions: int = 0
+    admit_seq: int = -1            # global admission order (victim policy)
+    admit_cycle: int = -1          # engine cycle of the last admission
 
     @property
     def done(self) -> bool:
@@ -83,12 +129,18 @@ class Request:
         return self.phase == Phase.DONE
 
     @property
+    def finished(self) -> bool:
+        """True in any terminal phase (DONE or a failure retirement)."""
+        return self.phase in TERMINAL_PHASES
+
+    @property
     def prompt_len(self) -> int:
         return int(len(self.prompt))
 
     def pages_needed(self, block_n: int) -> int:
         """Worst-case committed blocks over the request's lifetime: the cache
-        holds ``prompt_len + max_new_tokens`` tokens when it retires."""
+        holds ``prompt + max_new_tokens`` tokens when it retires (preemption
+        does not change the total — the prompt and budget are invariant)."""
         return (self.prompt_len + self.max_new_tokens) // block_n
 
     def suffix_len(self, block_n: int) -> int:
@@ -203,13 +255,32 @@ class Scheduler:
     def __init__(self, *, slots: int, pool: PagePool | None, block_n: int,
                  max_seq: int, min_bucket: int = 16,
                  share_prefix: bool = True, spec_tail: bool = True,
-                 exact_buckets: bool = False, namespace: str = "default"):
+                 exact_buckets: bool = False, namespace: str = "default",
+                 reserve_policy: str = "worst_case",
+                 expected_quantile: float = 0.5, strict: bool = False,
+                 clock=None):
         """``exact_buckets`` groups admissions by *exact* suffix length
         instead of power-of-two buckets — required by cache families whose
         prefill cannot be right-padded (recurrent side-state absorbs pad
         tokens: HybridLM's SSM states, xLSTM; ``PagedSpec.exact_prefill``).
         Costs one prefill compile per distinct prompt length instead of per
-        bucket — the documented trade-off of those families."""
+        bucket — the documented trade-off of those families.
+
+        ``reserve_policy`` selects the admission reservation: ``"worst_case"``
+        reserves the full lifetime page count (preempt-free steady state),
+        ``"expected"`` reserves for ``expected_quantile`` of the decode
+        budget and relies on the engine's preemption-by-rematerialization
+        when a request outlives it.  ``strict=True`` restores the historical
+        behavior of raising ``ValueError`` from :meth:`submit` for
+        never-admittable requests instead of retiring them ``REJECTED``.
+        ``clock`` (default ``time.monotonic``) timestamps submissions for
+        per-request ``deadline_s`` enforcement."""
+        if reserve_policy not in ("worst_case", "expected"):
+            raise ValueError(f"unknown reserve_policy {reserve_policy!r}")
+        if not 0.0 <= expected_quantile <= 1.0:
+            raise ValueError(
+                f"expected_quantile must be in [0, 1], got {expected_quantile}"
+            )
         self.slots = slots
         self.pool = pool
         self.block_n = block_n
@@ -217,16 +288,22 @@ class Scheduler:
         self.min_bucket = min_bucket
         self.spec_tail = spec_tail
         self.exact_buckets = exact_buckets
+        self.reserve_policy = reserve_policy
+        self.expected_quantile = expected_quantile
+        self.strict = strict
+        self.clock = clock if clock is not None else time.monotonic
         self.index: PrefixIndex | None = None
         if share_prefix and pool is not None:
             self.index = PrefixIndex(namespace, block_n)
             pool.on_release = self.index.forget_page
         self.waiting: deque[Request] = deque()
         self.active: dict[int, Request] = {}  # slot -> request
+        self._admit_seq = 0
         self.stats = {
             "submitted": 0,
             "admitted": 0,
             "completed": 0,
+            "rejected": 0,
             "backpressure_events": 0,
             "prefix_hit_requests": 0,
             "prefix_hit_blocks": 0,
@@ -236,22 +313,41 @@ class Scheduler:
 
     # ------------------------------------------------------------ queue
 
-    def submit(self, req: Request) -> None:
+    def reject(self, req: Request, reason: str) -> None:
+        """Retire ``req`` as REJECTED with ``reason`` (or raise it under
+        ``strict=True``) — the graceful path for never-admittable requests,
+        so one bad submission cannot crash a serving loop."""
+        if self.strict:
+            raise ValueError(reason)
+        req.phase = Phase.REJECTED
+        req.error = reason
+        self.stats["rejected"] += 1
+
+    def submit(self, req: Request) -> bool:
+        """Queue ``req``; returns False (phase REJECTED, ``req.error`` set)
+        when it could never be admitted: over the sequence budget, or needing
+        more pages than the pool holds."""
         if req.prompt_len + req.max_new_tokens > self.max_seq:
-            raise ValueError(
+            self.reject(
+                req,
                 f"request {req.uid}: prompt_len={req.prompt_len} + "
                 f"max_new_tokens={req.max_new_tokens} exceeds max_seq="
-                f"{self.max_seq}"
+                f"{self.max_seq}",
             )
+            return False
         need = req.pages_needed(self.block_n)
         if self.pool is not None and need > self.pool.capacity:
-            raise ValueError(
+            self.reject(
+                req,
                 f"request {req.uid} needs {need} pages but the pool holds "
-                f"{self.pool.capacity} — it could never be admitted"
+                f"{self.pool.capacity} — it could never be admitted",
             )
+            return False
         req.phase = Phase.WAITING
+        req.submitted_s = self.clock()
         self.waiting.append(req)
         self.stats["submitted"] += 1
+        return True
 
     def free_slots(self) -> list[int]:
         return [i for i in range(self.slots) if i not in self.active]
@@ -286,27 +382,49 @@ class Scheduler:
             )
         return shared, spec, chain
 
+    def reserve_need(self, req: Request, n_shared: int) -> int:
+        """Reservation units to admit ``req`` with ``n_shared`` shared read
+        blocks already resident.  ``worst_case`` covers the full lifetime;
+        ``expected`` covers ``ceil(expected_quantile * remaining_budget)``
+        generated tokens — never less than the prompt itself commits at
+        admission (suffix blocks must be allocatable immediately), never
+        more than the worst case."""
+        worst = req.pages_needed(self.block_n)
+        if self.reserve_policy == "expected":
+            # already-decoded tokens are certain (a preempted request will
+            # replay them); only the remaining budget is discounted
+            certain = len(req.out_tokens)
+            remaining = req.max_new_tokens - certain
+            exp_new = certain + math.ceil(self.expected_quantile * remaining)
+            expected = (req.prompt_len + exp_new) // self.block_n
+            # the admission itself allocates every full prompt block not
+            # already shared, so the reservation can never dip below that
+            worst = min(worst, max(expected, req.prompt_len // self.block_n))
+        return max(worst - n_shared, 0)
+
     def admit(self) -> dict[int, list[Request]]:
         """Admit waiting requests (strict FIFO) into free slots while the
-        pool can reserve their worst-case *private* pages (shared read
-        blocks are counted once pool-wide, never re-reserved); returns the
-        admitted requests grouped by divergent-suffix prefill bucket length,
-        in admission order."""
+        pool can reserve their policy-determined *private* pages (shared
+        read blocks are counted once pool-wide, never re-reserved); returns
+        the admitted requests grouped by divergent-suffix prefill bucket
+        length, in admission order."""
         free = self.free_slots()
         groups: dict[int, list[Request]] = {}
         while self.waiting and free:
             req = self.waiting[0]
             shared, spec, chain = self._match_prefix(req)
-            need = req.pages_needed(self.block_n) - len(shared)
-            if self.pool is not None and not self.pool.reserve(need):
+            need = self.reserve_need(req, len(shared))
+            if self.pool is not None and not self.pool.reserve(
+                need, owner=req.uid
+            ):
                 self.stats["backpressure_events"] += 1
                 break  # strict FIFO: nothing overtakes the head
             self.waiting.popleft()
             if self.pool is not None:
                 for page in shared:
-                    self.pool.retain(page)
+                    self.pool.retain(page, owner=req.uid)
                 if spec is not None:
-                    self.pool.retain(spec)
+                    self.pool.retain(spec, owner=req.uid)
             req.shared_pages = list(shared)
             req.spec_page = spec
             req.chain = chain
@@ -315,6 +433,8 @@ class Scheduler:
             req.slot = free.pop(0)
             req.phase = Phase.PREFILL
             req.pos = 0
+            req.admit_seq = self._admit_seq
+            self._admit_seq += 1
             self.active[req.slot] = req
             self.stats["admitted"] += 1
             if shared:
@@ -346,22 +466,79 @@ class Scheduler:
         if self.index is not None:
             self.index.forget_page(page)
 
-    # -------------------------------------------------------- retirement
+    # ------------------------------------------- retirement & preemption
 
-    def complete(self, req: Request) -> None:
-        """Retire a request: free its pages (refcounted — shared pages
-        survive until their last holder), return its remaining reservation,
-        release its slot."""
+    def _release_resources(self, req: Request) -> None:
+        """Free pages (refcounted — shared pages survive until their last
+        holder), return the remaining reservation, release the slot."""
         if self.pool is not None:
             for page in req.pages:
-                self.pool.free(page)
-            self.pool.release(req.reserved_pages)
+                self.pool.free(page, owner=req.uid)
+            self.pool.release(req.reserved_pages, owner=req.uid)
         req.pages = []
         req.shared_pages = []
         req.spec_page = None
         req.reserved_pages = 0
-        if req.slot is not None:
-            self.active.pop(req.slot, None)
+        if req.slot is not None and self.active.get(req.slot) is req:
+            self.active.pop(req.slot)
         req.slot = None
-        req.phase = Phase.DONE
-        self.stats["completed"] += 1
+
+    def retire(self, req: Request, phase: Phase = Phase.DONE,
+               reason: str | None = None) -> None:
+        """Move ``req`` to a terminal phase, releasing everything it holds."""
+        if phase not in TERMINAL_PHASES:
+            raise ValueError(f"retire to non-terminal phase {phase}")
+        self._release_resources(req)
+        req.phase = phase
+        if reason is not None:
+            req.error = reason
+        if phase == Phase.DONE:
+            self.stats["completed"] += 1
+
+    def complete(self, req: Request) -> None:
+        """Retire a request as DONE (historical alias of :meth:`retire`)."""
+        self.retire(req, Phase.DONE)
+
+    def preempt(self, req: Request, pending_token: int | None = None) -> None:
+        """Preempt an active request so its pages can serve someone else,
+        keeping it *recoverable by rematerialization*: re-admission
+        re-prefills its (unchanged) prompt through the ordinary — prefix-
+        sharing — suffix path, then replays its already-decoded tokens
+        teacher-forced through the decode path (``replay_left``), which
+        rebuilds the quantized cache bit-for-bit; the decoded-but-not-yet-fed
+        token is parked in ``pending_token`` and restored after the replay,
+        so the continuation is exactly the unpreempted token stream.  The
+        request requeues at the FIFO *head* — it is older than anything
+        waiting behind it."""
+        self._release_resources(req)
+        req.replay_left = len(req.out_tokens)
+        req.remat_tokens += req.replay_left
+        req.pending_token = pending_token
+        req.preemptions += 1
+        req.phase = Phase.WAITING
+        self.waiting.appendleft(req)
+
+    def cancel(self, uid: int) -> Request | None:
+        """Cancel a waiting or active request by uid; returns the retired
+        request (phase CANCELLED) or None if no live request has that uid.
+        The engine wraps this to also reset the victim's page-table row."""
+        for req in self.waiting:
+            if req.uid == uid:
+                self.waiting.remove(req)
+                self.retire(req, Phase.CANCELLED, reason="cancelled")
+                return req
+        for req in list(self.active.values()):
+            if req.uid == uid:
+                self.retire(req, Phase.CANCELLED, reason="cancelled")
+                return req
+        return None
+
+    def expired(self, now: float) -> list[Request]:
+        """Live requests whose ``deadline_s`` (TTL from submission) has
+        passed at clock reading ``now`` — the engine retires them EXPIRED."""
+        live = list(self.waiting) + list(self.active.values())
+        return [
+            r for r in live
+            if r.deadline_s is not None
+            and now - r.submitted_s > r.deadline_s
+        ]

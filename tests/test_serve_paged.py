@@ -48,10 +48,12 @@ def test_pagepool_freelist_and_refcounts():
 
 def test_pagepool_alloc_without_reservation_guard():
     pool = PagePool(3, n_scratch=1)
-    pool.alloc()
-    pool.alloc()
     with pytest.raises(RuntimeError):
-        pool.alloc()  # exhausted
+        pool.alloc()  # covered alloc with no reservation outstanding
+    pool.alloc(covered=False)
+    pool.alloc(covered=False)
+    with pytest.raises(RuntimeError):
+        pool.alloc(covered=False)  # exhausted: would over-commit
 
 
 # --------------------------------------------------------------------------
@@ -370,7 +372,7 @@ def test_mla_serves_paged_by_default():
 def test_nokv_shim_engine_serves_and_accounts():
     """xLSTM (no KV anywhere) serves through the exact-length shim: same
     scheduler, same decode cycle, per-token accounting intact (pos advances
-    with every decoded token; forced retirement counts `evicted` once)."""
+    with every decoded token; budget retirement counted exactly once)."""
     cfg = smoke_config("xlstm-1.3b")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -385,7 +387,7 @@ def test_nokv_shim_engine_serves_and_accounts():
     assert all(r.done for r in reqs)
     assert all(r.pos == 7 + 3 for r in reqs)  # the dense-shim drift fix
     assert stats["decoded_tokens"] == 9
-    assert stats["evicted"] == 3  # forced retirements, counted exactly once
+    assert stats["budget_retired"] == 3  # counted exactly once each
 
 
 def test_forced_shim_matches_paged_outputs():

@@ -120,8 +120,9 @@ def test_scheduler_admission_does_not_double_charge_shared_pages():
     sched.submit(a)
     (bucket, (got_a,)), = sched.admit().items()
     assert got_a is a and a.shared_pages == []
-    # adopt A's prefill: two fresh pages, registered for later arrivals
-    pages_a = [pool.alloc(), pool.alloc()]
+    # adopt A's prefill: two fresh pages (owner-tagged, as the engine's
+    # `_alloc_page` does), registered for later arrivals
+    pages_a = [pool.alloc(owner=a.uid), pool.alloc(owner=a.uid)]
     a.pages.extend(pages_a)
     a.reserved_pages -= 2
     sched.register_prefix(a, pages_a)

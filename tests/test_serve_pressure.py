@@ -1,0 +1,535 @@
+"""Pressure-hardened serving: preemption-by-rematerialization under an
+oversubscribed pool, request lifecycle guards (reject/cancel/expire/error
+isolation), PagePool hardening, the invariant auditor, and the deterministic
+fault-injection harness.
+
+The acceptance bar (ISSUE 6): with the pool at half the worst-case
+provisioning and ``reserve_policy="expected"``, every submitted request
+completes with output tokens bitwise-identical to an unpressured run; every
+injected fault (alloc-fail, forced-preempt, delayed-release, poisoned
+logits row) recovers without crashing the engine, the auditor finds zero
+violations at drain, and each scenario replays exactly from its seed.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import smoke_config
+from repro.models.zoo import build_model
+from repro.serve import (
+    AuditError,
+    FaultPlan,
+    PagePool,
+    Phase,
+    Request,
+    ServeEngine,
+    audit_engine,
+)
+
+BLOCK = 32
+
+
+# --------------------------------------------------------------------------
+# PagePool hardening: every accounting breach raises at the faulting call
+# --------------------------------------------------------------------------
+
+def test_pagepool_free_scratch_page_raises():
+    pool = PagePool(6, n_scratch=2)
+    with pytest.raises(ValueError, match="scratch page 1"):
+        pool.free(1)
+
+
+def test_pagepool_double_free_raises_with_page_id():
+    pool = PagePool(6, n_scratch=2)
+    pool.reserve(1)
+    page = pool.alloc()
+    pool.free(page)
+    with pytest.raises(ValueError, match=f"double free of page {page}"):
+        pool.free(page)
+
+
+def test_pagepool_free_by_non_holder_raises_naming_holder():
+    pool = PagePool(6, n_scratch=2)
+    pool.reserve(1, owner="alice")
+    page = pool.alloc(owner="alice")
+    with pytest.raises(ValueError, match="non-holder 'mallory'"):
+        pool.free(page, owner="mallory")
+    assert pool.refcount(page) == 1  # the bad call changed nothing
+    pool.free(page, owner="alice")
+    assert pool.n_free == pool.capacity
+
+
+def test_pagepool_double_release_raises_naming_owner():
+    pool = PagePool(8, n_scratch=2)
+    assert pool.reserve(2, owner=7)
+    pool.reserve(3)  # anonymous units stay lenient
+    pool.release(2, owner=7)
+    with pytest.raises(ValueError, match="double release: owner 7"):
+        pool.release(1, owner=7)
+    assert pool.reserved == 3
+
+
+def test_pagepool_release_underflow_raises():
+    pool = PagePool(8, n_scratch=2)
+    pool.reserve(1)
+    with pytest.raises(ValueError, match="exceeds reserved"):
+        pool.release(2)
+
+
+def test_pagepool_owner_alloc_beyond_its_reservation_raises():
+    pool = PagePool(8, n_scratch=2)
+    pool.reserve(1, owner="a")
+    pool.reserve(1, owner="b")
+    pool.alloc(owner="a")
+    with pytest.raises(RuntimeError, match="owner 'a' exceeds"):
+        pool.alloc(owner="a")  # would spend b's promised unit
+
+
+def test_pagepool_retain_free_holder_tracking():
+    pool = PagePool(6, n_scratch=2)
+    pool.reserve(1, owner=1)
+    page = pool.alloc(owner=1)
+    pool.retain(page, owner=2)
+    assert pool.holders(page) == [1, 2]
+    pool.free(page, owner=1)
+    assert pool.holders(page) == [2]
+    pool.free(page, owner=2)
+    assert pool.holders(page) == []
+
+
+# --------------------------------------------------------------------------
+# FaultPlan: seeded, replayable, per-site independent streams
+# --------------------------------------------------------------------------
+
+def test_faultplan_replays_bitwise_from_seed():
+    a = FaultPlan(seed=13, alloc_fail=0.4, poison_logits=0.2)
+    b = FaultPlan(seed=13, alloc_fail=0.4, poison_logits=0.2)
+    seq_a = [(a.fires("alloc_fail", cycle=c), a.fires("poison_logits", cycle=c))
+             for c in range(50)]
+    seq_b = [(b.fires("alloc_fail", cycle=c), b.fires("poison_logits", cycle=c))
+             for c in range(50)]
+    assert seq_a == seq_b
+    assert a.log == b.log
+    assert any(x for x, _ in seq_a) and any(y for _, y in seq_a)
+
+
+def test_faultplan_sites_are_independent_streams():
+    """A site's decisions depend only on its own consultation count —
+    consulting another site in between must not perturb them."""
+    a = FaultPlan(seed=4, alloc_fail=0.5)
+    pure = [a.fires("alloc_fail", cycle=c) for c in range(20)]
+    b = FaultPlan(seed=4, alloc_fail=0.5, forced_preempt=0.5)
+    mixed = []
+    for c in range(20):
+        b.fires("forced_preempt", cycle=c)  # interleaved consultation
+        mixed.append(b.fires("alloc_fail", cycle=c))
+    assert pure == mixed
+
+
+def test_faultplan_fire_at_and_max_fires():
+    fp = FaultPlan(seed=0, fire_at={"delayed_release": (2, 5)},
+                   max_fires={"delayed_release": 1})
+    hits = [fp.fires("delayed_release", cycle=c) for c in range(8)]
+    assert hits == [False, False, True, False, False, False, False, False]
+    assert fp.fired("delayed_release") == 1
+    assert fp.consulted("delayed_release") == 8
+
+
+def test_faultplan_rejects_bad_inputs():
+    with pytest.raises(ValueError, match="outside"):
+        FaultPlan(alloc_fail=1.5)
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan(fire_at={"nonsense": (0,)})
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan().fires("nonsense", cycle=0)
+
+
+# --------------------------------------------------------------------------
+# Engine fixtures and the canonical workload
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = smoke_config("llama3-8b").with_(kv_bits=4, kv_block=BLOCK)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _workload(cfg, n=5):
+    """Deterministic mixed workload: multi-block prompts whose decode spans
+    block boundaries (so flush-time page allocation — the preemption site —
+    actually fires)."""
+    rng = np.random.default_rng(42)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(34, 48))
+        reqs.append(Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+            max_new_tokens=int(rng.integers(24, 32)),
+        ))
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def baseline_outputs(small_model):
+    """Unpressured reference run: ample pages, worst-case reservations."""
+    cfg, model, params = small_model
+    engine = ServeEngine(model, params, slots=2, max_seq=128)
+    reqs = _workload(cfg)
+    for r in reqs:
+        engine.submit(r)
+    engine.run()
+    assert all(r.done for r in reqs)
+    return {r.uid: list(r.out_tokens) for r in reqs}
+
+
+# --------------------------------------------------------------------------
+# Tentpole: oversubscribed pool -> preemption -> bitwise-identical outputs
+# --------------------------------------------------------------------------
+
+def test_oversubscribed_pool_preempts_and_matches_baseline(
+        small_model, baseline_outputs):
+    """Half the worst-case provisioning, expected-case reservations: the
+    engine must preempt (pool pressure is real), every request must still
+    complete, and every output token must equal the unpressured run."""
+    cfg, model, params = small_model
+    # worst case for 2 concurrent requests of this workload: 2 slots x
+    # ceil((48+32)/32) = 6 pages -> 0.5x = 3
+    engine = ServeEngine(model, params, slots=2, max_seq=128,
+                         n_pages=2 + 3, reserve_policy="expected",
+                         expected_quantile=0.0, audit_every=1)
+    reqs = _workload(cfg)
+    for r in reqs:
+        assert engine.submit(r)
+    stats = engine.run()  # audit_every=1: every cycle cross-checked
+    assert all(r.done for r in reqs), [r.phase for r in reqs]
+    assert stats["preempted"] > 0, "no pressure exercised — test is vacuous"
+    assert stats["preempt_remat_tokens"] > 0
+    for r in reqs:
+        assert r.out_tokens == baseline_outputs[r.uid], (
+            f"request {r.uid} diverged after {r.preemptions} preemption(s)"
+        )
+    assert engine.pool.n_free == engine.pool.capacity
+    assert engine.pool.reserved == 0
+    assert audit_engine(engine).ok
+
+
+def test_worst_case_policy_unchanged_no_preemption(small_model,
+                                                   baseline_outputs):
+    """``reserve_policy="worst_case"`` (the default) keeps the PR 3-5
+    behavior bit for bit: backpressure instead of preemption, zero pressure
+    stats, identical outputs."""
+    cfg, model, params = small_model
+    engine = ServeEngine(model, params, slots=2, max_seq=128, n_pages=2 + 6)
+    assert engine.sched.reserve_policy == "worst_case"
+    reqs = _workload(cfg)
+    for r in reqs:
+        engine.submit(r)
+    stats = engine.run()
+    assert all(r.done for r in reqs)
+    assert stats["preempted"] == 0
+    assert stats["preempt_remat_tokens"] == 0
+    assert all(r.preemptions == 0 for r in reqs)
+    for r in reqs:
+        assert r.out_tokens == baseline_outputs[r.uid]
+
+
+def test_expected_reservation_admits_more_concurrently(small_model):
+    """The point of expected-case admission: a pool too small for two
+    worst-case reservations still runs two requests concurrently."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab, 40).astype(np.int32)
+               for _ in range(2)]
+    # worst case 2 pages eac h ((40+24)//32); capacity 3 < 4
+    mk = lambda: [Request(uid=i, prompt=p.copy(), max_new_tokens=24)
+                  for i, p in enumerate(prompts)]
+
+    wc = ServeEngine(model, params, slots=2, max_seq=128, n_pages=2 + 3)
+    for r in (wc_reqs := mk()):
+        wc.submit(r)
+    wc.step()
+    assert len(wc.sched.active) == 1  # head reserves 2, second can't
+
+    ex = ServeEngine(model, params, slots=2, max_seq=128, n_pages=2 + 3,
+                     reserve_policy="expected", expected_quantile=0.0)
+    for r in (ex_reqs := mk()):
+        ex.submit(r)
+    ex.step()
+    assert len(ex.sched.active) == 2  # both admitted under expectation
+    wc.run()
+    ex.run()
+    assert all(r.done for r in wc_reqs) and all(r.done for r in ex_reqs)
+    for a, b in zip(wc_reqs, ex_reqs):
+        assert a.out_tokens == b.out_tokens
+
+
+# --------------------------------------------------------------------------
+# Lifecycle guards: reject, cancel, expire, poisoned-step isolation
+# --------------------------------------------------------------------------
+
+def test_submit_rejects_gracefully_and_strict_raises(small_model):
+    cfg, model, params = small_model
+    engine = ServeEngine(model, params, slots=2, max_seq=64)
+    bad = Request(uid=0, prompt=np.zeros(60, np.int32), max_new_tokens=32)
+    assert engine.submit(bad) is False
+    assert bad.phase == Phase.REJECTED and bad.finished
+    assert "max_seq" in bad.error
+    assert engine.sched.stats["rejected"] == 1
+    tiny_pool = ServeEngine(model, params, slots=2, max_seq=128,
+                            n_pages=2 + 1)  # capacity 1
+    huge = Request(uid=1, prompt=np.zeros(40, np.int32), max_new_tokens=30)
+    assert tiny_pool.submit(huge) is False  # needs 2 pages, pool holds 1
+    assert "never be admitted" in huge.error
+    assert not engine.sched.waiting and not tiny_pool.sched.waiting
+
+    strict = ServeEngine(model, params, slots=2, max_seq=64, strict=True)
+    with pytest.raises(ValueError, match="max_seq"):
+        strict.submit(Request(uid=2, prompt=np.zeros(60, np.int32),
+                              max_new_tokens=32))
+
+
+def test_cancel_waiting_and_active_requests(small_model):
+    cfg, model, params = small_model
+    engine = ServeEngine(model, params, slots=1, max_seq=128)
+    rng = np.random.default_rng(3)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab, 20).astype(np.int32),
+                    max_new_tokens=8) for i in range(3)]
+    for r in reqs:
+        engine.submit(r)
+    engine.step()  # uid 0 active, uid 1/2 waiting
+    got = engine.cancel(1)  # cancel while WAITING
+    assert got is reqs[1] and got.phase == Phase.CANCELLED
+    got = engine.cancel(0)  # cancel while DECODE: pages must come back
+    assert got is reqs[0] and got.phase == Phase.CANCELLED
+    assert engine.cancel(99) is None
+    engine.run()
+    assert reqs[2].done and len(reqs[2].out_tokens) == 8
+    assert engine.stats["cancelled"] == 2
+    assert engine.pool.n_free == engine.pool.capacity
+    assert audit_engine(engine).ok
+
+
+def test_deadline_expires_waiting_and_active(small_model):
+    cfg, model, params = small_model
+    now = [0.0]
+    engine = ServeEngine(model, params, slots=1, max_seq=128,
+                         clock=lambda: now[0])
+    rng = np.random.default_rng(4)
+    mk = lambda uid, ttl: Request(
+        uid=uid, prompt=rng.integers(0, cfg.vocab, 20).astype(np.int32),
+        max_new_tokens=8, deadline_s=ttl)
+    a, b, c = mk(0, None), mk(1, 5.0), mk(2, 1000.0)
+    for r in (a, b, c):
+        engine.submit(r)
+    engine.step()  # a active; b, c waiting
+    now[0] = 10.0  # b's TTL passes while it waits
+    engine.run()
+    assert a.done and c.done
+    assert b.phase == Phase.EXPIRED and "deadline_s" in b.error
+    assert engine.stats["expired"] == 1
+    # an *active* request expires mid-decode too
+    d = mk(3, 2.0)
+    engine.submit(d)
+    engine.step()
+    assert d in engine.sched.active.values()
+    now[0] = 100.0
+    engine.run()
+    assert d.phase == Phase.EXPIRED
+    assert engine.pool.n_free == engine.pool.capacity
+    assert audit_engine(engine).ok
+
+
+def test_poisoned_logits_row_is_isolated(small_model, baseline_outputs):
+    """A non-finite logits row retires only its own request (ERRORED, error
+    recorded); every other request completes with baseline outputs."""
+    cfg, model, params = small_model
+    plan = FaultPlan(seed=1, fire_at={"poison_logits": (3,)},
+                     max_fires={"poison_logits": 1})
+    engine = ServeEngine(model, params, slots=2, max_seq=128,
+                         faults=plan, audit_every=2)
+    reqs = _workload(cfg)
+    for r in reqs:
+        engine.submit(r)
+    engine.run()
+    errored = [r for r in reqs if r.phase == Phase.ERRORED]
+    assert len(errored) == 1
+    assert "non-finite logits" in errored[0].error
+    assert engine.stats["errored"] == 1
+    for r in reqs:
+        if r is errored[0]:
+            continue
+        assert r.done
+        assert r.out_tokens == baseline_outputs[r.uid]
+    assert engine.pool.n_free == engine.pool.capacity
+    assert audit_engine(engine).ok
+
+
+# --------------------------------------------------------------------------
+# Fault scenarios: recover without crash, clean audit at drain, replayable
+# --------------------------------------------------------------------------
+
+def _run_faulted(small_model, plan, **engine_kw):
+    cfg, model, params = small_model
+    engine = ServeEngine(model, params, slots=2, max_seq=128,
+                         faults=plan, audit_every=1, **engine_kw)
+    reqs = _workload(cfg)
+    for r in reqs:
+        engine.submit(r)
+    engine.run()
+    return engine, reqs
+
+
+def test_fault_alloc_fail_recovers_with_parity(small_model,
+                                               baseline_outputs):
+    plan = FaultPlan(seed=5, alloc_fail=0.3)
+    engine, reqs = _run_faulted(small_model, plan)
+    assert all(r.done for r in reqs), [r.phase for r in reqs]
+    assert plan.fired("alloc_fail") > 0
+    assert engine.stats["preempted"] > 0  # the recovery path actually ran
+    for r in reqs:
+        assert r.out_tokens == baseline_outputs[r.uid]
+    assert engine.pool.n_free == engine.pool.capacity
+    assert audit_engine(engine).ok
+    # reproducible from the seed: identical fault log AND outputs
+    plan2 = FaultPlan(seed=5, alloc_fail=0.3)
+    engine2, reqs2 = _run_faulted(small_model, plan2)
+    assert plan2.log == plan.log
+    assert [r.out_tokens for r in reqs2] == [r.out_tokens for r in reqs]
+    assert engine2.stats["preempted"] == engine.stats["preempted"]
+
+
+def test_fault_forced_preempt_recovers_with_parity(small_model,
+                                                   baseline_outputs):
+    plan = FaultPlan(seed=7, forced_preempt=0.15)
+    engine, reqs = _run_faulted(small_model, plan)
+    assert all(r.done for r in reqs)
+    assert plan.fired("forced_preempt") > 0
+    assert engine.stats["preempted"] >= plan.fired("forced_preempt") > 0
+    for r in reqs:
+        assert r.out_tokens == baseline_outputs[r.uid]
+    assert engine.pool.n_free == engine.pool.capacity
+    assert audit_engine(engine).ok
+
+
+def test_fault_delayed_release_drains_clean(small_model, baseline_outputs):
+    plan = FaultPlan(seed=9, delayed_release=1.0, delay_cycles=3)
+    engine, reqs = _run_faulted(small_model, plan)
+    assert all(r.done for r in reqs)
+    assert plan.fired("delayed_release") > 0
+    for r in reqs:
+        assert r.out_tokens == baseline_outputs[r.uid]
+    # the run loop kept stepping until every parked page was serviced
+    assert not engine._deferred
+    assert engine.pool.n_free == engine.pool.capacity
+    assert audit_engine(engine).ok
+
+
+def test_fault_storm_under_oversubscription(small_model, baseline_outputs):
+    """Everything at once: oversubscribed pool, expected reservations, and
+    random alloc-fail + forced-preempt + delayed-release — the union of
+    recovery paths still yields bitwise-identical outputs and a clean
+    drain."""
+    plan = FaultPlan(seed=21, alloc_fail=0.1, forced_preempt=0.1,
+                     delayed_release=0.5, delay_cycles=2)
+    engine, reqs = _run_faulted(
+        small_model, plan, n_pages=2 + 4,
+        reserve_policy="expected", expected_quantile=0.25,
+    )
+    assert all(r.done for r in reqs), [r.phase for r in reqs]
+    for r in reqs:
+        assert r.out_tokens == baseline_outputs[r.uid]
+    assert engine.pool.n_free == engine.pool.capacity
+    assert engine.pool.reserved == 0
+    assert audit_engine(engine).ok
+
+
+# --------------------------------------------------------------------------
+# The auditor itself: seeded corruptions must each be named
+# --------------------------------------------------------------------------
+
+@pytest.fixture()
+def drained_engine(small_model):
+    cfg, model, params = small_model
+    engine = ServeEngine(model, params, slots=2, max_seq=128)
+    rng = np.random.default_rng(8)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab, 40).astype(np.int32),
+                    max_new_tokens=4) for i in range(2)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run()
+    report = audit_engine(engine)
+    assert report.ok, report.violations  # clean before corruption
+    return engine
+
+
+def test_audit_detects_leaked_page(drained_engine):
+    engine = drained_engine
+    pool = engine.pool
+    page = pool._free.popleft()  # vanish a free page: held by nobody live
+    pool._refcount[page] = 1
+    pool._holders[page] = ["ghost"]
+    report = audit_engine(engine)
+    assert not report.ok
+    assert any("leaked page" in v and str(page) in v
+               for v in report.violations), report.violations
+    with pytest.raises(AuditError, match="leaked page"):
+        report.raise_if_violations()
+
+
+def test_audit_detects_dangling_index_node(drained_engine):
+    engine = drained_engine
+    index = engine.sched.index
+    page = engine.pool.n_scratch  # free at drain
+    digest = b"\x01" * 20
+    index._page_of[digest] = page
+    index._meta[page] = (digest, index.root, np.zeros(BLOCK, np.int32))
+    index._children.setdefault(index.root, []).append(page)
+    report = audit_engine(engine)
+    assert any("dangling prefix-index node" in v and str(page) in v
+               for v in report.violations), report.violations
+
+
+def test_audit_detects_table_pointing_at_freed_page(drained_engine):
+    engine = drained_engine
+    page = engine.pool.n_scratch + 1  # free at drain
+    engine._table[0, 0] = page
+    report = audit_engine(engine)
+    assert any("points at freed page" in v and str(page) in v
+               for v in report.violations), report.violations
+
+
+def test_audit_detects_refcount_holder_drift(drained_engine):
+    engine = drained_engine
+    pool = engine.pool
+    pool.reserve(1, owner="x")
+    page = pool.alloc(owner="x")
+    pool._refcount[page] = 2  # drift: refcount says 2, holders list says 1
+    report = audit_engine(engine)
+    assert any("holder" in v and str(page) in v
+               for v in report.violations), report.violations
+    pool._refcount[page] = 1  # restore so teardown stays sane
+
+
+def test_audit_clean_on_live_engine_every_cycle(small_model):
+    """audit_every=1 runs the cross-check between every decode step of a
+    prefix-sharing COW workload — any transient desync would raise."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(11)
+    base = rng.integers(0, cfg.vocab, 40).astype(np.int32)
+    engine = ServeEngine(model, params, slots=2, max_seq=128, audit_every=1)
+    reqs = []
+    for i in range(4):  # shared 40-token prefix, divergent tails -> COW
+        tail = rng.integers(0, cfg.vocab, 6).astype(np.int32)
+        reqs.append(Request(uid=i,
+                            prompt=np.concatenate([base, tail]),
+                            max_new_tokens=6))
+    for r in reqs:
+        engine.submit(r)
+    stats = engine.run()  # raises AuditError on any violation
+    assert all(r.done for r in reqs)
+    assert stats["audits"] >= stats["steps"]
