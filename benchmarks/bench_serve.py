@@ -1,6 +1,6 @@
 """Serving-throughput sweeps for the paged continuous-batching engine.
 
-Four sweeps, all appending to BENCH_serve.json so future PRs track them:
+Five sweeps, all appending to BENCH_serve.json so future PRs track them:
 
 * **offered load** (default): requests arrive on a virtual clock (the
   measured engine wall time) at a configured rate with a prompt-length mix;
@@ -24,6 +24,10 @@ Four sweeps, all appending to BENCH_serve.json so future PRs track them:
   preemption-by-rematerialization (docs/SERVING.md §10): each cell reports
   the preemption rate, replayed (rematerialized) tokens, tokens/s, and
   occupancy, with the invariant auditor enabled every cycle.
+* **self-speculative decoding** (``--spec-decode``): spec_k x spec_bits
+  against the sequential baseline (docs/SERVING.md §11) — accepted-token
+  rate, tokens per cycle, end-to-end speedup, and a bitwise-parity check
+  of every output stream.
 
 CPU smoke scale by default; the same sweeps run unchanged on TPU.
 """
@@ -379,11 +383,105 @@ def run_oversubscribe_sweep(*, factors=(0.5, 0.75, 1.0), n_requests=6,
     return records
 
 
+def run_spec_decode_sweep(*, spec_ks=(2, 4), spec_bits=(2, 4), n_requests=6,
+                          max_new=16, slots=2, max_seq=128,
+                          out_path: Path | None = None):
+    """Self-speculative decoding sweep (docs/SERVING.md §11): spec_k x
+    spec_bits against the sequential ``spec_k=1`` baseline over the same
+    workload.  Each cell reports the accepted-token rate (the fraction of
+    truncated-bit draft tokens the full-fidelity verify kept), end-to-end
+    tokens/s, the speedup over sequential decode, and a bitwise-parity
+    check of every output stream — speculation must never change tokens,
+    only the number of host round-trips per token."""
+    cfg = smoke_config("llama3-8b").with_(kv_bits=4, kv_block=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plens = [34, 48, 40, 44, 36, 46]
+
+    def _reqs():
+        rng = np.random.default_rng(zlib.crc32(b"specdec"))
+        return [
+            Request(
+                uid=i,
+                prompt=rng.integers(
+                    0, cfg.vocab, plens[i % len(plens)]).astype(np.int32),
+                max_new_tokens=max_new,
+            )
+            for i in range(n_requests)
+        ]
+
+    import time as _time
+
+    base = ServeEngine(model, params, slots=slots, max_seq=max_seq)
+    base_reqs = _reqs()
+    t0 = _time.perf_counter()
+    for r in base_reqs:
+        base.submit(r)
+    base.run()
+    base_stats = base.summary(wall_s=_time.perf_counter() - t0)
+    base_out = {r.uid: list(r.out_tokens) for r in base_reqs}
+    base_tps = base_stats["tokens_per_s"]
+
+    records = [{
+        "spec_k": 1,
+        "tokens_per_s": round(base_tps, 2),
+        "decoded_tokens": base_stats["decoded_tokens"],
+        "steps": base_stats["steps"],
+    }]
+    for k in spec_ks:
+        for bits in spec_bits:
+            engine = ServeEngine(
+                model, params, slots=slots, max_seq=max_seq,
+                spec_k=k, spec_bits=bits,
+            )
+            reqs = _reqs()
+            t0 = _time.perf_counter()
+            for r in reqs:
+                engine.submit(r)
+            engine.run()
+            stats = engine.summary(wall_s=_time.perf_counter() - t0)
+            out = {r.uid: list(r.out_tokens) for r in reqs}
+            rec = {
+                "spec_k": k,
+                "spec_bits": bits,
+                "n_requests": n_requests,
+                "slots": slots,
+                "decoded_tokens": stats["decoded_tokens"],
+                "steps": stats["steps"],
+                "spec_cycles": stats["spec_cycles"],
+                "spec_draft_tokens": stats["spec_draft_tokens"],
+                "spec_accepted_tokens": stats["spec_accepted_tokens"],
+                "accept_rate": round(stats["spec_accept_rate"], 4),
+                "tokens_per_cycle": round(
+                    stats["decoded_tokens"] / max(1, stats["steps"]), 3),
+                "tokens_per_s": round(stats["tokens_per_s"], 2),
+                "speedup_vs_sequential": round(
+                    stats["tokens_per_s"] / max(base_tps, 1e-9), 3),
+                "bitwise_match": out == base_out,
+            }
+            records.append(rec)
+            emit(
+                f"serve.spec.k{k}.b{bits}", stats["tokens_per_s"],
+                f"accept={rec['accept_rate']}"
+                f";tok/cyc={rec['tokens_per_cycle']}"
+                f";speedup={rec['speedup_vs_sequential']}"
+                f";match={rec['bitwise_match']}",
+            )
+    out_path = _BENCH_SERVE if out_path is None else out_path
+    _append(out_path, {
+        "backend": jax.default_backend(),
+        "sweep": "spec_decode",
+        "records": records,
+    })
+    return records
+
+
 def run():
     run_serve_sweep()
     run_shared_prefix_sweep()
     run_family_sweep()
     run_oversubscribe_sweep()
+    run_spec_decode_sweep()
 
 
 if __name__ == "__main__":
@@ -399,11 +497,16 @@ if __name__ == "__main__":
     ap.add_argument("--oversubscribe", action="store_true",
                     help="run only the pool-pressure sweep (0.5x/0.75x/1.0x "
                          "of worst-case page demand)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="run only the self-speculative decoding sweep "
+                         "(spec_k x spec_bits vs the sequential baseline)")
     args = ap.parse_args()
     if args.shared_prefix:
         run_shared_prefix_sweep()
     elif args.oversubscribe:
         run_oversubscribe_sweep()
+    elif args.spec_decode:
+        run_spec_decode_sweep()
     elif args.family is not None:
         run_family_sweep(
             families=tuple(args.family) if args.family else

@@ -13,8 +13,8 @@ Checks:
   of ``ServeEngine.__init__``;
 * docs/SERVING.md's counter table rows appear as string literals in the
   serving sources (engine.py / scheduler.py / pages.py / audit.py /
-  faults.py), modulo the ``sched_`` prefix the engine adds when folding
-  scheduler stats into ``summary()``.
+  faults.py / speculative.py), modulo the ``sched_`` prefix the engine
+  adds when folding scheduler stats into ``summary()``.
 
 Run directly (exit 1 on drift) or via tests/test_docs.py in the tier-1
 suite.
@@ -130,7 +130,7 @@ def check_serving(text: str) -> list[str]:
     serve_src = "".join(
         (SERVE_SRC / f).read_text()
         for f in ("engine.py", "scheduler.py", "pages.py", "audit.py",
-                  "faults.py")
+                  "faults.py", "speculative.py")
     )
     counters = table_rows(text, "counters")
     if not counters:

@@ -9,9 +9,13 @@
 # tests/test_serve_prefix.py (prefix sharing + COW parity),
 # tests/test_serve_families.py (unified paged decode across cache families:
 # MLA latent paging, hybrid mixed states, SSM page-table-free jaxpr proof),
-# and tests/test_serve_pressure.py (preemption-by-rematerialization parity,
-# lifecycle guards, pool-invariant auditor, deterministic fault injection) —
-# plus the shared_kv paged kernel grid in tests/test_kernels_paged.py.
+# tests/test_serve_pressure.py (preemption-by-rematerialization parity,
+# lifecycle guards, pool-invariant auditor, deterministic fault injection),
+# tests/test_serve_spec.py (self-speculative decoding bitwise parity across
+# families/bits/pressure, docs/SERVING.md §11), and
+# tests/test_serve_invariants.py (generative random-op audit sweep;
+# hypothesis-gated) — plus the shared_kv paged kernel grid in
+# tests/test_kernels_paged.py.
 # CI (.github/workflows/ci.yml) calls exactly this script, so local and CI
 # runs cannot diverge.
 #
@@ -29,5 +33,14 @@ if [[ "${1:-}" == "--serve-pressure" ]]; then
     exit 0
 fi
 
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+# Coverage floor on the serving subsystem (engine, scheduler, pages, audit,
+# faults, speculative): enforced whenever pytest-cov is installed (CI always
+# installs it via requirements-test.txt; bare local environments degrade to
+# an uninstrumented run).
+COV_ARGS=()
+if python -c "import pytest_cov" >/dev/null 2>&1; then
+    COV_ARGS=(--cov=repro.serve --cov-report=term --cov-fail-under=70)
+fi
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -x -q "${COV_ARGS[@]}" "$@"
 python scripts/check_docs.py

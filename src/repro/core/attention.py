@@ -59,6 +59,59 @@ class use_splitkv:
         return False
 
 
+# Speculative-decode contexts (trace-time, same pattern as _SPLITKV).  Both
+# take effect inside :func:`decode_append_attention` / :func:`decode_attention`
+# so the model code (models/attention.py, models/mla.py, transformer stacks)
+# needs no signature changes to participate in draft/verify cycles.
+_SPEC: dict = {"mask": None, "draft_bits": None}
+
+
+class masked_append:
+    """Freeze a subset of batch lanes during cache appends (the multi-token
+    *verify* scan of self-speculative decoding).
+
+    ``mask`` is a traced ``[B]`` bool array from the enclosing jit scope:
+    lanes with ``mask=False`` keep their cache bitwise unchanged while live
+    lanes append exactly as an unmasked step would (``qcache`` masks with
+    ``jnp.where``, which is the identity on true lanes).  Only cache appends
+    are masked — the caller masks ``pos`` and recurrent side-state itself.
+    """
+
+    def __init__(self, mask):
+        self.mask = mask
+
+    def __enter__(self):
+        self._prev = _SPEC["mask"]
+        _SPEC["mask"] = self.mask
+        return self
+
+    def __exit__(self, *exc):
+        _SPEC["mask"] = self._prev
+        return False
+
+
+class use_draft:
+    """Switch decode attention to the speculative *draft* read path: the
+    packed cache is dequantized at ``bits`` (truncated-bit read, see
+    ``kernels/bitdecode/ref._dequant_blocks``) and appends are residual-only
+    (``qcache.draft_append`` — no flush, pools untouched).  Draft state is
+    discarded after the verify step, so the committed cache is read-only
+    here.  Forces the XLA reference kernels and bypasses split-KV routing.
+    """
+
+    def __init__(self, bits: int):
+        self.bits = int(bits)
+
+    def __enter__(self):
+        self._prev = _SPEC["draft_bits"]
+        _SPEC["draft_bits"] = self.bits
+        return self
+
+    def __exit__(self, *exc):
+        _SPEC["draft_bits"] = self._prev
+        return False
+
+
 def decode_attention(
     q: jax.Array,  # [B, 1, h_q, d_k]
     cache: QuantKVCache,
@@ -96,7 +149,8 @@ def decode_attention(
             q, cache, sm_scale=sm_scale, d_v=d_v, impl=impl,
             num_splits=num_splits, return_lse=return_lse,
         )
-    if _SPLITKV["mesh"] is not None and not return_lse:
+    draft_bits = _SPEC["draft_bits"]
+    if draft_bits is None and _SPLITKV["mesh"] is not None and not return_lse:
         from repro.dist import splitkv as _sk
 
         return _sk.splitkv_decode_attention(
@@ -112,6 +166,7 @@ def decode_attention(
         bits=cache.bits, block_n=cache.block_n, sm_scale=sm_scale,
         k_gran=cache.k_gran, shared_kv=cache.shared_kv, d_v=d_v,
         impl=impl, num_splits=num_splits, return_lse=return_lse,
+        draft_bits=draft_bits,
     )
     if return_lse:
         o, lse = out
@@ -133,7 +188,8 @@ def _paged_decode_attention(
     (or, under :class:`use_splitkv`, the table walk sharded across chips).
     ``d_v`` is required for shared_kv (MLA latent) caches — the V width is a
     channel slice of the latent, not a stored pool dimension."""
-    if _SPLITKV["mesh"] is not None and not return_lse:
+    draft_bits = _SPEC["draft_bits"]
+    if draft_bits is None and _SPLITKV["mesh"] is not None and not return_lse:
         from repro.dist import splitkv as _sk
 
         return _sk.splitkv_paged_decode_attention(
@@ -150,6 +206,7 @@ def _paged_decode_attention(
         bits=cache.bits, block_n=cache.block_n, sm_scale=sm_scale,
         k_gran=cache.k_gran, shared_kv=cache.shared_kv, d_v=d_v,
         impl=impl, num_splits=num_splits, return_lse=return_lse,
+        draft_bits=draft_bits,
     )
     if return_lse:
         o, lse = out
@@ -179,11 +236,22 @@ def decode_append_attention(
     through here so the engine's impl switches reach both kernels, and the
     dense/paged choice follows the cache type — the serving engine swaps the
     decode state for a paged one and the model code never changes.
+
+    The speculative contexts hook in here: under :class:`use_draft` the
+    append is residual-only (``qcache.draft_append``) and the attention read
+    dequantizes at the truncated draft bit-width; under :class:`masked_append`
+    frozen lanes skip the append bitwise (multi-token verify).
     """
-    if isinstance(cache, PagedQuantKVCache):
-        cache = qcache.paged_append_decode(cache, k_new, v_new, quant_impl=quant_impl)
+    if _SPEC["draft_bits"] is not None:
+        cache = qcache.draft_append(cache, k_new, v_new)
+    elif isinstance(cache, PagedQuantKVCache):
+        cache = qcache.paged_append_decode(
+            cache, k_new, v_new, quant_impl=quant_impl, mask=_SPEC["mask"]
+        )
     else:
-        cache = qcache.append_decode(cache, k_new, v_new, quant_impl=quant_impl)
+        cache = qcache.append_decode(
+            cache, k_new, v_new, quant_impl=quant_impl, mask=_SPEC["mask"]
+        )
     return decode_attention(q, cache, **attn_kwargs), cache
 
 

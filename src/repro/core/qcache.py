@@ -126,10 +126,18 @@ def init_cache(
     )
 
 
-def _append_residual(cache: QuantKVCache, k_new, v_new):
+def _append_residual(cache: QuantKVCache, k_new, v_new, mask=None):
     """Write one new token per sequence into the residual buffers.  Returns
     (k_res, v_res, res_len_after, full) — the shared front half of both
-    append paths."""
+    append paths.
+
+    ``mask`` ([B] bool, optional) freezes sequences: a ``False`` lane keeps
+    its residual rows and ``res_len`` bitwise unchanged (``jnp.where`` with a
+    true predicate returns the written array unchanged, so masked appends on
+    live lanes are bitwise identical to unmasked ones).  This is the
+    multi-token verify primitive for self-speculative decoding: lanes whose
+    draft already diverged stop appending mid-scan.
+    """
 
     def write(res, rl, new):
         return lax.dynamic_update_slice(res, new.astype(res.dtype), (0, rl, 0))
@@ -138,7 +146,14 @@ def _append_residual(cache: QuantKVCache, k_new, v_new):
     v_res = None if cache.shared_kv else jax.vmap(write)(
         cache.v_res, cache.res_len, v_new
     )
-    rl = cache.res_len + 1
+    if mask is None:
+        rl = cache.res_len + 1
+    else:
+        sel = mask[:, None, None, None]
+        k_res = jnp.where(sel, k_res, cache.k_res)
+        if v_res is not None:
+            v_res = jnp.where(sel, v_res, cache.v_res)
+        rl = cache.res_len + mask.astype(jnp.int32)
     return k_res, v_res, rl, rl == cache.block_n
 
 
@@ -161,6 +176,7 @@ def append_decode(
     v_new: jax.Array | None,  # [B, H, 1, d_v]; None when shared_kv
     *,
     quant_impl: str = "auto",
+    mask=None,
 ) -> QuantKVCache:
     """Append one decoded token per sequence; flush the residual block when
     full (paper: "Once per token generation, the Residual Kernel ... optionally
@@ -177,8 +193,14 @@ def append_decode(
 
     quant_impl: 'auto' | 'pallas' | 'xla', forwarded to
     ``residual_flush.ops.residual_flush``.
+
+    ``mask`` ([B] bool, optional): lanes with ``mask=False`` keep the cache
+    bitwise unchanged (no residual write, no occupancy change; a concurrent
+    flush of *other* lanes selects the frozen lane's old block back — the
+    same non-full select the gated flush always performs).  See
+    :func:`_append_residual`.
     """
-    k_res, v_res, rl, full = _append_residual(cache, k_new, v_new)
+    k_res, v_res, rl, full = _append_residual(cache, k_new, v_new, mask)
 
     if cache.shared_kv:
         packed = (cache.kw, cache.k_scale, cache.k_zero)
@@ -435,6 +457,7 @@ def paged_append_decode(
     v_new: jax.Array | None,  # [B, H, 1, d_v]; None when shared_kv
     *,
     quant_impl: str = "auto",
+    mask=None,
 ) -> PagedQuantKVCache:
     """Paged per-token append: write the new token row into the dense
     residual, and — gated behind ``lax.cond`` exactly like the dense
@@ -446,10 +469,15 @@ def paged_append_decode(
     when its residual filled, else the slot's scratch page ``b`` (keeps the
     kernel's destination set pairwise distinct; see PagedQuantKVCache's
     invariants).
+
+    ``mask`` ([B] bool, optional): frozen lanes (``mask=False``) keep
+    residual, occupancy, and their pool pages bitwise unchanged — a frozen
+    lane is never ``full``, so any concurrent flush routes its destination to
+    the lane's own scratch page (the standard non-flushing destination).
     """
     b = cache.k_res.shape[0]
     nb_max = cache.page_table.shape[1]
-    k_res, v_res, rl, full = _append_residual(cache, k_new, v_new)
+    k_res, v_res, rl, full = _append_residual(cache, k_new, v_new, mask)
 
     blk = jnp.clip(cache.pack_blocks, 0, nb_max - 1)
     dest = jnp.take_along_axis(cache.page_table, blk[:, None], axis=1)[:, 0]
@@ -488,6 +516,47 @@ def paged_append_decode(
         pack_blocks=jnp.where(full, cache.pack_blocks + 1, cache.pack_blocks),
         res_len=jnp.where(full, 0, rl),
     )
+
+
+# --------------------------------------------------------------------------
+# Speculative-draft residual helpers (QuantSpec-style self-speculation)
+# --------------------------------------------------------------------------
+
+
+def widen_residual(cache, extra: int):
+    """Pad the residual token axis by ``extra`` rows (zeros).
+
+    The speculative *draft* pass appends up to ``spec_k - 1`` tokens without
+    ever flushing (the packed pools are read-only to the draft — its state is
+    discarded after the verify step).  Widening the residual keeps those
+    appends in-bounds when ``res_len`` starts near ``block_n``; the decode
+    references read the residual capacity from ``k_res.shape[2]`` and mask by
+    ``res_len``, so a wider residual changes nothing numerically.  Works on
+    dense and paged caches, including layer-stacked serving state.
+    """
+    if extra <= 0:
+        return cache
+
+    def pad(res):
+        cfg = [(0, 0)] * res.ndim
+        cfg[-2] = (0, extra)
+        return jnp.pad(res, cfg)
+
+    upd = {"k_res": pad(cache.k_res)}
+    if cache.v_res is not None:
+        upd["v_res"] = pad(cache.v_res)
+    return dataclasses.replace(cache, **upd)
+
+
+def draft_append(cache, k_new, v_new):
+    """Residual-only append for the speculative draft pass: write the new
+    token row and bump ``res_len`` — no flush, no pool/packed-cache traffic,
+    no ``pack_blocks`` change.  The caller guarantees capacity via
+    :func:`widen_residual`; draft state is discarded after verification, so
+    committed blocks are never touched.  Dense and paged caches alike.
+    """
+    k_res, v_res, rl, _ = _append_residual(cache, k_new, v_new)
+    return dataclasses.replace(cache, k_res=k_res, v_res=v_res, res_len=rl)
 
 
 # Pool fields of the paged cache, in dataclass order, with the rank each has

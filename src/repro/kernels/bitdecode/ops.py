@@ -88,6 +88,7 @@ def bitdecode_attention(
     impl: str = "auto",
     num_splits: int | str | None = "auto",
     return_lse: bool = False,
+    draft_bits: int | None = None,
 ):
     """Fused low-bit decode attention over (packed cache + bf16 residual).
 
@@ -95,6 +96,9 @@ def bitdecode_attention(
     impl: 'pallas' | 'xla' | 'auto'.  Pallas runs interpret-mode off-TPU.
     num_splits: 'auto' | int — split-KV partitions of the packed-block axis;
     the result is policy-equivalent to num_splits=1 (logsumexp merge).
+    draft_bits: speculative draft read — dequantize the packed cache at a
+    truncated bit-width (XLA reference path only; 'auto' resolves to 'xla',
+    explicit 'pallas' raises).
     """
     b, h, g, d_k = q.shape
     nb = kw.shape[2]
@@ -106,7 +110,16 @@ def bitdecode_attention(
     else:
         d_v = v_res.shape[-1]
 
-    if impl == "auto":
+    if draft_bits is not None and draft_bits >= bits:
+        draft_bits = None  # full-fidelity read: identical to the normal path
+    if draft_bits is not None:
+        if impl == "pallas":
+            raise ValueError(
+                "draft_bits (speculative draft read) has no Pallas kernel; "
+                "use impl='xla' or 'auto'"
+            )
+        impl = "xla"
+    elif impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "xla"
     # the auto heuristic targets the Pallas grid; the XLA ref path gains
     # nothing from splitting (it *multiplies* work by the split count), so
@@ -123,6 +136,7 @@ def bitdecode_attention(
             pack_blocks, res_len,
             bits=bits, block_n=block_n, sm_scale=sm_scale, k_gran=k_gran,
             shared_kv=shared_kv, d_v=d_v, num_splits=num_splits,
+            draft_bits=draft_bits,
         )
         return (out, lse) if return_lse else out
     if impl != "pallas":

@@ -15,14 +15,31 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import quantizer
+from repro.core import layout, quantizer
 
 MASK_VALUE = -1e37
 
 
-def _dequant_blocks(words, scale, zero, bits, granularity, dtype=jnp.bfloat16):
-    """words [B,H,nb,npr,d] -> [B,H,nb*block_n,d] in natural token order."""
-    x = quantizer.unpack_and_dequantize(words, scale, zero, bits, granularity, dtype=dtype)
+def _dequant_blocks(words, scale, zero, bits, granularity, dtype=jnp.bfloat16,
+                    draft_bits=None):
+    """words [B,H,nb,npr,d] -> [B,H,nb*block_n,d] in natural token order.
+
+    ``draft_bits`` (speculative draft read, QuantSpec-style): dequantize as if
+    only the top ``draft_bits`` of each ``bits``-bit code had been stored —
+    ``q >> (bits - draft_bits)`` against a scale widened by ``2^(bits -
+    draft_bits)``.  Same packed words, same (scale, zero) metadata, no second
+    cache: just a cheaper *read* of the committed pool that the verify pass
+    re-reads at full fidelity.
+    """
+    if draft_bits is not None and draft_bits < bits:
+        shift = bits - draft_bits
+        q = layout.unpack_strided(words, bits) >> shift
+        x = quantizer.dequantize_block(
+            q, scale.astype(jnp.float32) * (1 << shift), zero, granularity,
+            dtype=dtype,
+        )
+    else:
+        x = quantizer.unpack_and_dequantize(words, scale, zero, bits, granularity, dtype=dtype)
     b, h, nb, n, d = x.shape
     return x.reshape(b, h, nb * n, d)
 
@@ -66,6 +83,7 @@ def bitdecode_attention_ref(
     shared_kv: bool = False,
     d_v: int | None = None,
     num_splits: int = 1,
+    draft_bits: int | None = None,
 ):
     """Low-bit flash-decode attention, reference semantics.
 
@@ -76,6 +94,9 @@ def bitdecode_attention_ref(
         the MLA latent-cache mode).
     k_res/v_res: bf16 [B, H_kv, N_r, d_k/d_v]; pack_blocks/res_len: int32 [B].
     num_splits: split-KV partition count (1 = classic single-pass softmax).
+    draft_bits: speculative draft read — dequantize the packed cache at a
+    truncated bit-width (see :func:`_dequant_blocks`); the bf16 residual is
+    read at full fidelity either way.
 
     Returns (out [B,H,g,d_v] f32, lse [B,H,g] f32).
     """
@@ -87,14 +108,18 @@ def bitdecode_attention_ref(
         assert d_v is not None
     else:
         d_v = v_res.shape[-1]
+    if draft_bits is not None and not 1 <= draft_bits <= bits:
+        raise ValueError(f"draft_bits={draft_bits} outside [1, bits={bits}]")
 
-    k_hat = _dequant_blocks(kw, k_scale, k_zero, bits, k_gran)  # [B,H,Sp,dk]
+    k_hat = _dequant_blocks(kw, k_scale, k_zero, bits, k_gran,
+                            draft_bits=draft_bits)  # [B,H,Sp,dk]
     if shared_kv:
         v_hat = k_hat[..., :d_v]
         if v_res is None:  # latent mode: residual V is the slice of residual K
             v_res = k_res[..., :d_v]
     else:
-        v_hat = _dequant_blocks(vw, v_scale, v_zero, bits, "tensor")
+        v_hat = _dequant_blocks(vw, v_scale, v_zero, bits, "tensor",
+                                draft_bits=draft_bits)
 
     k_all = jnp.concatenate([k_hat, k_res.astype(k_hat.dtype)], axis=2)
     v_all = jnp.concatenate([v_hat, v_res.astype(v_hat.dtype)], axis=2)

@@ -31,6 +31,7 @@ def paged_bitdecode_attention(
     k_gran: str = "channel", shared_kv: bool = False, d_v: int | None = None,
     impl: str = "auto",
     num_splits: int | str | None = "auto", return_lse: bool = False,
+    draft_bits: int | None = None,
 ):
     b, h, g, d_k = q.shape
     if shared_kv:
@@ -40,7 +41,16 @@ def paged_bitdecode_attention(
         d_v = vw_pool.shape[-1]
     if sm_scale is None:
         sm_scale = 1.0 / (d_k**0.5)
-    if impl == "auto":
+    if draft_bits is not None and draft_bits >= bits:
+        draft_bits = None  # full-fidelity read: identical to the normal path
+    if draft_bits is not None:
+        if impl == "pallas":
+            raise ValueError(
+                "draft_bits (speculative draft read) has no Pallas kernel; "
+                "use impl='xla' or 'auto'"
+            )
+        impl = "xla"
+    elif impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "xla"
     if num_splits in (None, "auto") and impl == "xla":
         num_splits = 1  # splitting only pays on the Pallas grid (see bd_ops)
@@ -52,6 +62,7 @@ def paged_bitdecode_attention(
             v_zero_pool, k_res, v_res, page_table, pack_blocks, res_len,
             bits=bits, block_n=block_n, sm_scale=sm_scale, k_gran=k_gran,
             shared_kv=shared_kv, d_v=d_v, num_splits=num_splits,
+            draft_bits=draft_bits,
         )
         return (out, lse) if return_lse else out
     if impl != "pallas":

@@ -24,7 +24,7 @@ def paged_bitdecode_attention_ref(
     pack_blocks, res_len,
     *,
     bits, block_n=128, sm_scale=None, k_gran="channel",
-    shared_kv=False, d_v=None, num_splits=1,
+    shared_kv=False, d_v=None, num_splits=1, draft_bits=None,
 ):
     kw = _gather(kw_pool, page_table)
     ks = _gather(k_scale_pool, page_table)
@@ -36,4 +36,5 @@ def paged_bitdecode_attention_ref(
         q, kw, ks, kz, vw, vs, vz, k_res, v_res, pack_blocks, res_len,
         bits=bits, block_n=block_n, sm_scale=sm_scale, k_gran=k_gran,
         shared_kv=shared_kv, d_v=d_v, num_splits=num_splits,
+        draft_bits=draft_bits,
     )

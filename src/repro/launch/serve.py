@@ -21,7 +21,11 @@ scheduler admits against a quantile of the remaining decode budget instead
 of the worst case; if the pool later runs dry the engine preempts a victim
 (``--preempt-policy``) and rematerializes it bitwise-identically on
 re-admission (docs/SERVING.md §10).  ``--audit-every N`` cross-checks the
-pool/page-table/prefix-index invariants every N cycles.
+pool/page-table/prefix-index invariants every N cycles.  ``--spec-k K``
+(K > 1) turns on self-speculative decoding: K-token greedy drafts read the
+same committed pools at ``--spec-bits`` precision and a single batched
+full-fidelity pass verifies them, keeping the output stream bitwise equal
+to sequential decode (docs/SERVING.md §11).
 """
 from __future__ import annotations
 
@@ -82,6 +86,14 @@ def main():
                     help="run the pool/table/index invariant auditor every N "
                          "engine cycles (0 disables; always audits at drain "
                          "when enabled)")
+    ap.add_argument("--spec-k", type=int, default=1,
+                    help="self-speculative decode depth: draft K tokens per "
+                         "cycle against the low-bit committed pools, verify "
+                         "in one batched full-fidelity pass (>1 enables; "
+                         "docs/SERVING.md §11)")
+    ap.add_argument("--spec-bits", type=int, default=None,
+                    help="draft-path read precision in bits (default: "
+                         "min(2, kv_bits); must be <= kv_bits)")
     ap.add_argument("--deadline-s", type=float, default=None,
                     help="per-request TTL on the engine clock; overdue "
                          "requests retire as EXPIRED")
@@ -106,6 +118,7 @@ def main():
         expected_quantile=args.expected_quantile,
         preempt_policy=args.preempt_policy,
         audit_every=args.audit_every, strict=args.strict,
+        spec_k=args.spec_k, spec_bits=args.spec_bits,
     )
     print(f"[serve] engine mode: {'paged' if engine.paged else 'exact-length shim'}"
           + (f", pool={engine.n_pages} pages "
@@ -139,6 +152,13 @@ def main():
             f"[serve] pressure: preempted={stats['preempted']}"
             f" preempt_remat_tokens={stats['preempt_remat_tokens']}"
             f" audits={stats['audits']}"
+        )
+    if args.spec_k > 1:
+        print(
+            f"[serve] speculative: k={args.spec_k}"
+            f" accept_rate={stats.get('spec_accept_rate', 0.0):.3f}"
+            f" drafted={stats.get('spec_draft_tokens', 0)}"
+            f" accepted={stats.get('spec_accepted_tokens', 0)}"
         )
     if engine.paged and not args.no_prefix_sharing:
         print(

@@ -26,6 +26,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.serve.scheduler import Phase
+
 
 class AuditError(RuntimeError):
     """An invariant audit found violations (the report text is the message)."""
@@ -243,4 +245,68 @@ def audit_engine(engine) -> AuditReport:
                     f"prefix-index digest entry maps to unregistered page "
                     f"{page}"
                 )
+
+    _audit_spec(engine, out)
     return report
+
+
+def _audit_spec(engine, out: list) -> None:
+    """Self-speculative decoding state (SERVING.md §11).
+
+    * config sanity: ``spec_k >= 1``; with speculation on, ``spec_bits``
+      must sit in ``[1, kv_bits]`` and the draft/verify callables exist;
+    * token conservation: every drafted token is either accepted or
+      rejected — ``spec_draft_tokens == spec_accepted + spec_rejected``;
+    * position bookkeeping: an active DECODE request's host ``pos`` mirror
+      must equal ``prompt_len + len(out_tokens) - replay_left`` — the
+      multi-token verify append and the per-token sequential path maintain
+      the same ledger, so drift here means a lost or double-counted append.
+    """
+    spec_k = getattr(engine, "spec_k", 1)
+    stats = getattr(engine, "stats", {})
+    if spec_k < 1:
+        out.append(f"spec_k={spec_k} out of range (must be >= 1)")
+    if spec_k > 1:
+        bits = getattr(
+            getattr(getattr(engine, "model", None), "cfg", None),
+            "kv_bits", None,
+        )
+        sb = getattr(engine, "spec_bits", None)
+        if sb is not None and bits is not None and not (1 <= sb <= bits):
+            out.append(
+                f"spec_bits={sb} outside [1, kv_bits={bits}]"
+            )
+        if getattr(engine, "_draft", None) is None:
+            out.append("spec_k > 1 but no draft pass was built")
+        if getattr(engine, "_verify", None) is None:
+            out.append("spec_k > 1 but no verify pass was built")
+    drafted = stats.get("spec_draft_tokens", 0)
+    accepted = stats.get("spec_accepted_tokens", 0)
+    rejected = stats.get("spec_rejected_tokens", 0)
+    if min(drafted, accepted, rejected) < 0:
+        out.append(
+            f"negative speculative counter(s): drafted={drafted} "
+            f"accepted={accepted} rejected={rejected}"
+        )
+    if drafted != accepted + rejected:
+        out.append(
+            f"speculative token conservation breach: drafted={drafted} != "
+            f"accepted={accepted} + rejected={rejected}"
+        )
+    sched = getattr(engine, "sched", None)
+    if sched is None:
+        return
+    for req in sched.active.values():
+        if req.spec_accepted < 0 or req.spec_rejected < 0:
+            out.append(
+                f"request {req.uid}: negative per-request speculative "
+                f"counter(s) ({req.spec_accepted}/{req.spec_rejected})"
+            )
+        if req.phase is Phase.DECODE:
+            want = req.prompt_len + len(req.out_tokens) - req.replay_left
+            if req.pos != want:
+                out.append(
+                    f"request {req.uid}: pos={req.pos} but prompt_len + "
+                    f"out_tokens - replay_left = {want} (append ledger "
+                    "drift)"
+                )

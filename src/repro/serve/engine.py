@@ -118,7 +118,8 @@ class ServeEngine:
                  expected_quantile: float = 0.5,
                  preempt_policy: str = "youngest", audit_every: int = 0,
                  faults=None, strict: bool = False,
-                 guard_logits: bool = True, clock=None):
+                 guard_logits: bool = True, clock=None,
+                 spec_k: int = 1, spec_bits: int | None = None):
         """``paged=None`` follows the model's ``paged_spec()`` (paged when it
         declares a paged family); ``paged=False`` forces the exact-length
         shim for any token-prefill model (debug/baseline path); ``paged=True``
@@ -145,7 +146,17 @@ class ServeEngine:
         ``strict=True`` makes never-admittable submissions raise instead of
         retiring REJECTED; ``guard_logits=False`` disables the per-row
         poisoned-step isolation (benchmarking); ``clock`` (default
-        ``time.monotonic``) drives ``deadline_s`` TTL enforcement."""
+        ``time.monotonic``) drives ``deadline_s`` TTL enforcement.
+
+        Self-speculative decoding (docs/SERVING.md §11): ``spec_k > 1``
+        decodes up to ``spec_k`` tokens per cycle — a draft pass against the
+        truncated ``spec_bits``-bit read of the *same* pools proposes
+        ``spec_k - 1`` continuations, one batched full-fidelity verify scan
+        accepts the longest exactly-matching prefix (greedy engine, so
+        acceptance is exact token equality and the output stream is bitwise
+        identical to ``spec_k = 1``).  ``spec_bits`` defaults to
+        ``min(2, kv_bits)``.  Speculative cycles never route through the
+        cross-chip split-KV step (the per-cycle heuristic stays off)."""
         self.model = model
         self.params = params
         self.slots = slots
@@ -182,6 +193,29 @@ class ServeEngine:
         self.block_n = spec.block_n if spec is not None else getattr(cfg, "kv_block", 128)
         self._h_kv = spec.n_kv_heads if spec is not None else getattr(cfg, "n_kv_heads", 1)
 
+        # self-speculative decoding (draft against the truncated-bit read of
+        # the same pools; one batched verify scan; docs/SERVING.md §11)
+        self.spec_k = int(spec_k)
+        if self.spec_k < 1:
+            raise ValueError(f"spec_k={spec_k} must be >= 1")
+        kv_bits = getattr(cfg, "kv_bits", 4)
+        self.spec_bits = int(spec_bits) if spec_bits is not None else min(2, kv_bits)
+        if not 1 <= self.spec_bits <= kv_bits:
+            raise ValueError(
+                f"spec_bits={self.spec_bits} outside [1, kv_bits={kv_bits}]"
+            )
+        self._draft = self._verify = None
+        if self.spec_k > 1:
+            from repro.serve import speculative as _spec_mod
+
+            self._draft = _spec_mod.make_draft_fn(
+                model, spec_k=self.spec_k, spec_bits=self.spec_bits,
+                quant_impl=quant_impl,
+            )
+            self._verify = _spec_mod.make_verify_fn(
+                model, spec, impl=impl, quant_impl=quant_impl
+            )
+
         # one jitted decode step (static shapes) shared by every family, and
         # the host-side next-token buffer (one device->host pull per cycle)
         self._step = jax.jit(
@@ -213,6 +247,9 @@ class ServeEngine:
             # formerly overloaded as "evicted")
             "budget_retired": 0, "preempted": 0, "preempt_remat_tokens": 0,
             "expired": 0, "cancelled": 0, "errored": 0, "audits": 0,
+            # self-speculative decoding (docs/SERVING.md §11)
+            "spec_cycles": 0, "spec_draft_tokens": 0,
+            "spec_accepted_tokens": 0, "spec_rejected_tokens": 0,
         }
         self._token_latencies: list[float] = []
         self._occupancy: list[float] = []
@@ -363,6 +400,11 @@ class ServeEngine:
             "latency_p50_ms": 1e3 * _percentile(self._token_latencies, 50),
             "latency_p99_ms": 1e3 * _percentile(self._token_latencies, 99),
         }
+        if self.spec_k > 1:
+            out["spec_accept_rate"] = (
+                self.stats["spec_accepted_tokens"]
+                / max(1, self.stats["spec_draft_tokens"])
+            )
         if self.paged:
             out.update(
                 occupancy_mean=float(np.mean(self._occupancy)) if self._occupancy else 0.0,
@@ -388,6 +430,8 @@ class ServeEngine:
     # ------------------------------------------------ the one decode cycle
 
     def step(self) -> bool:
+        if self.spec_k > 1:
+            return self._step_spec()
         t0 = time.perf_counter()
         self._cycle += 1
         self._service_deferred()
@@ -446,6 +490,197 @@ class ServeEngine:
             if self.audit_every and self._cycle % self.audit_every == 0:
                 self.audit().raise_if_violations()
         return True
+
+    # ------------------------------------------- the speculative decode cycle
+
+    def _step_spec(self) -> bool:
+        """One self-speculative cycle (``spec_k > 1``, docs/SERVING.md §11):
+        the same lifecycle skeleton as :meth:`step` (deferred releases,
+        expiry, forced-preempt fault, admission), then
+
+        1. build the ``[slots, spec_k]`` feed matrix: column 0 is each lane's
+           committed next token; replay lanes (teacher forcing) take their
+           recorded history, normal lanes leave room for draft candidates;
+        2. pre-allocate every flush destination the cycle can reach
+           (``_ensure_flush_pages`` with per-lane lookahead — COW and
+           preemption semantics unchanged, just applied over a window);
+        3. draft pass (one device call): ``spec_k - 1`` greedy steps against
+           the truncated ``spec_bits`` read of the same pools, state
+           discarded;
+        4. verify pass (one device call): a full-fidelity masked scan over
+           all feeds — a lane freezes the moment its draft diverges from the
+           verify argmax;
+        5. host accounting (:meth:`_advance_spec`): accept the longest
+           matching prefix, fall back to the verify token at the first
+           divergence, preserve the sequential EOS / budget / poisoned-step
+           retirement semantics token by token.
+
+        Two host syncs per cycle regardless of ``spec_k`` — the latency win
+        on the memory-bound decode this paper targets."""
+        t0 = time.perf_counter()
+        self._cycle += 1
+        self._service_deferred()
+        self._expire()
+        if (self.paged and self.faults is not None
+                and self.faults.fires("forced_preempt", cycle=self._cycle)):
+            victim = self._pick_victim()
+            if victim is not None:
+                self._preempt(victim)
+        if self.paged:
+            self._admit_and_prefill()
+        else:
+            self._admit_exact()
+        if not self.sched.active:
+            return False
+
+        k = self.spec_k
+        feeds = np.zeros((self.slots, k), np.int32)
+        limit = np.zeros((self.slots,), np.int32)
+        forced = np.zeros((self.slots,), bool)
+        lookahead: dict[int, int] = {}
+        for slot, req in self.sched.active.items():
+            feeds[slot, 0] = self.tokens[slot, 0]
+            if req.replay_left > 0:
+                # teacher-forced replay: feed recorded history, accept all
+                n = min(k, req.replay_left)
+                start = len(req.out_tokens) - req.replay_left
+                for j in range(1, n):
+                    feeds[slot, j] = req.out_tokens[start + j]
+                limit[slot] = n
+                forced[slot] = True
+            else:
+                limit[slot] = min(k, req.max_new_tokens - len(req.out_tokens))
+            lookahead[slot] = int(limit[slot])
+
+        if self.paged:
+            self._ensure_flush_pages(lookahead=lookahead)
+            if not self.sched.active:  # everyone self-preempted under faults
+                return False
+            for slot in range(self.slots):
+                if self.sched.active.get(slot) is None:
+                    limit[slot] = 0  # preempted mid-ensure: feed nothing
+            if self._table_dirty:
+                self.state["caches"] = pg.set_page_tables(
+                    self.state["caches"], self._table
+                )
+                self._table_dirty = False
+
+        if any(limit[s] > 1 and not forced[s]
+               for s, _ in self.sched.active.items()):
+            drafts = np.asarray(self._draft(
+                self.params, self.state, jnp.asarray(feeds[:, 0])
+            ))
+            for slot, req in self.sched.active.items():
+                n = int(limit[slot])
+                if forced[slot] or n <= 1:
+                    continue
+                feeds[slot, 1:n] = drafts[slot, : n - 1]
+
+        v, applied, finite, self.state = self._verify(
+            self.params, self.state, jnp.asarray(feeds),
+            jnp.asarray(limit), jnp.asarray(forced),
+        )
+        # host sync: the verify results pull (the only other sync is the
+        # draft pull above — 2 per cycle for up to spec_k tokens per lane)
+        v = np.asarray(v)
+        applied = np.asarray(applied)
+        finite = np.asarray(finite)
+        poison: set[int] = set()
+        if self.faults is not None:
+            for slot, req in list(self.sched.active.items()):
+                if self.faults.fires(
+                    "poison_logits", cycle=self._cycle, uid=req.uid
+                ):
+                    poison.add(slot)
+        self.stats["steps"] += 1
+        self.stats["spec_cycles"] += 1
+        self._advance_spec(
+            feeds, v, applied, finite, limit, forced,
+            time.perf_counter() - t0, poison,
+        )
+        if self.paged:
+            self._occupancy.append(self.pool.occupancy)
+            if self.audit_every and self._cycle % self.audit_every == 0:
+                self.audit().raise_if_violations()
+        return True
+
+    def _advance_spec(self, feeds, v, applied, finite, limit, forced,
+                      dt: float, poison: set[int]) -> None:
+        """Per-lane accounting for a speculative cycle.  ``applied[slot]``
+        marks the feeds the verify scan actually ran (the lane was alive),
+        so ``n_ap`` applied feeds mean: feed 0 (committed) plus ``n_ap - 1``
+        accepted draft tokens.  Every applied feed is recorded exactly as
+        ``spec_k`` sequential cycles would record it; the lane's next
+        committed token is the verify argmax after its last applied feed —
+        the verify token at first divergence, or the continuation after full
+        acceptance.  Emission stops early (and retires ERRORED) at the first
+        non-finite verify row, matching the sequential poisoned-step
+        semantics: the token that *produced* the bad row is still recorded.
+        """
+        for slot, req in list(self.sched.active.items()):
+            n_ap = int(applied[slot].sum())
+            if n_ap == 0:
+                continue
+            if req.replay_left > 0:
+                # replay lanes ignore logits entirely (teacher forcing)
+                req.pos += n_ap
+                req.replay_left -= n_ap
+                if req.replay_left > 0:
+                    idx = len(req.out_tokens) - req.replay_left
+                    self.tokens[slot, 0] = req.out_tokens[idx]
+                else:
+                    # replay complete: resume the parked unpreempted stream
+                    self.tokens[slot, 0] = req.pending_token
+                    req.pending_token = None
+                continue
+            drafted = max(0, int(limit[slot]) - 1)
+            accepted = n_ap - 1
+            self.stats["spec_draft_tokens"] += drafted
+            self.stats["spec_accepted_tokens"] += accepted
+            self.stats["spec_rejected_tokens"] += drafted - accepted
+            req.spec_accepted += accepted
+            req.spec_rejected += drafted - accepted
+
+            n_emit = n_ap
+            err_reason = None
+            if slot in poison:
+                # injected fault poisons the cycle's logits: sequential
+                # semantics record the fed token, then retire ERRORED
+                n_emit = 1
+                err_reason = "non-finite logits row"
+            elif self.guard_logits:
+                bad_idx = np.flatnonzero(~finite[slot, :n_ap])
+                if bad_idx.size:
+                    n_emit = int(bad_idx[0]) + 1
+                    err_reason = "non-finite logits row"
+            per_tok = dt / max(1, n_emit)
+            retired = False
+            for j in range(n_emit):
+                tok = int(feeds[slot, j])
+                req.out_tokens.append(tok)
+                req.pos += 1
+                req.token_latencies_s.append(per_tok)
+                self._token_latencies.append(per_tok)
+                self.stats["decoded_tokens"] += 1
+                if err_reason is not None and j == n_emit - 1:
+                    self._retire(
+                        req, Phase.ERRORED,
+                        reason=(
+                            f"request {req.uid} step {self._cycle}: "
+                            f"{err_reason}"
+                        ),
+                    )
+                    retired = True
+                    break
+                hit_eos = self.eos_id is not None and tok == self.eos_id
+                if hit_eos or len(req.out_tokens) >= req.max_new_tokens:
+                    if not hit_eos:
+                        self.stats["budget_retired"] += 1
+                    self._retire(req, Phase.DONE)
+                    retired = True
+                    break
+            if not retired:
+                self.tokens[slot, 0] = int(v[slot, n_emit - 1])
 
     def _advance(self, nxt: np.ndarray, dt: float,
                  bad: dict[int, str] | None = None) -> None:
@@ -764,10 +999,18 @@ class ServeEngine:
                     req, req.shared_pages + pages_per_req[r]
                 )
 
-    def _ensure_flush_pages(self) -> None:
+    def _ensure_flush_pages(
+        self, lookahead: dict[int, int] | None = None
+    ) -> None:
         """Allocate the destination page for every sequence whose residual
         fills on the upcoming step (pos % block_n == block_n - 1): the flush
         will commit packed block pos // block_n through the page table.
+
+        ``lookahead`` (slot -> feed count, speculative cycles) widens the
+        check to every position the cycle can reach — a ``spec_k``-token
+        verify scan may cross multiple block boundaries, and each needs its
+        destination (fresh page / COW replica) resolved before the table is
+        pushed.  ``None`` keeps the sequential single-step window.
 
         Copy-on-write: when the destination column already holds a pool page
         with refcount > 1 (a speculative shared tail — serve/scheduler.py),
@@ -784,35 +1027,37 @@ class ServeEngine:
         None) is skipped, its table row already reset to scratch."""
         cow_src, cow_dst = [], []
         for req in list(self.sched.active.values()):
-            if self.sched.active.get(req.slot) is not req:
-                continue  # preempted by an earlier alloc this cycle
-            if req.pos % self.block_n != self.block_n - 1:
-                continue
-            blk = req.pos // self.block_n
-            entry = int(self._table[req.slot, blk])
-            if entry < self.slots:  # still scratch -> fresh private page
-                page = self._alloc_page(req)
-                if page is None:
-                    continue  # self-preempted: requeued, row reset
-                self._table[req.slot, blk] = page
-                self._table_dirty = True
-            elif self.pool.refcount(entry) > 1:  # shared -> copy-on-write
-                page = self._alloc_page(req)
-                if page is None:
-                    continue  # self-preempted: requeued, row reset
-                cow_src.append(entry)
-                cow_dst.append(page)
-                req.pages.remove(entry)
-                if req.spec_page == entry:
-                    req.spec_page = None
-                self.pool.free(entry, owner=req.uid)
-                self._table[req.slot, blk] = page
-                self._table_dirty = True
-                self.stats["cow_copies"] += 1
-            else:
-                # privately held page (last sharer left): the flush will
-                # overwrite it in place — drop any stale index node first
-                self.sched.forget_page(entry)
+            window = 1 if lookahead is None else lookahead.get(req.slot, 1)
+            for j in range(max(1, window)):
+                if self.sched.active.get(req.slot) is not req:
+                    break  # preempted by an earlier alloc this cycle
+                if (req.pos + j) % self.block_n != self.block_n - 1:
+                    continue
+                blk = (req.pos + j) // self.block_n
+                entry = int(self._table[req.slot, blk])
+                if entry < self.slots:  # still scratch -> fresh private page
+                    page = self._alloc_page(req)
+                    if page is None:
+                        continue  # self-preempted: requeued, row reset
+                    self._table[req.slot, blk] = page
+                    self._table_dirty = True
+                elif self.pool.refcount(entry) > 1:  # shared -> copy-on-write
+                    page = self._alloc_page(req)
+                    if page is None:
+                        continue  # self-preempted: requeued, row reset
+                    cow_src.append(entry)
+                    cow_dst.append(page)
+                    req.pages.remove(entry)
+                    if req.spec_page == entry:
+                        req.spec_page = None
+                    self.pool.free(entry, owner=req.uid)
+                    self._table[req.slot, blk] = page
+                    self._table_dirty = True
+                    self.stats["cow_copies"] += 1
+                else:
+                    # privately held page (last sharer left): the flush will
+                    # overwrite it in place — drop any stale index node first
+                    self.sched.forget_page(entry)
         if cow_src:
             self.state["caches"] = pg.cow_pages(
                 self.state["caches"], cow_src, cow_dst

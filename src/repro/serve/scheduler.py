@@ -122,6 +122,9 @@ class Request:
     preemptions: int = 0
     admit_seq: int = -1            # global admission order (victim policy)
     admit_cycle: int = -1          # engine cycle of the last admission
+    # ---- self-speculative decoding (engine spec_k > 1, SERVING.md §11) ----
+    spec_accepted: int = 0         # draft tokens accepted by verify
+    spec_rejected: int = 0         # draft tokens discarded at divergence
 
     @property
     def done(self) -> bool:

@@ -1,0 +1,112 @@
+"""Generative invariant testing for the serving engine: random operation
+sequences (submit / cancel / step / clock-advance / preempt, under a drawn
+fault plan and a drawn speculative config) must keep the four-view page
+ownership audit (serve/audit.py) clean after EVERY operation, and every
+engine must drain to a fully-returned pool.
+
+This is the property layer on top of the scenario tests
+(test_serve_pressure.py, test_serve_spec.py): those pin specific
+interleavings; this one searches the interleaving space.  Requires
+``hypothesis`` (skipped when absent — CI installs it via
+requirements-test.txt).
+"""
+import jax
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.configs.base import smoke_config  # noqa: E402
+from repro.models.zoo import build_model  # noqa: E402
+from repro.serve import FaultPlan, Phase, Request, ServeEngine  # noqa: E402
+from repro.serve.audit import audit_engine  # noqa: E402
+
+BLOCK = 32
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = smoke_config("llama3-8b").with_(kv_bits=4, kv_block=BLOCK)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# one operation = (kind, payload); payloads are drawn small so sequences
+# stay inside max_seq=128 and a couple of engine cycles each
+_op = st.one_of(
+    st.tuples(st.just("submit"),
+              st.tuples(st.integers(5, 45),      # prompt length
+                        st.integers(2, 12),      # max_new_tokens
+                        st.sampled_from([None, 3.0, 50.0]))),  # deadline_s
+    st.tuples(st.just("cancel"), st.integers(0, 7)),   # uid (may not exist)
+    st.tuples(st.just("step"), st.just(None)),
+    st.tuples(st.just("tick"), st.floats(0.5, 4.0)),   # advance fake clock
+    st.tuples(st.just("preempt"), st.just(None)),      # forced victim pick
+)
+
+
+@settings(max_examples=12, deadline=None,
+          suppress_health_check=list(HealthCheck))
+@given(
+    ops=st.lists(_op, min_size=3, max_size=10),
+    spec_k=st.sampled_from([1, 2, 3]),
+    fault_seed=st.integers(0, 2**16),
+    alloc_fail=st.sampled_from([0.0, 0.3]),
+    n_pages=st.sampled_from([None, 2 + 3]),
+)
+def test_random_op_sequences_keep_audit_clean(small_model, ops, spec_k,
+                                              fault_seed, alloc_fail,
+                                              n_pages):
+    cfg, model, params = small_model
+    now = [0.0]
+    plan = (FaultPlan(seed=fault_seed, alloc_fail=alloc_fail,
+                      forced_preempt=0.1)
+            if alloc_fail else None)
+    engine = ServeEngine(
+        model, params, slots=2, max_seq=128, spec_k=spec_k,
+        n_pages=n_pages, faults=plan, clock=lambda: now[0],
+        reserve_policy="expected" if n_pages else "worst_case",
+        expected_quantile=0.0,
+    )
+    rng = np.random.default_rng(fault_seed)
+    submitted = {}
+    uid = 0
+    for kind, payload in ops:
+        if kind == "submit":
+            plen, max_new, ttl = payload
+            req = Request(
+                uid=uid,
+                prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+                max_new_tokens=max_new, deadline_s=ttl,
+            )
+            submitted[uid] = req
+            engine.submit(req)
+            uid += 1
+        elif kind == "cancel":
+            engine.cancel(payload)  # unknown uids must be a clean no-op
+        elif kind == "step":
+            engine.step()
+        elif kind == "tick":
+            now[0] += payload
+        elif kind == "preempt":
+            victim = engine._pick_victim()
+            if victim is not None:
+                engine._preempt(victim)
+        audit_engine(engine).raise_if_violations()
+
+    engine.run()
+    audit_engine(engine).raise_if_violations()
+    # drain invariants: pool fully returned, reservations zero, and every
+    # submitted request reached a terminal phase
+    assert engine.pool.n_free == engine.pool.capacity
+    assert engine.pool.reserved == 0
+    assert not engine._deferred
+    for req in submitted.values():
+        assert req.finished, (req.uid, req.phase)
+    s = engine.stats
+    assert s["spec_draft_tokens"] == (
+        s["spec_accepted_tokens"] + s["spec_rejected_tokens"]
+    )

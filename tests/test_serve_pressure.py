@@ -533,3 +533,133 @@ def test_audit_clean_on_live_engine_every_cycle(small_model):
     stats = engine.run()  # raises AuditError on any violation
     assert all(r.done for r in reqs)
     assert stats["audits"] >= stats["steps"]
+
+
+# --------------------------------------------------------------------------
+# Lifecycle edges: cancellation mid-admission, colliding retirement causes
+# --------------------------------------------------------------------------
+
+def test_cancel_while_waiting_and_mid_prefill(small_model):
+    """cancel() must clean up a request at every pre-decode stage: still
+    WAITING in the queue, and already admitted to a slot (phase PREFILL,
+    pages reserved) but not yet prefilled/adopted."""
+    cfg, model, params = small_model
+    engine = ServeEngine(model, params, slots=1, max_seq=128)
+    rng = np.random.default_rng(13)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab, 40).astype(np.int32),
+                    max_new_tokens=6) for i in range(3)]
+    for r in reqs:
+        engine.submit(r)
+    # drive admission without the rest of the cycle: uid 0 lands in the
+    # slot in phase PREFILL, uid 1/2 stay WAITING
+    engine.sched.admit()
+    assert reqs[0].phase == Phase.PREFILL
+    assert reqs[1].phase == Phase.WAITING
+
+    got = engine.cancel(1)  # WAITING: dequeue + retire, no resources held
+    assert got is reqs[1] and got.phase == Phase.CANCELLED
+    assert not got.pages and got.reserved_pages == 0
+
+    got = engine.cancel(0)  # mid-PREFILL: slot + reservation must return
+    assert got is reqs[0] and got.phase == Phase.CANCELLED
+    assert engine.pool.owner_reserved(0) == 0
+    assert 0 not in {r.uid for r in engine.sched.active.values()}
+    audit_engine(engine).raise_if_violations()
+
+    engine.run()  # uid 2 proceeds through the freed slot
+    assert reqs[2].done and len(reqs[2].out_tokens) == 6
+    assert engine.stats["cancelled"] == 2
+    assert engine.pool.n_free == engine.pool.capacity
+    assert engine.pool.reserved == 0
+    assert audit_engine(engine).ok
+
+
+def test_deadline_expiry_same_cycle_as_forced_preempt(small_model):
+    """A deadline that lapses on the very cycle a forced-preempt fault
+    fires: expiry runs first (the request retires EXPIRED, never preempted),
+    the preemption then picks its victim among the survivors, and the run
+    still drains clean with every survivor completing."""
+    cfg, model, params = small_model
+    now = [0.0]
+    # forced_preempt is consulted once per cycle from cycle 1, so the
+    # 0-based consultation index 3 is cycle 4 — the expiry cycle below
+    plan = FaultPlan(seed=17, fire_at={"forced_preempt": (3,)},
+                     max_fires={"forced_preempt": 1})
+    engine = ServeEngine(model, params, slots=2, max_seq=128,
+                         faults=plan, audit_every=1, clock=lambda: now[0])
+    rng = np.random.default_rng(17)
+    mk = lambda uid, ttl: Request(
+        uid=uid, prompt=rng.integers(0, cfg.vocab, 40).astype(np.int32),
+        max_new_tokens=12, deadline_s=ttl)
+    doomed, survivor_a, survivor_b = mk(0, 5.0), mk(1, None), mk(2, None)
+    for r in (doomed, survivor_a, survivor_b):
+        engine.submit(r)
+    for _ in range(3):
+        engine.step()
+    assert doomed.phase == Phase.DECODE
+    now[0] = 10.0  # doomed's TTL lapses; cycle 4 also fires forced_preempt
+    engine.run()
+    assert doomed.phase == Phase.EXPIRED
+    assert doomed.preemptions == 0  # expiry won the cycle, preempt skipped it
+    assert plan.fired("forced_preempt") == 1
+    assert engine.stats["expired"] == 1
+    assert survivor_a.done and survivor_b.done
+    assert engine.pool.n_free == engine.pool.capacity
+    assert audit_engine(engine).ok
+
+
+def test_poison_fault_on_retirement_cycle(small_model):
+    """The fault fires on the exact cycle the request would retire DONE at
+    its token budget: the poisoned-step check precedes the budget check, so
+    the request retires ERRORED (not DONE), counts in ``errored`` only, and
+    still records the token that produced the poisoned row."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(19)
+    req = Request(uid=0,
+                  prompt=rng.integers(0, cfg.vocab, 40).astype(np.int32),
+                  max_new_tokens=4)
+    # cycle 1 = admit + first decoded token; the budget's 4th token lands
+    # on cycle 4 = the site's 4th consultation (0-based index 3)
+    plan = FaultPlan(seed=23, fire_at={"poison_logits": (3,)},
+                     max_fires={"poison_logits": 1})
+    engine = ServeEngine(model, params, slots=1, max_seq=128,
+                         faults=plan, audit_every=1)
+    engine.submit(req)
+    engine.run()
+    assert plan.fired("poison_logits") == 1
+    assert req.phase == Phase.ERRORED
+    assert "non-finite logits" in req.error
+    assert len(req.out_tokens) == 4  # the poisoned cycle's token is kept
+    assert engine.stats["errored"] == 1
+    assert engine.stats["budget_retired"] == 0  # ERRORED, not budget DONE
+    assert engine.pool.n_free == engine.pool.capacity
+    assert audit_engine(engine).ok
+
+
+def test_identically_seeded_runs_are_deterministic(small_model):
+    """Two engines built from the same params, workload seed, and FaultPlan
+    seed must produce identical token streams, fault logs, and summaries
+    (timing fields excluded — everything counted must replay exactly)."""
+    cfg, model, params = small_model
+
+    def one_run():
+        plan = FaultPlan(seed=31, alloc_fail=0.2, forced_preempt=0.1)
+        engine = ServeEngine(model, params, slots=2, max_seq=128,
+                             n_pages=2 + 4, reserve_policy="expected",
+                             expected_quantile=0.25, faults=plan,
+                             audit_every=1)
+        reqs = _workload(cfg)
+        for r in reqs:
+            engine.submit(r)
+        summary = engine.run()
+        return plan, reqs, summary
+
+    plan1, reqs1, sum1 = one_run()
+    plan2, reqs2, sum2 = one_run()
+    assert plan1.log == plan2.log
+    assert [r.out_tokens for r in reqs1] == [r.out_tokens for r in reqs2]
+    assert [r.phase for r in reqs1] == [r.phase for r in reqs2]
+    timing = {"wall_s", "tokens_per_s", "latency_p50_ms", "latency_p99_ms"}
+    strip = lambda s: {k: v for k, v in s.items() if k not in timing}
+    assert strip(sum1) == strip(sum2)
