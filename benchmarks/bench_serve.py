@@ -29,6 +29,14 @@ Five sweeps, all appending to BENCH_serve.json so future PRs track them:
   rate, tokens per cycle, end-to-end speedup, and a bitwise-parity check
   of every output stream.
 
+Telemetry (docs/OBSERVABILITY.md): every offered-load cell reports TTFT and
+TPOT percentiles (split latency series — queueing shows up in TTFT, steady
+decode in TPOT) and the host-stall fraction (share of each cycle NOT spent
+waiting on the device).  ``--phase-breakdown`` adds the per-phase seconds
+(schedule / prefill / decode_dispatch / device_wait / advance) to each
+record; ``--trace-out PATH`` traces the first cell and writes a Chrome
+``trace_event`` JSON openable in Perfetto.
+
 CPU smoke scale by default; the same sweeps run unchanged on TPU.
 """
 from __future__ import annotations
@@ -76,20 +84,27 @@ def _make_requests(n, mix, max_new, vocab, rate_rps, rng):
 
 def run_serve_sweep(*, n_requests=8, max_new=8, slots=4, max_seq=256,
                     rates=(2.0, 16.0), out_path: Path | None = None,
-                    time_scale=1.0):
+                    time_scale=1.0, phase_breakdown=False,
+                    trace_out: Path | None = None):
     """Offered-load sweep: rate (requests/s on the virtual clock) x prompt
     mix.  ``time_scale`` stretches the virtual clock (CPU cycles are slow;
-    scale keeps arrival dynamics interesting at smoke sizes)."""
+    scale keeps arrival dynamics interesting at smoke sizes).
+    ``phase_breakdown`` adds per-phase seconds to every record;
+    ``trace_out`` traces the first cell into a Chrome trace_event JSON."""
     cfg = smoke_config("llama3-8b").with_(kv_bits=4, kv_block=32)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     records = []
+    first_cell = True
     for mix_name, mix in _MIXES:
         for rate in rates:
             # deterministic per-cell seed (str hash is salted per process)
             rng = np.random.default_rng(zlib.crc32(f"{mix_name}:{rate}".encode()))
             reqs = _make_requests(n_requests, mix, max_new, cfg.vocab, rate, rng)
-            engine = ServeEngine(model, params, slots=slots, max_seq=max_seq)
+            trace_cell = trace_out is not None and first_cell
+            first_cell = False
+            engine = ServeEngine(model, params, slots=slots, max_seq=max_seq,
+                                 trace=trace_cell)
             pending = sorted(reqs, key=lambda r: r.arrival_s)
             import time as _time
 
@@ -122,12 +137,29 @@ def run_serve_sweep(*, n_requests=8, max_new=8, slots=4, max_seq=256,
                 "backpressure_events": stats["sched_backpressure_events"],
                 "occupancy_mean": round(stats["occupancy_mean"], 4),
                 "occupancy_max": round(stats["occupancy_max"], 4),
+                "ttft_p50_ms": round(stats["ttft_p50_ms"], 2),
+                "ttft_p99_ms": round(stats["ttft_p99_ms"], 2),
+                "tpot_p50_ms": round(stats["tpot_p50_ms"], 3),
+                "tpot_p99_ms": round(stats["tpot_p99_ms"], 3),
+                "queue_wait_p50_ms": round(stats["queue_wait_p50_ms"], 2),
+                "host_stall_fraction": round(stats["host_stall_fraction"], 4),
             }
+            if phase_breakdown:
+                rec["phase_s"] = {
+                    k: round(v, 5) for k, v in stats["phase_s"].items()
+                }
+            if trace_cell:
+                engine.tracer.write_chrome(Path(trace_out))
+                print(f"[bench_serve] trace ({mix_name} @ {rate:g} rps) -> "
+                      f"{trace_out}")
             records.append(rec)
             emit(
                 f"serve.{mix_name}.rps{rate:g}", stats["latency_p50_ms"] * 1e3,
                 f"tok/s={rec['tokens_per_s']};p99_ms={rec['latency_p99_ms']}"
-                f";occ_max={rec['occupancy_max']};prefills={rec['prefill_calls']}",
+                f";occ_max={rec['occupancy_max']};prefills={rec['prefill_calls']}"
+                f";ttft_p50_ms={rec['ttft_p50_ms']}"
+                f";tpot_p50_ms={rec['tpot_p50_ms']}"
+                f";host_stall={rec['host_stall_fraction']}",
             )
     out_path = _BENCH_SERVE if out_path is None else out_path
     _append(out_path, {"backend": jax.default_backend(), "records": records})
@@ -477,7 +509,7 @@ def run_spec_decode_sweep(*, spec_ks=(2, 4), spec_bits=(2, 4), n_requests=6,
 
 
 def run():
-    run_serve_sweep()
+    run_serve_sweep(phase_breakdown=True)
     run_shared_prefix_sweep()
     run_family_sweep()
     run_oversubscribe_sweep()
@@ -500,6 +532,13 @@ if __name__ == "__main__":
     ap.add_argument("--spec-decode", action="store_true",
                     help="run only the self-speculative decoding sweep "
                          "(spec_k x spec_bits vs the sequential baseline)")
+    ap.add_argument("--phase-breakdown", action="store_true",
+                    help="add per-phase seconds (schedule/prefill/"
+                         "decode_dispatch/device_wait/advance) to every "
+                         "offered-load record (docs/OBSERVABILITY.md)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="trace the first offered-load cell and write a "
+                         "Chrome trace_event JSON (open in Perfetto)")
     args = ap.parse_args()
     if args.shared_prefix:
         run_shared_prefix_sweep()
@@ -511,5 +550,10 @@ if __name__ == "__main__":
         run_family_sweep(
             families=tuple(args.family) if args.family else
             ("attn", "mla", "hybrid"))
+    elif args.phase_breakdown or args.trace_out:
+        run_serve_sweep(
+            phase_breakdown=args.phase_breakdown,
+            trace_out=Path(args.trace_out) if args.trace_out else None,
+        )
     else:
         run()

@@ -13,8 +13,13 @@ Checks:
   of ``ServeEngine.__init__``;
 * docs/SERVING.md's counter table rows appear as string literals in the
   serving sources (engine.py / scheduler.py / pages.py / audit.py /
-  faults.py / speculative.py), modulo the ``sched_`` prefix the engine
-  adds when folding scheduler stats into ``summary()``.
+  faults.py / speculative.py / telemetry.py), modulo the ``sched_``
+  prefix the engine adds when folding scheduler stats into ``summary()``;
+* docs/OBSERVABILITY.md exists, its backticked ``repro.*`` symbols
+  resolve, and every row of its "Metric catalog" and "Event schema"
+  tables appears as a string literal in the serving sources — the metric
+  and event names a dashboard or trace viewer would key on cannot drift
+  from what the code actually emits.
 
 Run directly (exit 1 on drift) or via tests/test_docs.py in the tier-1
 suite.
@@ -30,6 +35,7 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 README = REPO / "README.md"
 SERVING = REPO / "docs" / "SERVING.md"
+OBSERVABILITY = REPO / "docs" / "OBSERVABILITY.md"
 ARCHITECTURE = REPO / "docs" / "ARCHITECTURE.md"
 KERNELS = REPO / "src" / "repro" / "kernels"
 SERVE_SRC = REPO / "src" / "repro" / "serve"
@@ -127,19 +133,60 @@ def check_serving(text: str) -> list[str]:
     for flag in sorted(flags - params):
         errors.append(f"docs/SERVING.md documents engine flag `{flag}` but "
                       "ServeEngine.__init__ has no such parameter")
-    serve_src = "".join(
-        (SERVE_SRC / f).read_text()
-        for f in ("engine.py", "scheduler.py", "pages.py", "audit.py",
-                  "faults.py", "speculative.py")
-    )
     counters = table_rows(text, "counters")
     if not counters:
         errors.append("docs/SERVING.md has no counter table rows")
-    for c in sorted(counters):
-        bare = c.removeprefix("sched_")
-        if c not in serve_src and bare not in serve_src:
-            errors.append(f"docs/SERVING.md documents counter `{c}` which "
-                          "appears nowhere in the serving sources")
+    errors.extend(_check_names_in_sources(
+        counters, "docs/SERVING.md", "counter"))
+    return errors
+
+
+def _serve_sources() -> str:
+    return "".join(
+        (SERVE_SRC / f).read_text()
+        for f in ("engine.py", "scheduler.py", "pages.py", "audit.py",
+                  "faults.py", "speculative.py", "telemetry.py")
+    )
+
+
+def _check_names_in_sources(names: set[str], doc: str, what: str) -> list[str]:
+    """Each documented name must appear as a string literal somewhere in
+    the serving sources (``sched_``-prefixed registry names may appear
+    bare — the scheduler constructs the prefix)."""
+    src = _serve_sources()
+    return [
+        f"{doc} documents {what} `{n}` which appears nowhere in the "
+        "serving sources"
+        for n in sorted(names)
+        if n not in src and n.removeprefix("sched_") not in src
+    ]
+
+
+def check_observability(text: str) -> list[str]:
+    """Drift errors for docs/OBSERVABILITY.md: symbols resolve, and the
+    metric-catalog / event-schema rows name things the code emits."""
+    errors = check_symbols(text, "docs/OBSERVABILITY.md")
+    metrics = table_rows(text, "Metric catalog")
+    if not metrics:
+        errors.append("docs/OBSERVABILITY.md has no 'Metric catalog' rows")
+    errors.extend(_check_names_in_sources(
+        metrics, "docs/OBSERVABILITY.md", "metric"))
+    events = table_rows(text, "Event schema")
+    if not events:
+        errors.append("docs/OBSERVABILITY.md has no 'Event schema' rows")
+    errors.extend(_check_names_in_sources(
+        events, "docs/OBSERVABILITY.md", "event"))
+    # the engine's registered metric names must all be documented: the
+    # catalog is the dashboard contract, so an undocumented instrument is
+    # drift in the other direction
+    from repro.serve.engine import PHASE_METRICS, STAT_COUNTERS
+
+    expected = set(STAT_COUNTERS) | set(PHASE_METRICS.values())
+    for name in sorted(expected - metrics):
+        errors.append(
+            f"engine metric `{name}` is missing from docs/OBSERVABILITY.md's "
+            "'Metric catalog'"
+        )
     return errors
 
 
@@ -166,6 +213,10 @@ def check() -> list[str]:
         errors.append("missing docs/SERVING.md")
     else:
         errors.extend(check_serving(SERVING.read_text()))
+    if not OBSERVABILITY.exists():
+        errors.append("missing docs/OBSERVABILITY.md")
+    else:
+        errors.extend(check_observability(OBSERVABILITY.read_text()))
     if not ARCHITECTURE.exists():
         errors.append("missing docs/ARCHITECTURE.md")
     else:
@@ -183,7 +234,8 @@ def main() -> int:
         print(
             f"check_docs: OK ({len(kernel_dirs())} kernel families, "
             f"{len(serving_symbols(SERVING.read_text()))} serving symbols, "
-            "engine flags + counters in sync)"
+            f"{len(table_rows(OBSERVABILITY.read_text(), 'Metric catalog'))} "
+            "catalogued metrics; engine flags + counters + events in sync)"
         )
     return 1 if errors else 0
 

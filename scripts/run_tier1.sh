@@ -3,7 +3,8 @@
 #   scripts/run_tier1.sh [extra pytest args]
 # Runs the full test suite (PYTHONPATH=src, fail-fast, quiet) followed by the
 # docs-drift check (README kernel inventory + SERVING/ARCHITECTURE symbol/
-# flag/counter sync) and the named serve-pressure gate.  The suite includes
+# flag/counter sync + the OBSERVABILITY metric-catalog/event-schema sync)
+# and the named serve-pressure / serve-telemetry gates.  The suite includes
 # the serving gates:
 # tests/test_serve_paged.py (paged engine + exact-length shim),
 # tests/test_serve_prefix.py (prefix sharing + COW parity),
@@ -12,14 +13,18 @@
 # tests/test_serve_pressure.py (preemption-by-rematerialization parity,
 # lifecycle guards, pool-invariant auditor, deterministic fault injection),
 # tests/test_serve_spec.py (self-speculative decoding bitwise parity across
-# families/bits/pressure, docs/SERVING.md §11), and
+# families/bits/pressure, docs/SERVING.md §11),
+# tests/test_serve_telemetry.py (metrics registry, event tracer,
+# phase-timing breakdown, telemetry-on/off bitwise parity,
+# docs/OBSERVABILITY.md), and
 # tests/test_serve_invariants.py (generative random-op audit sweep;
 # hypothesis-gated) — plus the shared_kv paged kernel grid in
 # tests/test_kernels_paged.py.
 # CI (.github/workflows/ci.yml) calls exactly this script, so local and CI
 # runs cannot diverge.
 #
-#   scripts/run_tier1.sh --serve-pressure   # run only the pressure gate
+#   scripts/run_tier1.sh --serve-pressure    # run only the pressure gate
+#   scripts/run_tier1.sh --serve-telemetry   # run only the telemetry gate
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
@@ -30,6 +35,14 @@ if [[ "${1:-}" == "--serve-pressure" ]]; then
     echo "[tier1] serve-pressure gate (preemption parity, faults, auditor)"
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m pytest -x -q tests/test_serve_pressure.py "$@"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--serve-telemetry" ]]; then
+    shift
+    echo "[tier1] serve-telemetry gate (tracer schema, phase timing, on/off parity)"
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m pytest -x -q tests/test_serve_telemetry.py "$@"
     exit 0
 fi
 

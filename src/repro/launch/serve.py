@@ -26,10 +26,19 @@ pool/page-table/prefix-index invariants every N cycles.  ``--spec-k K``
 same committed pools at ``--spec-bits`` precision and a single batched
 full-fidelity pass verifies them, keeping the output stream bitwise equal
 to sequential decode (docs/SERVING.md §11).
+
+Telemetry (docs/OBSERVABILITY.md): ``--trace-out trace.json`` records every
+request lifecycle span and engine phase slice and writes a Chrome
+``trace_event`` file (open in Perfetto / chrome://tracing) plus a
+``.jsonl`` sibling with the raw events.  ``--metrics-every N`` prints the
+Prometheus text exposition of the metrics registry every N cycles.  The
+summary line always includes TTFT/TPOT percentiles and the host-stall
+fraction (share of each decode cycle NOT spent waiting on the device).
 """
 from __future__ import annotations
 
 import argparse
+import pathlib
 
 import jax
 import numpy as np
@@ -100,6 +109,13 @@ def main():
     ap.add_argument("--strict", action="store_true",
                     help="raise on unadmittable submissions instead of "
                          "retiring them as REJECTED")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace_event JSON here (open in "
+                         "Perfetto) plus a .jsonl sibling with the raw "
+                         "structured events (docs/OBSERVABILITY.md)")
+    ap.add_argument("--metrics-every", type=int, default=0, metavar="N",
+                    help="print the Prometheus text exposition of the "
+                         "metrics registry every N engine cycles (0 off)")
     args = ap.parse_args()
     if args.arch is None:
         if args.family is None:
@@ -119,6 +135,8 @@ def main():
         preempt_policy=args.preempt_policy,
         audit_every=args.audit_every, strict=args.strict,
         spec_k=args.spec_k, spec_bits=args.spec_bits,
+        trace=args.trace_out is not None,
+        metrics_every=args.metrics_every,
     )
     print(f"[serve] engine mode: {'paged' if engine.paged else 'exact-length shim'}"
           + (f", pool={engine.n_pages} pages "
@@ -147,6 +165,24 @@ def main():
         ))
     stats = engine.run()
     print(f"[serve] {stats}")
+    phase = stats.get("phase_s", {})
+    cyc = phase.get("cycle", 0.0)
+    print(
+        "[serve] latency: "
+        f"ttft_p50={stats['ttft_p50_ms']:.2f}ms"
+        f" ttft_p99={stats['ttft_p99_ms']:.2f}ms"
+        f" tpot_p50={stats['tpot_p50_ms']:.3f}ms"
+        f" tpot_p99={stats['tpot_p99_ms']:.3f}ms"
+        f" queue_wait_p50={stats['queue_wait_p50_ms']:.2f}ms"
+    )
+    breakdown = " ".join(
+        f"{k}={v:.3f}s({v / cyc:.0%})" if cyc > 0 else f"{k}={v:.3f}s"
+        for k, v in sorted(phase.items()) if k != "cycle"
+    )
+    print(
+        f"[serve] phases: cycle={cyc:.3f}s {breakdown} "
+        f"host_stall={stats['host_stall_fraction']:.1%}"
+    )
     if stats.get("preempted"):
         print(
             f"[serve] pressure: preempted={stats['preempted']}"
@@ -165,6 +201,15 @@ def main():
             f"[serve] prefix sharing: hit_rate={stats['prefix_hit_rate']:.3f}"
             f" prefill_tokens_saved={stats['prefill_tokens_saved']}"
             f" cow_copies={stats['cow_copies']}"
+        )
+    if args.trace_out is not None:
+        out = pathlib.Path(args.trace_out)
+        engine.tracer.write_chrome(out)
+        jsonl = out.with_suffix(".jsonl")
+        engine.tracer.write_jsonl(jsonl)
+        print(
+            f"[serve] trace: {len(engine.tracer.events)} events -> {out} "
+            f"(Chrome trace_event; open in Perfetto), raw -> {jsonl}"
         )
 
 

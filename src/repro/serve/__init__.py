@@ -1,9 +1,18 @@
 """Serving subsystem: continuous-batching scheduler, page-pool allocator,
-the paged-first ServeEngine, and its pressure/self-checking layer (invariant
-auditor, deterministic fault injection).  See docs/ARCHITECTURE.md §7 and
-docs/SERVING.md §10."""
+the paged-first ServeEngine, its pressure/self-checking layer (invariant
+auditor, deterministic fault injection), and the telemetry layer (metrics
+registry, structured event tracer).  See docs/ARCHITECTURE.md §7,
+docs/SERVING.md §10, and docs/OBSERVABILITY.md."""
 from repro.serve.audit import AuditError, AuditReport, audit_engine  # noqa: F401
-from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    TIMING_SUMMARY_KEYS,
+    ServeEngine,
+)
 from repro.serve.faults import FaultPlan  # noqa: F401
 from repro.serve.pages import PagePool  # noqa: F401
 from repro.serve.scheduler import Phase, Request, Scheduler  # noqa: F401
+from repro.serve.telemetry import (  # noqa: F401
+    MetricsRegistry,
+    Tracer,
+    validate_events,
+)

@@ -247,7 +247,46 @@ def audit_engine(engine) -> AuditReport:
                 )
 
     _audit_spec(engine, out)
+    _audit_telemetry(engine, out)
     return report
+
+
+def _audit_telemetry(engine, out: list) -> None:
+    """Telemetry consistency (docs/OBSERVABILITY.md).
+
+    * lifecycle counters are non-negative (the registry enforces monotone
+      counters, so a negative here means the view layer drifted);
+    * with a tracer attached, span discipline holds: every live request has
+      exactly one open lifecycle span (``queue`` while waiting, ``prefill``
+      or ``decode`` while active) and no span stays open for a uid that has
+      already retired.
+    """
+    stats = getattr(engine, "stats", {})
+    for name, value in stats.items():
+        if isinstance(value, (int, float)) and value < 0:
+            out.append(f"negative lifecycle counter {name}={value}")
+    tracer = getattr(engine, "tracer", None)
+    sched = getattr(engine, "sched", None)
+    if tracer is None or sched is None:
+        return
+    live = {r.uid for r in sched.active.values()}
+    live |= {r.uid for r in sched.waiting}
+    open_by_uid: dict = {}
+    for cat, name, uid in tracer.open_spans():
+        if cat == "request" and uid is not None:
+            open_by_uid.setdefault(uid, []).append(name)
+    for uid, names in open_by_uid.items():
+        if uid not in live:
+            out.append(
+                f"tracer span(s) {names} still open for retired request {uid}"
+            )
+        elif len(names) > 1:
+            out.append(
+                f"request {uid} holds {len(names)} lifecycle spans open "
+                f"simultaneously: {names}"
+            )
+    for uid in sorted(live - set(open_by_uid)):
+        out.append(f"live request {uid} has no open lifecycle span")
 
 
 def _audit_spec(engine, out: list) -> None:

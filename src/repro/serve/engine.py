@@ -80,6 +80,21 @@ that request ERRORED — the engine loop and every other slot continue.
 tables vs prefix index vs per-request page lists every N cycles
 (`repro.serve.audit`); ``faults=FaultPlan(...)`` injects deterministic
 failures at the named sites (`repro.serve.faults`) for chaos tests.
+
+**Telemetry** (docs/OBSERVABILITY.md, `repro.serve.telemetry`): every
+lifecycle counter lives in a shared :class:`MetricsRegistry` (the ``stats``
+property keeps the historical dict view), each cycle is decomposed into
+timed phases — ``schedule``, ``prefill``, ``decode_dispatch``,
+``device_wait`` (an explicit ``jax.block_until_ready`` boundary), and
+``advance`` — feeding per-phase histograms plus the derived
+``host_stall_fraction`` / ``device_idle_gap_s`` metrics, and token
+latencies split into TTFT (submission → first token, queue wait included)
+and TPOT (inter-token) series.  ``trace=True`` additionally records a
+structured event log (request lifecycle spans, COW / preemption /
+speculative / audit / fault instants, per-phase complete events) that
+exports as JSONL or Chrome ``trace_event`` JSON for Perfetto.  All of it is
+host-side observation only — enabling telemetry never changes a computed
+token (the bitwise-parity suites run with tracing on).
 """
 from __future__ import annotations
 
@@ -101,10 +116,72 @@ from repro.serve.scheduler import (  # noqa: F401 (Phase/Request re-exported)
     Scheduler,
     bucket_for,
 )
+from repro.serve.telemetry import MetricsRegistry, Tracer
+
+#: cycle phases in execution order -> the registry histogram each feeds
+#: (explicit literals so docs/OBSERVABILITY.md's metric catalog can be
+#: drift-checked against the source — scripts/check_docs.py)
+PHASE_METRICS = {
+    "schedule": "phase_schedule_s",
+    "prefill": "phase_prefill_s",
+    "decode_dispatch": "phase_decode_dispatch_s",
+    "device_wait": "phase_device_wait_s",
+    "advance": "phase_advance_s",
+}
+
+#: timing-derived ``summary()`` keys — everything a determinism comparison
+#: must strip before asserting two runs equal (tests/test_serve_pressure.py)
+TIMING_SUMMARY_KEYS = frozenset({
+    "wall_s", "tokens_per_s", "latency_p50_ms", "latency_p99_ms",
+    "ttft_p50_ms", "ttft_p99_ms", "tpot_p50_ms", "tpot_p99_ms",
+    "queue_wait_p50_ms", "queue_wait_p99_ms", "e2e_p50_ms", "e2e_p99_ms",
+    "host_stall_fraction", "phase_s",
+})
+
+#: the engine's lifecycle counters (one registry entry each; the ``stats``
+#: property and ``summary()`` expose exactly these, preserving the
+#: pre-registry dict interface)
+STAT_COUNTERS = (
+    "decoded_tokens", "steps", "prefill_calls", "splitkv_steps",
+    "prefill_tokens", "prefill_tokens_saved", "cow_copies",
+    # retirement breakdown (each request counts in at most one):
+    # budget_retired = hit max_new_tokens without EOS
+    "budget_retired", "preempted", "preempt_remat_tokens",
+    "expired", "cancelled", "errored", "audits", "faults_injected",
+    # self-speculative decoding (docs/SERVING.md §11)
+    "spec_cycles", "spec_draft_tokens",
+    "spec_accepted_tokens", "spec_rejected_tokens",
+)
 
 
 def _percentile(xs: list[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+class _PhaseTimer:
+    """Accumulating timer for one named cycle phase: elapsed wall time adds
+    into the engine's per-cycle accumulator (several with-blocks of the same
+    phase within a cycle sum), and with tracing on, each block additionally
+    emits one Chrome complete event on the engine track."""
+
+    __slots__ = ("engine", "name", "t0")
+
+    def __init__(self, engine, name: str):
+        self.engine = engine
+        self.name = name
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        dt = time.perf_counter() - self.t0
+        acc = self.engine._phase_acc
+        acc[self.name] = acc.get(self.name, 0.0) + dt
+        tracer = self.engine.tracer
+        if tracer is not None:
+            tracer.complete(self.name, t0=self.t0, dur_s=dt, cat="engine")
+        return False
 
 
 class ServeEngine:
@@ -119,7 +196,10 @@ class ServeEngine:
                  preempt_policy: str = "youngest", audit_every: int = 0,
                  faults=None, strict: bool = False,
                  guard_logits: bool = True, clock=None,
-                 spec_k: int = 1, spec_bits: int | None = None):
+                 spec_k: int = 1, spec_bits: int | None = None,
+                 trace: bool | Tracer = False,
+                 metrics: MetricsRegistry | None = None,
+                 metrics_every: int = 0, metrics_sink=None):
         """``paged=None`` follows the model's ``paged_spec()`` (paged when it
         declares a paged family); ``paged=False`` forces the exact-length
         shim for any token-prefill model (debug/baseline path); ``paged=True``
@@ -156,7 +236,18 @@ class ServeEngine:
         acceptance is exact token equality and the output stream is bitwise
         identical to ``spec_k = 1``).  ``spec_bits`` defaults to
         ``min(2, kv_bits)``.  Speculative cycles never route through the
-        cross-chip split-KV step (the per-cycle heuristic stays off)."""
+        cross-chip split-KV step (the per-cycle heuristic stays off).
+
+        Telemetry (docs/OBSERVABILITY.md): ``trace=True`` (or an existing
+        `repro.serve.telemetry.Tracer`) records the structured event log —
+        request lifecycle spans, COW/preempt/spec/audit/fault instants,
+        per-phase complete events — exportable as JSONL or Chrome trace
+        JSON; tracing off costs nothing (every call site is guarded).
+        ``metrics`` shares an external
+        `repro.serve.telemetry.MetricsRegistry` (default: a private one);
+        ``metrics_every=N`` emits a snapshot every N cycles to
+        ``metrics_sink`` (a callable receiving the snapshot dict; default
+        prints the Prometheus text exposition)."""
         self.model = model
         self.params = params
         self.slots = slots
@@ -173,6 +264,37 @@ class ServeEngine:
         self.guard_logits = guard_logits
         self.clock = clock if clock is not None else time.monotonic
         self._cycle = 0
+
+        # --- telemetry (docs/OBSERVABILITY.md) ---------------------------
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = (
+            trace if isinstance(trace, Tracer)
+            else (Tracer() if trace else None)
+        )
+        self.metrics_every = int(metrics_every)
+        self.metrics_sink = metrics_sink
+        for name in STAT_COUNTERS:
+            self.metrics.counter(name)
+        for hist in PHASE_METRICS.values():
+            self.metrics.histogram(hist)
+        self.metrics.histogram("cycle_s")
+        self.metrics.histogram("device_idle_gap_s")
+        self.metrics.histogram("ttft_s")
+        self.metrics.histogram("tpot_s")
+        self.metrics.histogram("queue_wait_s")
+        self.metrics.histogram("e2e_latency_s")
+        self._phase_acc: dict[str, float] = {}
+        self._cycle_worked = False
+        # explicit first-work -> last-work window: the honest wall_s
+        # fallback for callers driving step() themselves
+        self._work_t0: float | None = None
+        self._work_t1: float | None = None
+        self._ttft_s: list[float] = []
+        self._tpot_s: list[float] = []
+        self._queue_wait_s: list[float] = []
+        self._e2e_s: list[float] = []
+        if faults is not None and getattr(faults, "on_fire", None) is None:
+            faults.on_fire = self._on_fault
         # delayed-release fault parking lot: (ready_cycle, uid, pages)
         self._deferred: list[tuple[int, int, list[int]]] = []
         cfg = getattr(model, "cfg", None)
@@ -238,20 +360,6 @@ class ServeEngine:
             self._step_splitkv = jax.jit(_split_step)
 
         self.tokens = np.zeros((slots, 1), np.int32)
-        self.stats = {
-            "decoded_tokens": 0, "steps": 0,
-            "prefill_calls": 0, "splitkv_steps": 0,
-            "prefill_tokens": 0, "prefill_tokens_saved": 0, "cow_copies": 0,
-            # retirement breakdown (each request counts in at most one):
-            # budget_retired = hit max_new_tokens without EOS (the stat
-            # formerly overloaded as "evicted")
-            "budget_retired": 0, "preempted": 0, "preempt_remat_tokens": 0,
-            "expired": 0, "cancelled": 0, "errored": 0, "audits": 0,
-            # self-speculative decoding (docs/SERVING.md §11)
-            "spec_cycles": 0, "spec_draft_tokens": 0,
-            "spec_accepted_tokens": 0, "spec_rejected_tokens": 0,
-        }
-        self._token_latencies: list[float] = []
         self._occupancy: list[float] = []
 
         if self.paged:
@@ -289,7 +397,8 @@ class ServeEngine:
                 if getattr(pc, f) is not None
             ) // self.n_pages
             self.pool = pg.PagePool(
-                self.n_pages, n_scratch=slots, page_bytes=self.kv_page_bytes
+                self.n_pages, n_scratch=slots, page_bytes=self.kv_page_bytes,
+                metrics=self.metrics,
             )
             share = share_prefix and spec.supports_prior
             self.sched = Scheduler(
@@ -299,7 +408,7 @@ class ServeEngine:
                 exact_buckets=spec.exact_prefill,
                 reserve_policy=reserve_policy,
                 expected_quantile=expected_quantile,
-                strict=strict, clock=self.clock,
+                strict=strict, clock=self.clock, metrics=self.metrics,
                 namespace=(
                     f"{getattr(cfg, 'name', 'model')}/b{getattr(cfg, 'kv_bits', 4)}"
                     f"/n{self.block_n}/{getattr(cfg, 'kv_gran', 'channel')}"
@@ -343,7 +452,7 @@ class ServeEngine:
             self.sched = Scheduler(
                 slots=slots, pool=None, block_n=self.block_n, max_seq=max_seq,
                 share_prefix=False, spec_tail=False, exact_buckets=True,
-                strict=strict, clock=self.clock,
+                strict=strict, clock=self.clock, metrics=self.metrics,
             )
             self.state = model.init_decode_state(slots, max_seq)
             self._prefill = jax.jit(
@@ -352,10 +461,34 @@ class ServeEngine:
 
     # ------------------------------------------------------------ public
 
+    @property
+    def stats(self) -> dict:
+        """Lifecycle counters as a plain dict (the pre-telemetry ``stats``
+        interface, now a read-only view of the metrics registry)."""
+        return {k: int(self.metrics.value(k)) for k in STAT_COUNTERS}
+
+    def _phase(self, name: str) -> _PhaseTimer:
+        """Timer for one cycle phase (``with self._phase("schedule"): ...``)."""
+        return _PhaseTimer(self, name)
+
+    def _on_fault(self, site: str, cycle: int, uid) -> None:
+        """``FaultPlan.on_fire`` hook: count and trace every injected fault."""
+        self.metrics.inc("faults_injected")
+        if self.tracer is not None:
+            self.tracer.instant(
+                "fault", args={"site": site, "cycle": cycle, "uid": uid}
+            )
+
     def submit(self, req: Request) -> bool:
         """Queue ``req``; False when it was retired REJECTED at submission
         (``req.error`` names the reason; raises instead under ``strict``)."""
-        return self.sched.submit(req)
+        ok = self.sched.submit(req)
+        if self.tracer is not None:
+            if ok:
+                self.tracer.begin("queue", uid=req.uid, cat="request")
+            else:
+                self.tracer.instant("rejected", uid=req.uid, cat="request")
+        return ok
 
     def cancel(self, uid: int) -> Request | None:
         """Cancel a waiting or active request by uid; returns the retired
@@ -374,8 +507,13 @@ class ServeEngine:
 
     def audit(self):
         """Run the invariant auditor now (`repro.serve.audit.audit_engine`)."""
-        self.stats["audits"] += 1
-        return audit_engine(self)
+        self.metrics.inc("audits")
+        report = audit_engine(self)
+        if self.tracer is not None:
+            self.tracer.instant(
+                "audit", args={"violations": len(report.violations)}
+            )
+        return report
 
     def run(self, max_cycles: int = 10_000):
         t0 = time.perf_counter()
@@ -389,21 +527,58 @@ class ServeEngine:
 
     def summary(self, *, wall_s: float | None = None) -> dict:
         """Engine statistics; callers driving :meth:`step` themselves (the
-        offered-load bench) pass their own wall-clock window."""
+        offered-load bench) pass their own wall-clock window.  Every
+        timing-derived key is listed in `TIMING_SUMMARY_KEYS` so determinism
+        comparisons know exactly what to strip."""
         if wall_s is None:
-            wall_s = sum(self._token_latencies) / max(1, self.slots)
+            # explicit first-work -> last-work window (never fabricated from
+            # latency sums): an engine that did no decode work reports 0
+            if self._work_t0 is not None and self._work_t1 is not None:
+                wall_s = self._work_t1 - self._work_t0
+            else:
+                wall_s = 0.0
+        stats = self.stats
+        cycle_total = self.metrics.histogram("cycle_s").total
+        wait_total = self.metrics.histogram("phase_device_wait_s").total
+        # legacy latency_* keys alias TPOT (steady-state inter-token
+        # latency); they fall back to TTFT when every request emitted a
+        # single token and no inter-token gap was ever observed
+        lat = self._tpot_s if self._tpot_s else self._ttft_s
         out = {
-            **self.stats,
+            **stats,
             "wall_s": wall_s,
-            "tokens_per_s": self.stats["decoded_tokens"] / max(wall_s, 1e-9),
+            "tokens_per_s": (
+                stats["decoded_tokens"] / wall_s if wall_s > 0 else 0.0
+            ),
             **{f"sched_{k}": v for k, v in self.sched.stats.items()},
-            "latency_p50_ms": 1e3 * _percentile(self._token_latencies, 50),
-            "latency_p99_ms": 1e3 * _percentile(self._token_latencies, 99),
+            "latency_p50_ms": 1e3 * _percentile(lat, 50),
+            "latency_p99_ms": 1e3 * _percentile(lat, 99),
+            "ttft_p50_ms": 1e3 * _percentile(self._ttft_s, 50),
+            "ttft_p99_ms": 1e3 * _percentile(self._ttft_s, 99),
+            "tpot_p50_ms": 1e3 * _percentile(self._tpot_s, 50),
+            "tpot_p99_ms": 1e3 * _percentile(self._tpot_s, 99),
+            "queue_wait_p50_ms": 1e3 * _percentile(self._queue_wait_s, 50),
+            "queue_wait_p99_ms": 1e3 * _percentile(self._queue_wait_s, 99),
+            "e2e_p50_ms": 1e3 * _percentile(self._e2e_s, 50),
+            "e2e_p99_ms": 1e3 * _percentile(self._e2e_s, 99),
+            # fraction of cycle time the host was NOT waiting on the device
+            # — the async-runtime ROADMAP item exists to shrink this
+            "host_stall_fraction": (
+                1.0 - min(1.0, wait_total / cycle_total)
+                if cycle_total > 0 else 0.0
+            ),
+            "phase_s": {
+                **{
+                    name: self.metrics.histogram(h).total
+                    for name, h in PHASE_METRICS.items()
+                },
+                "cycle": cycle_total,
+            },
         }
         if self.spec_k > 1:
             out["spec_accept_rate"] = (
-                self.stats["spec_accepted_tokens"]
-                / max(1, self.stats["spec_draft_tokens"])
+                stats["spec_accepted_tokens"]
+                / max(1, stats["spec_draft_tokens"])
             )
         if self.paged:
             out.update(
@@ -434,13 +609,22 @@ class ServeEngine:
             return self._step_spec()
         t0 = time.perf_counter()
         self._cycle += 1
-        self._service_deferred()
-        self._expire()
-        if (self.paged and self.faults is not None
-                and self.faults.fires("forced_preempt", cycle=self._cycle)):
-            victim = self._pick_victim()
-            if victim is not None:
-                self._preempt(victim)
+        self._cycle_worked = False
+        try:
+            return self._step_once(t0)
+        finally:
+            self._finish_cycle(t0)
+
+    def _step_once(self, t0: float) -> bool:
+        with self._phase("schedule"):
+            self._service_deferred()
+            self._expire()
+            if (self.paged and self.faults is not None
+                    and self.faults.fires(
+                        "forced_preempt", cycle=self._cycle)):
+                victim = self._pick_victim()
+                if victim is not None:
+                    self._preempt(victim)
         if self.paged:
             self._admit_and_prefill()
         else:
@@ -448,48 +632,91 @@ class ServeEngine:
         if not self.sched.active:
             return False
         if self.paged:
-            self._ensure_flush_pages()
+            with self._phase("schedule"):
+                self._ensure_flush_pages()
+                if self.sched.active and self._table_dirty:
+                    self.state["caches"] = pg.set_page_tables(
+                        self.state["caches"], self._table
+                    )
+                    self._table_dirty = False
             if not self.sched.active:  # everyone self-preempted under faults
                 return False
-            if self._table_dirty:
-                self.state["caches"] = pg.set_page_tables(
-                    self.state["caches"], self._table
-                )
-                self._table_dirty = False
 
         if self._use_splitkv_now():
             step_fn = self._step_splitkv
-            self.stats["splitkv_steps"] += 1
+            self.metrics.inc("splitkv_steps")
         else:
             step_fn = self._step
-        logits, self.state = step_fn(
-            self.params, self.state, jnp.asarray(self.tokens)
-        )
-        # one host sync per cycle: the logits pull; current tokens already
-        # live host-side, and the write-back below is plain numpy
-        rows = np.array(np.asarray(logits)[:, 0])
-        if self.faults is not None:
-            for slot, req in list(self.sched.active.items()):
-                if self.faults.fires(
-                    "poison_logits", cycle=self._cycle, uid=req.uid
-                ):
-                    rows[slot] = np.nan
-        nxt = np.argmax(rows, axis=-1)
-        bad: dict[int, str] = {}
-        if self.guard_logits:
-            finite = np.isfinite(rows).all(axis=-1)
-            for slot in self.sched.active:
-                if not finite[slot]:
-                    bad[slot] = "non-finite logits row"
-                elif not 0 <= int(nxt[slot]) < rows.shape[-1]:
-                    bad[slot] = f"invalid next token id {int(nxt[slot])}"
-        self.stats["steps"] += 1
-        self._advance(nxt, time.perf_counter() - t0, bad=bad)
-        if self.paged:
-            self._occupancy.append(self.pool.occupancy)
-            if self.audit_every and self._cycle % self.audit_every == 0:
-                self.audit().raise_if_violations()
+        self._cycle_worked = True
+        with self._phase("decode_dispatch"):
+            logits, self.state = step_fn(
+                self.params, self.state, jnp.asarray(self.tokens)
+            )
+        # one host sync per cycle: the explicit block_until_ready boundary
+        # separates waiting on device compute from the host work around it
+        # (the phase breakdown is how host-stall fraction gets measured)
+        with self._phase("device_wait"):
+            logits = jax.block_until_ready(logits)
+            rows = np.array(np.asarray(logits)[:, 0])
+        with self._phase("advance"):
+            if self.faults is not None:
+                for slot, req in list(self.sched.active.items()):
+                    if self.faults.fires(
+                        "poison_logits", cycle=self._cycle, uid=req.uid
+                    ):
+                        rows[slot] = np.nan
+            nxt = np.argmax(rows, axis=-1)
+            bad: dict[int, str] = {}
+            if self.guard_logits:
+                finite = np.isfinite(rows).all(axis=-1)
+                for slot in self.sched.active:
+                    if not finite[slot]:
+                        bad[slot] = "non-finite logits row"
+                    elif not 0 <= int(nxt[slot]) < rows.shape[-1]:
+                        bad[slot] = f"invalid next token id {int(nxt[slot])}"
+            self.metrics.inc("steps")
+            if self.paged:
+                # occupancy at the cycle peak — post-admission, pre-release:
+                # sampling after _advance would miss every request that
+                # retires the same cycle it decoded (short workloads read 0)
+                self._occupancy.append(self.pool.occupancy)
+            self._advance(nxt, time.perf_counter() - t0, bad=bad)
+        if (self.paged and self.audit_every
+                and self._cycle % self.audit_every == 0):
+            self.audit().raise_if_violations()
         return True
+
+    def _finish_cycle(self, t0: float) -> None:
+        """Cycle-boundary bookkeeping, run on every exit path of
+        :meth:`step` / :meth:`_step_spec`: fold the per-phase accumulator
+        into the registry histograms, derive the device-idle gap, advance
+        the first-work -> last-work window behind the ``wall_s`` fallback,
+        and service the periodic metrics sink."""
+        now = time.perf_counter()
+        cycle_s = now - t0
+        acc, self._phase_acc = self._phase_acc, {}
+        m = self.metrics
+        m.observe("cycle_s", cycle_s)
+        for name, hist in PHASE_METRICS.items():
+            if name in acc:
+                m.observe(hist, acc[name])
+        # the device is busy (at most) while the host waits on it or runs a
+        # prefill; the rest of the cycle is host-side gap the async runtime
+        # (ROADMAP) exists to overlap away
+        busy = acc.get("device_wait", 0.0) + acc.get("prefill", 0.0)
+        m.observe("device_idle_gap_s", max(0.0, cycle_s - busy))
+        if self._cycle_worked:
+            if self._work_t0 is None:
+                self._work_t0 = t0
+            self._work_t1 = now
+        if self.tracer is not None:
+            self.tracer.complete("cycle", t0=t0, dur_s=cycle_s, cat="engine",
+                                 args={"cycle": self._cycle})
+        if self.metrics_every and self._cycle % self.metrics_every == 0:
+            if self.metrics_sink is not None:
+                self.metrics_sink(m.snapshot())
+            else:
+                print(m.to_prometheus(), end="")
 
     # ------------------------------------------- the speculative decode cycle
 
@@ -519,13 +746,22 @@ class ServeEngine:
         on the memory-bound decode this paper targets."""
         t0 = time.perf_counter()
         self._cycle += 1
-        self._service_deferred()
-        self._expire()
-        if (self.paged and self.faults is not None
-                and self.faults.fires("forced_preempt", cycle=self._cycle)):
-            victim = self._pick_victim()
-            if victim is not None:
-                self._preempt(victim)
+        self._cycle_worked = False
+        try:
+            return self._step_spec_once(t0)
+        finally:
+            self._finish_cycle(t0)
+
+    def _step_spec_once(self, t0: float) -> bool:
+        with self._phase("schedule"):
+            self._service_deferred()
+            self._expire()
+            if (self.paged and self.faults is not None
+                    and self.faults.fires(
+                        "forced_preempt", cycle=self._cycle)):
+                victim = self._pick_victim()
+                if victim is not None:
+                    self._preempt(victim)
         if self.paged:
             self._admit_and_prefill()
         else:
@@ -537,71 +773,87 @@ class ServeEngine:
         feeds = np.zeros((self.slots, k), np.int32)
         limit = np.zeros((self.slots,), np.int32)
         forced = np.zeros((self.slots,), bool)
-        lookahead: dict[int, int] = {}
-        for slot, req in self.sched.active.items():
-            feeds[slot, 0] = self.tokens[slot, 0]
-            if req.replay_left > 0:
-                # teacher-forced replay: feed recorded history, accept all
-                n = min(k, req.replay_left)
-                start = len(req.out_tokens) - req.replay_left
-                for j in range(1, n):
-                    feeds[slot, j] = req.out_tokens[start + j]
-                limit[slot] = n
-                forced[slot] = True
-            else:
-                limit[slot] = min(k, req.max_new_tokens - len(req.out_tokens))
-            lookahead[slot] = int(limit[slot])
+        with self._phase("schedule"):
+            lookahead: dict[int, int] = {}
+            for slot, req in self.sched.active.items():
+                feeds[slot, 0] = self.tokens[slot, 0]
+                if req.replay_left > 0:
+                    # teacher-forced replay: feed recorded history, accept all
+                    n = min(k, req.replay_left)
+                    start = len(req.out_tokens) - req.replay_left
+                    for j in range(1, n):
+                        feeds[slot, j] = req.out_tokens[start + j]
+                    limit[slot] = n
+                    forced[slot] = True
+                else:
+                    limit[slot] = min(
+                        k, req.max_new_tokens - len(req.out_tokens)
+                    )
+                lookahead[slot] = int(limit[slot])
 
-        if self.paged:
-            self._ensure_flush_pages(lookahead=lookahead)
-            if not self.sched.active:  # everyone self-preempted under faults
-                return False
-            for slot in range(self.slots):
-                if self.sched.active.get(slot) is None:
-                    limit[slot] = 0  # preempted mid-ensure: feed nothing
-            if self._table_dirty:
-                self.state["caches"] = pg.set_page_tables(
-                    self.state["caches"], self._table
-                )
-                self._table_dirty = False
+            if self.paged:
+                self._ensure_flush_pages(lookahead=lookahead)
+                if self.sched.active:
+                    for slot in range(self.slots):
+                        if self.sched.active.get(slot) is None:
+                            limit[slot] = 0  # preempted mid-ensure: feed nothing
+                    if self._table_dirty:
+                        self.state["caches"] = pg.set_page_tables(
+                            self.state["caches"], self._table
+                        )
+                        self._table_dirty = False
+        if self.paged and not self.sched.active:
+            return False  # everyone self-preempted under faults
 
+        self._cycle_worked = True
         if any(limit[s] > 1 and not forced[s]
                for s, _ in self.sched.active.items()):
-            drafts = np.asarray(self._draft(
-                self.params, self.state, jnp.asarray(feeds[:, 0])
-            ))
+            with self._phase("decode_dispatch"):
+                draft_dev = self._draft(
+                    self.params, self.state, jnp.asarray(feeds[:, 0])
+                )
+            with self._phase("device_wait"):
+                drafts = np.asarray(jax.block_until_ready(draft_dev))
+            if self.tracer is not None:
+                self.tracer.instant("spec_draft", args={"cycle": self._cycle})
             for slot, req in self.sched.active.items():
                 n = int(limit[slot])
                 if forced[slot] or n <= 1:
                     continue
                 feeds[slot, 1:n] = drafts[slot, : n - 1]
 
-        v, applied, finite, self.state = self._verify(
-            self.params, self.state, jnp.asarray(feeds),
-            jnp.asarray(limit), jnp.asarray(forced),
-        )
+        with self._phase("decode_dispatch"):
+            v, applied, finite, self.state = self._verify(
+                self.params, self.state, jnp.asarray(feeds),
+                jnp.asarray(limit), jnp.asarray(forced),
+            )
         # host sync: the verify results pull (the only other sync is the
         # draft pull above — 2 per cycle for up to spec_k tokens per lane)
-        v = np.asarray(v)
-        applied = np.asarray(applied)
-        finite = np.asarray(finite)
-        poison: set[int] = set()
-        if self.faults is not None:
-            for slot, req in list(self.sched.active.items()):
-                if self.faults.fires(
-                    "poison_logits", cycle=self._cycle, uid=req.uid
-                ):
-                    poison.add(slot)
-        self.stats["steps"] += 1
-        self.stats["spec_cycles"] += 1
-        self._advance_spec(
-            feeds, v, applied, finite, limit, forced,
-            time.perf_counter() - t0, poison,
-        )
-        if self.paged:
-            self._occupancy.append(self.pool.occupancy)
-            if self.audit_every and self._cycle % self.audit_every == 0:
-                self.audit().raise_if_violations()
+        with self._phase("device_wait"):
+            v, applied, finite = jax.block_until_ready((v, applied, finite))
+            v = np.asarray(v)
+            applied = np.asarray(applied)
+            finite = np.asarray(finite)
+        with self._phase("advance"):
+            poison: set[int] = set()
+            if self.faults is not None:
+                for slot, req in list(self.sched.active.items()):
+                    if self.faults.fires(
+                        "poison_logits", cycle=self._cycle, uid=req.uid
+                    ):
+                        poison.add(slot)
+            self.metrics.inc("steps")
+            self.metrics.inc("spec_cycles")
+            if self.paged:
+                # occupancy at the cycle peak (post-admission, pre-release)
+                self._occupancy.append(self.pool.occupancy)
+            self._advance_spec(
+                feeds, v, applied, finite, limit, forced,
+                time.perf_counter() - t0, poison,
+            )
+        if (self.paged and self.audit_every
+                and self._cycle % self.audit_every == 0):
+            self.audit().raise_if_violations()
         return True
 
     def _advance_spec(self, feeds, v, applied, finite, limit, forced,
@@ -617,6 +869,8 @@ class ServeEngine:
         non-finite verify row, matching the sequential poisoned-step
         semantics: the token that *produced* the bad row is still recorded.
         """
+        now = time.perf_counter()
+        cyc_drafted = cyc_accepted = 0
         for slot, req in list(self.sched.active.items()):
             n_ap = int(applied[slot].sum())
             if n_ap == 0:
@@ -632,12 +886,18 @@ class ServeEngine:
                     # replay complete: resume the parked unpreempted stream
                     self.tokens[slot, 0] = req.pending_token
                     req.pending_token = None
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            "replay_done", uid=req.uid, cat="request"
+                        )
                 continue
             drafted = max(0, int(limit[slot]) - 1)
             accepted = n_ap - 1
-            self.stats["spec_draft_tokens"] += drafted
-            self.stats["spec_accepted_tokens"] += accepted
-            self.stats["spec_rejected_tokens"] += drafted - accepted
+            cyc_drafted += drafted
+            cyc_accepted += accepted
+            self.metrics.inc("spec_draft_tokens", drafted)
+            self.metrics.inc("spec_accepted_tokens", accepted)
+            self.metrics.inc("spec_rejected_tokens", drafted - accepted)
             req.spec_accepted += accepted
             req.spec_rejected += drafted - accepted
 
@@ -660,8 +920,8 @@ class ServeEngine:
                 req.out_tokens.append(tok)
                 req.pos += 1
                 req.token_latencies_s.append(per_tok)
-                self._token_latencies.append(per_tok)
-                self.stats["decoded_tokens"] += 1
+                self._observe_token(req, per_tok, now)
+                self.metrics.inc("decoded_tokens")
                 if err_reason is not None and j == n_emit - 1:
                     self._retire(
                         req, Phase.ERRORED,
@@ -675,12 +935,17 @@ class ServeEngine:
                 hit_eos = self.eos_id is not None and tok == self.eos_id
                 if hit_eos or len(req.out_tokens) >= req.max_new_tokens:
                     if not hit_eos:
-                        self.stats["budget_retired"] += 1
+                        self.metrics.inc("budget_retired")
                     self._retire(req, Phase.DONE)
                     retired = True
                     break
             if not retired:
                 self.tokens[slot, 0] = int(v[slot, n_emit - 1])
+        if self.tracer is not None:
+            self.tracer.instant(
+                "spec_verify",
+                args={"drafted": cyc_drafted, "accepted": cyc_accepted},
+            )
 
     def _advance(self, nxt: np.ndarray, dt: float,
                  bad: dict[int, str] | None = None) -> None:
@@ -695,6 +960,7 @@ class ServeEngine:
         the step's KV append is the point (``pos`` advances), its logits are
         ignored (the next token is recorded, not sampled), and nothing is
         re-counted as decoded output."""
+        now = time.perf_counter()
         for slot, req in list(self.sched.active.items()):
             if req.replay_left > 0:
                 req.pos += 1
@@ -706,13 +972,17 @@ class ServeEngine:
                     # replay complete: resume the parked unpreempted stream
                     self.tokens[slot, 0] = req.pending_token
                     req.pending_token = None
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            "replay_done", uid=req.uid, cat="request"
+                        )
                 continue
             tok = int(self.tokens[slot, 0])
             req.out_tokens.append(tok)
             req.pos += 1
             req.token_latencies_s.append(dt)
-            self._token_latencies.append(dt)
-            self.stats["decoded_tokens"] += 1
+            self._observe_token(req, dt, now)
+            self.metrics.inc("decoded_tokens")
             if bad and slot in bad:
                 self._retire(
                     req, Phase.ERRORED,
@@ -722,10 +992,26 @@ class ServeEngine:
             hit_eos = self.eos_id is not None and tok == self.eos_id
             if hit_eos or len(req.out_tokens) >= req.max_new_tokens:
                 if not hit_eos:
-                    self.stats["budget_retired"] += 1
+                    self.metrics.inc("budget_retired")
                 self._retire(req, Phase.DONE)
             else:
                 self.tokens[slot, 0] = int(nxt[slot])
+
+    def _observe_token(self, req: Request, per_tok_s: float,
+                       now: float) -> None:
+        """TTFT/TPOT split: a request's first-ever emitted token observes
+        submission-to-first-token latency (TTFT, queue wait included, on the
+        real clock — never the injectable TTL ``clock``); every later token
+        observes the amortized inter-token latency of its cycle (TPOT)."""
+        if req.t_first_token_s is None:
+            req.t_first_token_s = now
+            base = req.t_submit_s
+            ttft = (now - base) if base is not None else per_tok_s
+            self._ttft_s.append(ttft)
+            self.metrics.observe("ttft_s", ttft)
+        else:
+            self._tpot_s.append(per_tok_s)
+            self.metrics.observe("tpot_s", per_tok_s)
 
     # ---------------------------------------- retirement, expiry, preemption
 
@@ -753,7 +1039,17 @@ class ServeEngine:
             Phase.ERRORED: "errored",
         }.get(phase)
         if stat is not None:
-            self.stats[stat] += 1
+            self.metrics.inc(stat)
+        if phase is Phase.DONE and req.t_submit_s is not None:
+            e2e = time.perf_counter() - req.t_submit_s
+            self._e2e_s.append(e2e)
+            self.metrics.observe("e2e_latency_s", e2e)
+        if self.tracer is not None:
+            self.tracer.end_open(uid=req.uid, cat="request")
+            self.tracer.instant(
+                phase.value, uid=req.uid, cat="request",
+                args={"reason": reason} if reason is not None else None,
+            )
 
     def _service_deferred(self) -> None:
         """Free pages whose injected release delay has elapsed."""
@@ -814,8 +1110,15 @@ class ServeEngine:
             pending = int(self.tokens[slot, 0])
         self._table[slot, :] = slot
         self._table_dirty = True
-        self.stats["preempted"] += 1
-        self.stats["preempt_remat_tokens"] += len(req.out_tokens)
+        self.metrics.inc("preempted")
+        self.metrics.inc("preempt_remat_tokens", len(req.out_tokens))
+        if self.tracer is not None:
+            self.tracer.end_open(uid=req.uid, cat="request")
+            self.tracer.instant(
+                "preempt", uid=req.uid, cat="request",
+                args={"tokens_to_replay": len(req.out_tokens)},
+            )
+            self.tracer.begin("queue", uid=req.uid, cat="request")
         self.sched.preempt(req, pending_token=pending)
 
     def _use_splitkv_now(self) -> bool:
@@ -906,98 +1209,125 @@ class ServeEngine:
         return handled
 
     def _admit_and_prefill(self) -> None:
-        groups = self.sched.admit()
+        with self._phase("schedule"):
+            groups = self.sched.admit()
+            if groups:
+                self._note_admissions(groups)
         for bucket_len, reqs in groups.items():
-            # divergent-suffix prefill: row r holds request r's unshared tail
-            toks = np.zeros((self.slots, bucket_len), np.int32)
-            lens = np.ones((self.slots,), np.int32)  # pad rows: length 1
-            shared_blocks = [len(r.shared_pages) for r in reqs]
-            p_max = max(shared_blocks)
-            for r, req in enumerate(reqs):
-                sl = req.suffix_len(self.block_n)
-                toks[r, :sl] = req.prompt[len(req.shared_pages) * self.block_n :]
-                lens[r] = sl
-                self.stats["prefill_tokens"] += sl
-                self.stats["prefill_tokens_saved"] += req.prompt_len - sl
-            if self.spec.exact_prefill:
-                # all admitted rows carry exactly bucket_len real tokens —
-                # recurrent side-state tolerates no right-padding, and the
-                # model's prefill returns last-token logits directly
-                logits, dstate = self._prefill(self.params, jnp.asarray(toks))
-            elif p_max == 0:
-                logits, dstate = self._prefill(
-                    self.params, jnp.asarray(toks), jnp.asarray(lens)
-                )
-            else:
-                # pad the prior-page walk to a power-of-two block count so
-                # the jit cache keys on (bucket_len, prior bucket) only
-                p_pad = bucket_for(p_max, min_bucket=1)
-                pages = np.zeros((self.slots, p_pad), np.int32)
-                plens = np.zeros((self.slots,), np.int32)
-                for r, req in enumerate(reqs):
-                    s = len(req.shared_pages)
-                    pages[r, :s] = req.shared_pages
-                    plens[r] = s * self.block_n
-                logits, dstate = self._prefill_shared(
-                    self.params, self.state["caches"], jnp.asarray(toks),
-                    jnp.asarray(lens), jnp.asarray(pages), jnp.asarray(plens),
-                )
-            self.stats["prefill_calls"] += 1
-            first = np.argmax(np.asarray(logits)[:, 0], axis=-1)
+            with self._phase("prefill"):
+                self._prefill_bucket(bucket_len, reqs)
 
-            slot_ids, lengths, pages_per_req = [], [], []
+    def _note_admissions(self, groups: dict[int, list[Request]]) -> None:
+        """Per-request admission telemetry: close the queue span, open the
+        prefill span, and observe queue wait — first admission only, so a
+        preemption re-admission never double-counts the same request."""
+        now = time.perf_counter()
+        for reqs in groups.values():
+            for req in reqs:
+                first_admit = req.t_admit_s is None
+                req.t_admit_s = now
+                if first_admit and req.t_submit_s is not None:
+                    qw = now - req.t_submit_s
+                    self._queue_wait_s.append(qw)
+                    self.metrics.observe("queue_wait_s", qw)
+                if self.tracer is not None:
+                    self.tracer.end_open(uid=req.uid, cat="request")
+                    self.tracer.begin("prefill", uid=req.uid, cat="request")
+
+    def _prefill_bucket(self, bucket_len: int, reqs: list[Request]) -> None:
+        # divergent-suffix prefill: row r holds request r's unshared tail
+        toks = np.zeros((self.slots, bucket_len), np.int32)
+        lens = np.ones((self.slots,), np.int32)  # pad rows: length 1
+        shared_blocks = [len(r.shared_pages) for r in reqs]
+        p_max = max(shared_blocks)
+        for r, req in enumerate(reqs):
+            sl = req.suffix_len(self.block_n)
+            toks[r, :sl] = req.prompt[len(req.shared_pages) * self.block_n :]
+            lens[r] = sl
+            self.metrics.inc("prefill_tokens", sl)
+            self.metrics.inc("prefill_tokens_saved", req.prompt_len - sl)
+        if self.spec.exact_prefill:
+            # all admitted rows carry exactly bucket_len real tokens —
+            # recurrent side-state tolerates no right-padding, and the
+            # model's prefill returns last-token logits directly
+            logits, dstate = self._prefill(self.params, jnp.asarray(toks))
+        elif p_max == 0:
+            logits, dstate = self._prefill(
+                self.params, jnp.asarray(toks), jnp.asarray(lens)
+            )
+        else:
+            # pad the prior-page walk to a power-of-two block count so
+            # the jit cache keys on (bucket_len, prior bucket) only
+            p_pad = bucket_for(p_max, min_bucket=1)
+            pages = np.zeros((self.slots, p_pad), np.int32)
+            plens = np.zeros((self.slots,), np.int32)
             for r, req in enumerate(reqs):
                 s = len(req.shared_pages)
-                sl = req.suffix_len(self.block_n)
-                n_blocks = sl // self.block_n
-                # covered by the reservation floor — never preempts here
-                pgs = [
-                    self._alloc_page(req, admission=True)
-                    for _ in range(n_blocks)
-                ]
-                self._table[req.slot, :] = req.slot  # fresh scratch row
-                self._table[req.slot, :s] = req.shared_pages
-                if req.spec_page is not None:
-                    # speculative flush destination (COW candidate)
-                    self._table[req.slot, s] = req.spec_page
-                self._table[req.slot, s : s + n_blocks] = pgs
-                slot_ids.append(req.slot)
-                lengths.append(sl)
-                pages_per_req.append(pgs)
-                req.phase = Phase.DECODE
-                req.pos = req.prompt_len
-                req.admit_cycle = self._cycle
-                if req.replay_left > 0:
-                    # rematerializing victim: teacher-force its recorded
-                    # decode stream (first replayed token now, the rest in
-                    # `_advance`) — rebuilding the decode-built cache blocks
-                    # through the decode path keeps them bitwise identical
-                    self.tokens[req.slot, 0] = req.out_tokens[0]
-                elif req.pending_token is not None:
-                    # preempted before any decode: resume from the parked
-                    # decoded-but-unfed token, not the re-prefill's argmax
-                    self.tokens[req.slot, 0] = req.pending_token
-                    req.pending_token = None
-                else:
-                    self.tokens[req.slot, 0] = int(first[r])
-            self._table_dirty = True
-            self.state["caches"] = pg.adopt_prefill(
-                self.state["caches"], dstate["caches"],
-                slot_ids=slot_ids, lengths=lengths,
-                pages_per_req=pages_per_req, block_n=self.block_n,
-                base_blocks=shared_blocks,
+                pages[r, :s] = req.shared_pages
+                plens[r] = s * self.block_n
+            logits, dstate = self._prefill_shared(
+                self.params, self.state["caches"], jnp.asarray(toks),
+                jnp.asarray(lens), jnp.asarray(pages), jnp.asarray(plens),
             )
-            self._splice_side_state(dstate, slot_ids)
-            sidx = jnp.asarray(slot_ids, jnp.int32)
-            self.state["pos"] = self.state["pos"].at[sidx].set(
-                jnp.asarray([r.prompt_len for r in reqs], jnp.int32)
+        self.metrics.inc("prefill_calls")
+        first = np.argmax(np.asarray(logits)[:, 0], axis=-1)
+
+        slot_ids, lengths, pages_per_req = [], [], []
+        for r, req in enumerate(reqs):
+            s = len(req.shared_pages)
+            sl = req.suffix_len(self.block_n)
+            n_blocks = sl // self.block_n
+            # covered by the reservation floor — never preempts here
+            pgs = [
+                self._alloc_page(req, admission=True)
+                for _ in range(n_blocks)
+            ]
+            self._table[req.slot, :] = req.slot  # fresh scratch row
+            self._table[req.slot, :s] = req.shared_pages
+            if req.spec_page is not None:
+                # speculative flush destination (COW candidate)
+                self._table[req.slot, s] = req.spec_page
+            self._table[req.slot, s : s + n_blocks] = pgs
+            slot_ids.append(req.slot)
+            lengths.append(sl)
+            pages_per_req.append(pgs)
+            req.phase = Phase.DECODE
+            req.pos = req.prompt_len
+            req.admit_cycle = self._cycle
+            if self.tracer is not None:
+                self.tracer.end("prefill", uid=req.uid, cat="request")
+                self.tracer.begin("decode", uid=req.uid, cat="request")
+            if req.replay_left > 0:
+                # rematerializing victim: teacher-force its recorded
+                # decode stream (first replayed token now, the rest in
+                # `_advance`) — rebuilding the decode-built cache blocks
+                # through the decode path keeps them bitwise identical
+                self.tokens[req.slot, 0] = req.out_tokens[0]
+            elif req.pending_token is not None:
+                # preempted before any decode: resume from the parked
+                # decoded-but-unfed token, not the re-prefill's argmax
+                self.tokens[req.slot, 0] = req.pending_token
+                req.pending_token = None
+            else:
+                self.tokens[req.slot, 0] = int(first[r])
+        self._table_dirty = True
+        self.state["caches"] = pg.adopt_prefill(
+            self.state["caches"], dstate["caches"],
+            slot_ids=slot_ids, lengths=lengths,
+            pages_per_req=pages_per_req, block_n=self.block_n,
+            base_blocks=shared_blocks,
+        )
+        self._splice_side_state(dstate, slot_ids)
+        sidx = jnp.asarray(slot_ids, jnp.int32)
+        self.state["pos"] = self.state["pos"].at[sidx].set(
+            jnp.asarray([r.prompt_len for r in reqs], jnp.int32)
+        )
+        # full prompt blocks (shared + fresh) become discoverable for
+        # later admissions — content is committed by the adoption above
+        for r, req in enumerate(reqs):
+            self.sched.register_prefix(
+                req, req.shared_pages + pages_per_req[r]
             )
-            # full prompt blocks (shared + fresh) become discoverable for
-            # later admissions — content is committed by the adoption above
-            for r, req in enumerate(reqs):
-                self.sched.register_prefix(
-                    req, req.shared_pages + pages_per_req[r]
-                )
 
     def _ensure_flush_pages(
         self, lookahead: dict[int, int] | None = None
@@ -1053,7 +1383,12 @@ class ServeEngine:
                     self.pool.free(entry, owner=req.uid)
                     self._table[req.slot, blk] = page
                     self._table_dirty = True
-                    self.stats["cow_copies"] += 1
+                    self.metrics.inc("cow_copies")
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            "cow", uid=req.uid, cat="request",
+                            args={"src": entry, "dst": page},
+                        )
                 else:
                     # privately held page (last sharer left): the flush will
                     # overwrite it in place — drop any stale index node first
@@ -1069,9 +1404,14 @@ class ServeEngine:
         """Shim admission for dense-state models: the same scheduler (pool-
         less, exact-length groups), one per-request exact-length prefill
         spliced into the batched state."""
-        for reqs in self.sched.admit().values():
+        with self._phase("schedule"):
+            groups = self.sched.admit()
+            if groups:
+                self._note_admissions(groups)
+        for reqs in groups.values():
             for req in reqs:
-                self._fill_slot(req)
+                with self._phase("prefill"):
+                    self._fill_slot(req)
 
     def _fill_slot(self, req: Request) -> None:
         i = req.slot
@@ -1100,8 +1440,11 @@ class ServeEngine:
                 continue
             self.state[key] = jax.tree.map(splice, self.state[key], st[key])
         self.tokens[i, 0] = int(np.argmax(np.asarray(logits)[0, -1]))
-        self.stats["prefill_calls"] += 1
-        self.stats["prefill_tokens"] += req.prompt_len
+        self.metrics.inc("prefill_calls")
+        self.metrics.inc("prefill_tokens", req.prompt_len)
         req.phase = Phase.DECODE
         req.pos = req.prompt_len
         req.admit_cycle = self._cycle
+        if self.tracer is not None:
+            self.tracer.end("prefill", uid=req.uid, cat="request")
+            self.tracer.begin("decode", uid=req.uid, cat="request")

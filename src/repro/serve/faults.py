@@ -85,6 +85,10 @@ class FaultPlan:
         self._fired = {site: 0 for site in SITES}
         #: every firing, in order: {"site", "cycle", "uid", "consult"}
         self.log: list[dict] = []
+        #: optional observer called as ``on_fire(site, cycle, uid)`` at each
+        #: firing — the engine attaches its telemetry hook here (counting
+        #: and tracing injected faults never influences the decisions)
+        self.on_fire = None
 
     def fires(self, site: str, *, cycle: int, uid=None) -> bool:
         """Consult ``site``; True when the plan injects a fault here.
@@ -105,6 +109,8 @@ class FaultPlan:
             self.log.append(
                 {"site": site, "cycle": cycle, "uid": uid, "consult": n}
             )
+            if self.on_fire is not None:
+                self.on_fire(site, cycle, uid)
         return hit
 
     def fired(self, site: str) -> int:

@@ -68,12 +68,16 @@ from repro.core import qcache as _qc
 class PagePool:
     """Free-list page allocator with commitment accounting and refcounts."""
 
-    def __init__(self, n_pages: int, *, n_scratch: int, page_bytes: int = 0):
+    def __init__(self, n_pages: int, *, n_scratch: int, page_bytes: int = 0,
+                 metrics=None):
         """``page_bytes`` is the per-family byte size of one page across
         every paged layer-cache (the engine measures it from the allocated
         pools), so occupancy can be reported in bytes — a hybrid page covers
         ``n_super`` layer-caches, a dense transformer's covers ``n_layers``,
-        and an MLA latent page has no V stream at all."""
+        and an MLA latent page has no V stream at all.  ``metrics`` (a
+        `repro.serve.telemetry.MetricsRegistry`) keeps the pool gauges —
+        pages used/reserved/committed and occupancy, with high/low water
+        marks — current after every accounting mutation."""
         if n_pages <= n_scratch:
             raise ValueError(
                 f"n_pages={n_pages} must exceed n_scratch={n_scratch}"
@@ -93,6 +97,19 @@ class PagePool:
         # fired with the page id when a page's last reference drops and it
         # returns to the free list (prefix-index invalidation hook)
         self.on_release: Callable[[int], None] | None = None
+        self.metrics = metrics
+        self._update_gauges()
+
+    def _update_gauges(self) -> None:
+        """Refresh the registry gauges after an accounting mutation (the
+        gauges' high-water marks record peak commitment between samples)."""
+        m = self.metrics
+        if m is None:
+            return
+        m.set_gauge("pool_pages_used", self.n_used)
+        m.set_gauge("pool_pages_reserved", self.reserved)
+        m.set_gauge("pool_pages_committed", self.committed)
+        m.set_gauge("pool_occupancy", self.occupancy)
 
     # ------------------------------------------------------------ capacity
 
@@ -137,6 +154,7 @@ class PagePool:
         self.reserved += n
         if owner is not None:
             self._owner_reserved[owner] = self._owner_reserved.get(owner, 0) + n
+        self._update_gauges()
         return True
 
     def release(self, n: int, *, owner=None) -> None:
@@ -158,6 +176,7 @@ class PagePool:
             else:
                 self._owner_reserved.pop(owner, None)
         self.reserved -= n
+        self._update_gauges()
 
     def owner_reserved(self, owner) -> int:
         """Outstanding tracked reservation units of ``owner`` (audit hook)."""
@@ -204,6 +223,7 @@ class PagePool:
         self._holders[page] = [owner]
         if covered:
             self.reserved -= 1
+        self._update_gauges()
         return page
 
     def retain(self, page: int, *, owner=None) -> None:
@@ -247,6 +267,7 @@ class PagePool:
         if self._refcount[page] == 0:
             self._holders.pop(page, None)
             self._free.append(page)
+            self._update_gauges()
             if self.on_release is not None:
                 self.on_release(page)
 

@@ -74,6 +74,7 @@ from collections import deque
 import numpy as np
 
 from repro.serve.pages import PagePool
+from repro.serve.telemetry import MetricsRegistry
 
 
 class Phase(enum.Enum):
@@ -125,6 +126,11 @@ class Request:
     # ---- self-speculative decoding (engine spec_k > 1, SERVING.md §11) ----
     spec_accepted: int = 0         # draft tokens accepted by verify
     spec_rejected: int = 0         # draft tokens discarded at divergence
+    # ---- telemetry timestamps (real perf_counter clock, never the
+    # injectable TTL clock; docs/OBSERVABILITY.md) ----
+    t_submit_s: float | None = None       # submit() wall time
+    t_admit_s: float | None = None        # first admission wall time
+    t_first_token_s: float | None = None  # first emitted token (TTFT base)
 
     @property
     def done(self) -> bool:
@@ -261,7 +267,7 @@ class Scheduler:
                  exact_buckets: bool = False, namespace: str = "default",
                  reserve_policy: str = "worst_case",
                  expected_quantile: float = 0.5, strict: bool = False,
-                 clock=None):
+                 clock=None, metrics: MetricsRegistry | None = None):
         """``exact_buckets`` groups admissions by *exact* suffix length
         instead of power-of-two buckets — required by cache families whose
         prefill cannot be right-padded (recurrent side-state absorbs pad
@@ -277,7 +283,10 @@ class Scheduler:
         behavior of raising ``ValueError`` from :meth:`submit` for
         never-admittable requests instead of retiring them ``REJECTED``.
         ``clock`` (default ``time.monotonic``) timestamps submissions for
-        per-request ``deadline_s`` enforcement."""
+        per-request ``deadline_s`` enforcement.  ``metrics`` shares the
+        engine's `repro.serve.telemetry.MetricsRegistry` (counters register
+        under the ``sched_`` prefix; default: a private registry) — the
+        ``stats`` property keeps the historical unprefixed dict view."""
         if reserve_policy not in ("worst_case", "expected"):
             raise ValueError(f"unknown reserve_policy {reserve_policy!r}")
         if not 0.0 <= expected_quantile <= 1.0:
@@ -302,16 +311,24 @@ class Scheduler:
         self.waiting: deque[Request] = deque()
         self.active: dict[int, Request] = {}  # slot -> request
         self._admit_seq = 0
-        self.stats = {
-            "submitted": 0,
-            "admitted": 0,
-            "completed": 0,
-            "rejected": 0,
-            "backpressure_events": 0,
-            "prefix_hit_requests": 0,
-            "prefix_hit_blocks": 0,
-            "prefix_lookup_blocks": 0,
-            "spec_tail_adoptions": 0,
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        for key in self._STAT_KEYS:
+            self.metrics.counter("sched_" + key)
+
+    #: lifecycle counters (registry names carry the ``sched_`` prefix the
+    #: engine historically added when folding them into ``summary()``)
+    _STAT_KEYS = (
+        "submitted", "admitted", "completed", "rejected",
+        "backpressure_events", "prefix_hit_requests", "prefix_hit_blocks",
+        "prefix_lookup_blocks", "spec_tail_adoptions",
+    )
+
+    @property
+    def stats(self) -> dict:
+        """Scheduler counters as a plain unprefixed dict (the pre-telemetry
+        ``stats`` interface, now a read-only registry view)."""
+        return {
+            k: int(self.metrics.value("sched_" + k)) for k in self._STAT_KEYS
         }
 
     # ------------------------------------------------------------ queue
@@ -324,7 +341,7 @@ class Scheduler:
             raise ValueError(reason)
         req.phase = Phase.REJECTED
         req.error = reason
-        self.stats["rejected"] += 1
+        self.metrics.inc("sched_rejected")
 
     def submit(self, req: Request) -> bool:
         """Queue ``req``; returns False (phase REJECTED, ``req.error`` set)
@@ -348,8 +365,10 @@ class Scheduler:
             return False
         req.phase = Phase.WAITING
         req.submitted_s = self.clock()
+        if req.t_submit_s is None:  # real clock for TTFT/queue-wait series
+            req.t_submit_s = time.perf_counter()
         self.waiting.append(req)
-        self.stats["submitted"] += 1
+        self.metrics.inc("sched_submitted")
         return True
 
     def free_slots(self) -> list[int]:
@@ -420,7 +439,7 @@ class Scheduler:
             if self.pool is not None and not self.pool.reserve(
                 need, owner=req.uid
             ):
-                self.stats["backpressure_events"] += 1
+                self.metrics.inc("sched_backpressure_events")
                 break  # strict FIFO: nothing overtakes the head
             self.waiting.popleft()
             if self.pool is not None:
@@ -439,14 +458,14 @@ class Scheduler:
             req.admit_seq = self._admit_seq
             self._admit_seq += 1
             self.active[req.slot] = req
-            self.stats["admitted"] += 1
+            self.metrics.inc("sched_admitted")
             if shared:
-                self.stats["prefix_hit_requests"] += 1
-                self.stats["prefix_hit_blocks"] += len(shared)
+                self.metrics.inc("sched_prefix_hit_requests")
+                self.metrics.inc("sched_prefix_hit_blocks", len(shared))
             if self.index is not None:
-                self.stats["prefix_lookup_blocks"] += len(chain)
+                self.metrics.inc("sched_prefix_lookup_blocks", len(chain))
             if spec is not None:
-                self.stats["spec_tail_adoptions"] += 1
+                self.metrics.inc("sched_spec_tail_adoptions")
             if self.exact_buckets:
                 bucket = req.suffix_len(self.block_n)
             else:
@@ -496,7 +515,7 @@ class Scheduler:
         if reason is not None:
             req.error = reason
         if phase == Phase.DONE:
-            self.stats["completed"] += 1
+            self.metrics.inc("sched_completed")
 
     def complete(self, req: Request) -> None:
         """Retire a request as DONE (historical alias of :meth:`retire`)."""

@@ -18,7 +18,7 @@ def _load_check_docs():
 
 def test_docs_surface_exists():
     for rel in ("README.md", "docs/ARCHITECTURE.md", "docs/BENCHMARKS.md",
-                "docs/SERVING.md"):
+                "docs/SERVING.md", "docs/OBSERVABILITY.md"):
         path = REPO / rel
         assert path.exists(), f"missing {rel}"
         assert path.stat().st_size > 500, f"{rel} is a stub"
@@ -64,4 +64,33 @@ def test_serving_doc_flags_match_engine_signature():
     mod = _load_check_docs()
     text = (REPO / "docs" / "SERVING.md").read_text()
     flags = mod.table_rows(text, "Engine flags")
-    assert {"share_prefix", "spec_tail", "paged", "n_pages"} <= flags
+    assert {"share_prefix", "spec_tail", "paged", "n_pages",
+            "trace", "metrics_every"} <= flags
+
+
+def test_observability_doc_in_sync_and_drift_detected():
+    """docs/OBSERVABILITY.md's metric catalog and event schema track the
+    code: a renamed metric, a ghost event, or an undocumented engine
+    counter all fail (guards the checker itself against regex rot)."""
+    mod = _load_check_docs()
+    text = (REPO / "docs" / "OBSERVABILITY.md").read_text()
+    assert not mod.check_observability(text)
+    metrics = mod.table_rows(text, "Metric catalog")
+    assert {"ttft_s", "tpot_s", "cycle_s", "phase_device_wait_s",
+            "pool_occupancy", "sched_backpressure_events",
+            "faults_injected"} <= metrics
+    events = mod.table_rows(text, "Event schema")
+    assert {"queue", "prefill", "decode", "preempt", "cow", "fault",
+            "spec_verify"} <= events
+    # a documented metric the code never emits
+    assert mod.check_observability(
+        text.replace("| `ttft_s` |", "| `ttft_seconds_total` |"))
+    # a documented event the code never emits
+    assert mod.check_observability(
+        text.replace("| `cow` |", "| `copy_on_write` |"))
+    # an engine counter dropped from the catalog
+    assert mod.check_observability(
+        text.replace("| `preempted` |", "| |"))
+    # a bogus dotted symbol
+    assert mod.check_observability(
+        text + "\nsee `repro.serve.telemetry.NoSuchThing`")

@@ -660,6 +660,7 @@ def test_identically_seeded_runs_are_deterministic(small_model):
     assert plan1.log == plan2.log
     assert [r.out_tokens for r in reqs1] == [r.out_tokens for r in reqs2]
     assert [r.phase for r in reqs1] == [r.phase for r in reqs2]
-    timing = {"wall_s", "tokens_per_s", "latency_p50_ms", "latency_p99_ms"}
-    strip = lambda s: {k: v for k, v in s.items() if k not in timing}
+    from repro.serve import TIMING_SUMMARY_KEYS
+    strip = lambda s: {k: v for k, v in s.items()
+                       if k not in TIMING_SUMMARY_KEYS}
     assert strip(sum1) == strip(sum2)
