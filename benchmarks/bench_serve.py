@@ -28,6 +28,11 @@ Five sweeps, all appending to BENCH_serve.json so future PRs track them:
   against the sequential baseline (docs/SERVING.md §11) — accepted-token
   rate, tokens per cycle, end-to-end speedup, and a bitwise-parity check
   of every output stream.
+* **async runtime** (``--async-sweep``): the same offered-load curve
+  through ``async_runtime=False`` and ``True`` (docs/SERVING.md §13) —
+  per-cell tokens/s and ``host_stall_fraction`` before/after overlap, plus
+  a bitwise-parity check; the acceptance bar is the async stall fraction
+  strictly below the sync baseline on the same workload.
 
 Telemetry (docs/OBSERVABILITY.md): every offered-load cell reports TTFT and
 TPOT percentiles (split latency series — queueing shows up in TTFT, steady
@@ -508,12 +513,100 @@ def run_spec_decode_sweep(*, spec_ks=(2, 4), spec_bits=(2, 4), n_requests=6,
     return records
 
 
+def run_async_sweep(*, rates=(2.0, 8.0, 16.0), n_requests=8, max_new=12,
+                    slots=4, max_seq=256, time_scale=1.0,
+                    out_path: Path | None = None):
+    """Async-vs-sync offered-load curve (docs/SERVING.md §13): each rate
+    cell drives the identical workload through the synchronous cycle and
+    the overlapped runtime, recording tokens/s and ``host_stall_fraction``
+    for both, a bitwise-parity check of the streams, and the async-side
+    pipeline counters (in-flight window depth, discarded steps, starvation
+    seconds).  The ISSUE 9 acceptance bar reads straight off these rows:
+    async ``host_stall_fraction`` strictly below sync on the same cell."""
+    cfg = smoke_config("llama3-8b").with_(kv_bits=4, kv_block=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mix_name, mix = _MIXES[1]  # the mixed prompt-length workload
+
+    import time as _time
+
+    records = []
+    for rate in rates:
+        outs = {}
+        for runtime in ("sync", "async"):
+            rng = np.random.default_rng(
+                zlib.crc32(f"async:{mix_name}:{rate}".encode())
+            )
+            reqs = _make_requests(
+                n_requests, mix, max_new, cfg.vocab, rate, rng
+            )
+            engine = ServeEngine(
+                model, params, slots=slots, max_seq=max_seq,
+                async_runtime=(runtime == "async"),
+            )
+            pending = sorted(reqs, key=lambda r: r.arrival_s)
+            t0 = _time.perf_counter()
+            cycles = 0
+            while pending or engine._has_work():
+                now = (_time.perf_counter() - t0) * time_scale
+                while pending and pending[0].arrival_s <= now:
+                    engine.submit(pending.pop(0))
+                if not engine._has_work():
+                    if pending:
+                        engine.submit(pending.pop(0))
+                    continue
+                engine.step()
+                cycles += 1
+                if cycles > 20_000:
+                    break
+            stats = engine.summary(wall_s=_time.perf_counter() - t0)
+            engine.close()
+            outs[runtime] = {r.uid: list(r.out_tokens) for r in reqs}
+            rec = {
+                "mix": mix_name,
+                "offered_rate_rps": rate,
+                "runtime": runtime,
+                "n_requests": n_requests,
+                "slots": slots,
+                "decoded_tokens": stats["decoded_tokens"],
+                "tokens_per_s": round(stats["tokens_per_s"], 2),
+                "host_stall_fraction": round(
+                    stats["host_stall_fraction"], 4),
+                "ttft_p50_ms": round(stats["ttft_p50_ms"], 2),
+                "tpot_p50_ms": round(stats["tpot_p50_ms"], 3),
+            }
+            if runtime == "async":
+                rec["discarded_steps"] = stats["discarded_steps"]
+                rec["completions_enqueued"] = stats["completions_enqueued"]
+                rec["device_starved_s"] = round(
+                    engine.metrics.hist("device_starved_s").total, 5)
+                rec["bitwise_match"] = outs["async"] == outs["sync"]
+            records.append(rec)
+            emit(
+                f"serve.async.rps{rate:g}.{runtime}",
+                stats["tokens_per_s"],
+                f"host_stall={rec['host_stall_fraction']}"
+                f";tpot_p50_ms={rec['tpot_p50_ms']}"
+                + (f";match={rec['bitwise_match']}"
+                   f";discarded={rec['discarded_steps']}"
+                   if runtime == "async" else ""),
+            )
+    out_path = _BENCH_SERVE if out_path is None else out_path
+    _append(out_path, {
+        "backend": jax.default_backend(),
+        "sweep": "async_runtime",
+        "records": records,
+    })
+    return records
+
+
 def run():
     run_serve_sweep(phase_breakdown=True)
     run_shared_prefix_sweep()
     run_family_sweep()
     run_oversubscribe_sweep()
     run_spec_decode_sweep()
+    run_async_sweep()
 
 
 if __name__ == "__main__":
@@ -532,6 +625,9 @@ if __name__ == "__main__":
     ap.add_argument("--spec-decode", action="store_true",
                     help="run only the self-speculative decoding sweep "
                          "(spec_k x spec_bits vs the sequential baseline)")
+    ap.add_argument("--async-sweep", action="store_true",
+                    help="run only the async-vs-sync offered-load curve "
+                         "(tokens/s + host_stall_fraction per runtime)")
     ap.add_argument("--phase-breakdown", action="store_true",
                     help="add per-phase seconds (schedule/prefill/"
                          "decode_dispatch/device_wait/advance) to every "
@@ -546,6 +642,8 @@ if __name__ == "__main__":
         run_oversubscribe_sweep()
     elif args.spec_decode:
         run_spec_decode_sweep()
+    elif args.async_sweep:
+        run_async_sweep()
     elif args.family is not None:
         run_family_sweep(
             families=tuple(args.family) if args.family else

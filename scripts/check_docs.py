@@ -145,7 +145,8 @@ def _serve_sources() -> str:
     return "".join(
         (SERVE_SRC / f).read_text()
         for f in ("engine.py", "scheduler.py", "pages.py", "audit.py",
-                  "faults.py", "speculative.py", "telemetry.py")
+                  "faults.py", "speculative.py", "telemetry.py",
+                  "async_runtime.py")
     )
 
 

@@ -16,7 +16,10 @@
 # families/bits/pressure, docs/SERVING.md §11),
 # tests/test_serve_telemetry.py (metrics registry, event tracer,
 # phase-timing breakdown, telemetry-on/off bitwise parity,
-# docs/OBSERVABILITY.md), and
+# docs/OBSERVABILITY.md),
+# tests/test_serve_async.py (async-vs-sync differential parity across
+# families/speculation/pressure/faults, completion-thread ledger,
+# deadlock watchdogs, docs/SERVING.md §13), and
 # tests/test_serve_invariants.py (generative random-op audit sweep;
 # hypothesis-gated) — plus the shared_kv paged kernel grid in
 # tests/test_kernels_paged.py.
@@ -25,16 +28,28 @@
 #
 #   scripts/run_tier1.sh --serve-pressure    # run only the pressure gate
 #   scripts/run_tier1.sh --serve-telemetry   # run only the telemetry gate
+#   scripts/run_tier1.sh --serve-async       # run only the async gate
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
 cd "$ROOT"
 
+# The async runtime runs real threads: a wedged completion queue or decode
+# pipeline must fail a test, never hang the suite.  The runtime's own
+# watchdogs (DeadlockError) are the first line; pytest-timeout is the CI
+# backstop (requirements-test.txt installs it; bare local environments
+# degrade to the watchdogs alone).
+TIMEOUT_ARGS=()
+if python -c "import pytest_timeout" >/dev/null 2>&1; then
+    TIMEOUT_ARGS=(--timeout=600 --timeout-method=thread)
+fi
+
 if [[ "${1:-}" == "--serve-pressure" ]]; then
     shift
     echo "[tier1] serve-pressure gate (preemption parity, faults, auditor)"
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-        python -m pytest -x -q tests/test_serve_pressure.py "$@"
+        python -m pytest -x -q "${TIMEOUT_ARGS[@]}" \
+        tests/test_serve_pressure.py "$@"
     exit 0
 fi
 
@@ -42,18 +57,28 @@ if [[ "${1:-}" == "--serve-telemetry" ]]; then
     shift
     echo "[tier1] serve-telemetry gate (tracer schema, phase timing, on/off parity)"
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-        python -m pytest -x -q tests/test_serve_telemetry.py "$@"
+        python -m pytest -x -q "${TIMEOUT_ARGS[@]}" \
+        tests/test_serve_telemetry.py "$@"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--serve-async" ]]; then
+    shift
+    echo "[tier1] serve-async gate (async-vs-sync bitwise parity, liveness, completion ledger)"
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m pytest -x -q "${TIMEOUT_ARGS[@]}" \
+        tests/test_serve_async.py "$@"
     exit 0
 fi
 
 # Coverage floor on the serving subsystem (engine, scheduler, pages, audit,
-# faults, speculative): enforced whenever pytest-cov is installed (CI always
-# installs it via requirements-test.txt; bare local environments degrade to
-# an uninstrumented run).
+# faults, speculative, async_runtime): enforced whenever pytest-cov is
+# installed (CI always installs it via requirements-test.txt; bare local
+# environments degrade to an uninstrumented run).
 COV_ARGS=()
 if python -c "import pytest_cov" >/dev/null 2>&1; then
     COV_ARGS=(--cov=repro.serve --cov-report=term --cov-fail-under=70)
 fi
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-    python -m pytest -x -q "${COV_ARGS[@]}" "$@"
+    python -m pytest -x -q "${TIMEOUT_ARGS[@]}" "${COV_ARGS[@]}" "$@"
 python scripts/check_docs.py

@@ -109,6 +109,15 @@ def main():
     ap.add_argument("--strict", action="store_true",
                     help="raise on unadmittable submissions instead of "
                          "retiring them as REJECTED")
+    ap.add_argument("--async-runtime", action="store_true",
+                    help="overlapped decode runtime: no per-cycle host sync "
+                         "(bounded in-flight window + background completion "
+                         "thread); bitwise-identical to the sync cycle "
+                         "(docs/SERVING.md §13)")
+    ap.add_argument("--async-window", type=int, default=2, metavar="W",
+                    help="in-flight decode steps before the host consumes "
+                         "the oldest (higher = more overlap, more lag "
+                         "discovering retirement)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Chrome trace_event JSON here (open in "
                          "Perfetto) plus a .jsonl sibling with the raw "
@@ -135,6 +144,7 @@ def main():
         preempt_policy=args.preempt_policy,
         audit_every=args.audit_every, strict=args.strict,
         spec_k=args.spec_k, spec_bits=args.spec_bits,
+        async_runtime=args.async_runtime, async_window=args.async_window,
         trace=args.trace_out is not None,
         metrics_every=args.metrics_every,
     )

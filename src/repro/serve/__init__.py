@@ -4,6 +4,10 @@ auditor, deterministic fault injection), and the telemetry layer (metrics
 registry, structured event tracer).  See docs/ARCHITECTURE.md §7,
 docs/SERVING.md §10, and docs/OBSERVABILITY.md."""
 from repro.serve.audit import AuditError, AuditReport, audit_engine  # noqa: F401
+from repro.serve.async_runtime import (  # noqa: F401
+    CompletionRecord,
+    DeadlockError,
+)
 from repro.serve.engine import (  # noqa: F401
     TIMING_SUMMARY_KEYS,
     ServeEngine,

@@ -151,6 +151,11 @@ STAT_COUNTERS = (
     # self-speculative decoding (docs/SERVING.md §11)
     "spec_cycles", "spec_draft_tokens",
     "spec_accepted_tokens", "spec_rejected_tokens",
+    # async overlapped runtime (docs/SERVING.md §13):
+    # completions_enqueued = terminal retirements handed to the background
+    # completion thread; discarded_steps = in-flight decode results consumed
+    # after their request already left the slot (retirement/preemption lag)
+    "completions_enqueued", "discarded_steps",
 )
 
 
@@ -199,7 +204,10 @@ class ServeEngine:
                  spec_k: int = 1, spec_bits: int | None = None,
                  trace: bool | Tracer = False,
                  metrics: MetricsRegistry | None = None,
-                 metrics_every: int = 0, metrics_sink=None):
+                 metrics_every: int = 0, metrics_sink=None,
+                 async_runtime: bool = False, async_window: int = 2,
+                 completion_queue: int = 64, watchdog_s: float = 30.0,
+                 detokenizer=None, on_complete=None):
         """``paged=None`` follows the model's ``paged_spec()`` (paged when it
         declares a paged family); ``paged=False`` forces the exact-length
         shim for any token-prefill model (debug/baseline path); ``paged=True``
@@ -247,7 +255,27 @@ class ServeEngine:
         `repro.serve.telemetry.MetricsRegistry` (default: a private one);
         ``metrics_every=N`` emits a snapshot every N cycles to
         ``metrics_sink`` (a callable receiving the snapshot dict; default
-        prints the Prometheus text exposition)."""
+        prints the Prometheus text exposition).
+
+        Async overlapped runtime (docs/SERVING.md §13):
+        ``async_runtime=True`` replaces the stop-the-world cycle with the
+        overlapped runtime (`repro.serve.async_runtime.AsyncRunner`) —
+        decode steps dispatch without a per-cycle ``block_until_ready``
+        (next-token argmax stays on device), the host syncs only at
+        token-consumption boundaries lagging the dispatch frontier by at
+        most ``async_window`` steps, prefill admission overlaps in-flight
+        decode, and terminal requests flow to a background
+        detokenize/completion thread through a bounded queue of
+        ``completion_queue`` entries (a blocking put/drain that exceeds
+        ``watchdog_s`` raises `repro.serve.async_runtime.DeadlockError`
+        instead of wedging).  ``detokenizer`` (tokens -> text) and
+        ``on_complete`` (called with each CompletionRecord) run on that
+        thread.  Output token streams are bitwise identical to
+        ``async_runtime=False`` — the sync cycle stays available as the
+        oracle (tests/test_serve_async.py).  With ``spec_k > 1`` the
+        speculative cycle itself runs unoverlapped (it already amortizes
+        host syncs — two per up-to-``spec_k`` tokens) but completions
+        still route through the background thread."""
         self.model = model
         self.params = params
         self.slots = slots
@@ -279,6 +307,9 @@ class ServeEngine:
             self.metrics.histogram(hist)
         self.metrics.histogram("cycle_s")
         self.metrics.histogram("device_idle_gap_s")
+        # async runtime: wall time the dispatch pipeline sat empty while
+        # work remained (the overlap-aware host-stall numerator, §13)
+        self.metrics.histogram("device_starved_s")
         self.metrics.histogram("ttft_s")
         self.metrics.histogram("tpot_s")
         self.metrics.histogram("queue_wait_s")
@@ -338,6 +369,8 @@ class ServeEngine:
                 model, spec, impl=impl, quant_impl=quant_impl
             )
 
+        self._impl = impl
+        self._quant_impl = quant_impl
         # one jitted decode step (static shapes) shared by every family, and
         # the host-side next-token buffer (one device->host pull per cycle)
         self._step = jax.jit(
@@ -459,6 +492,22 @@ class ServeEngine:
                 lambda p, b: model.prefill(p, b, self.max_seq)
             )
 
+        # --- async overlapped runtime (docs/SERVING.md §13) ---------------
+        self.async_runtime = bool(async_runtime)
+        self._runner = None
+        self._completions = None
+        if self.async_runtime:
+            from repro.serve.async_runtime import AsyncRunner, CompletionWorker
+
+            self._completions = CompletionWorker(
+                queue_size=completion_queue, watchdog_s=watchdog_s,
+                detokenizer=detokenizer, on_complete=on_complete,
+            )
+            if self.spec_k == 1:
+                self._runner = AsyncRunner(
+                    self, window=async_window, watchdog_s=watchdog_s
+                )
+
     # ------------------------------------------------------------ public
 
     @property
@@ -521,9 +570,20 @@ class ServeEngine:
         while self._has_work() and cycles < max_cycles:
             self.step()
             cycles += 1
+            if self._runner is not None:
+                self._runner.check_liveness()
+        if self._completions is not None:
+            # every enqueued completion processed before the drain audit
+            self._completions.drain()
         if self.paged and self.audit_every:
             self.audit().raise_if_violations()  # clean at drain
         return self.summary(wall_s=time.perf_counter() - t0)
+
+    def close(self) -> None:
+        """Stop the background completion thread (async runtime); idempotent
+        and a no-op for the synchronous engine."""
+        if self._completions is not None:
+            self._completions.close()
 
     def summary(self, *, wall_s: float | None = None) -> dict:
         """Engine statistics; callers driving :meth:`step` themselves (the
@@ -562,7 +622,10 @@ class ServeEngine:
             "e2e_p50_ms": 1e3 * _percentile(self._e2e_s, 50),
             "e2e_p99_ms": 1e3 * _percentile(self._e2e_s, 99),
             # fraction of cycle time the host was NOT waiting on the device
-            # — the async-runtime ROADMAP item exists to shrink this
+            # — the async-runtime ROADMAP item exists to shrink this.  The
+            # overlapped runtime measures it directly as dispatch-pipeline
+            # starvation (below); the sync cycle infers it from device_wait
+            # (host working == device idle holds only without overlap)
             "host_stall_fraction": (
                 1.0 - min(1.0, wait_total / cycle_total)
                 if cycle_total > 0 else 0.0
@@ -575,6 +638,15 @@ class ServeEngine:
                 "cycle": cycle_total,
             },
         }
+        if self._runner is not None and self._runner.dispatched > 0:
+            # overlap-aware attribution: time the dispatch pipeline sat
+            # empty (in-flight window drained while work remained), not
+            # time-not-in-device_wait — under overlap the host working no
+            # longer implies the device is idle (docs/OBSERVABILITY.md)
+            starved = self.metrics.histogram("device_starved_s").total
+            out["host_stall_fraction"] = (
+                min(1.0, starved / cycle_total) if cycle_total > 0 else 0.0
+            )
         if self.spec_k > 1:
             out["spec_accept_rate"] = (
                 stats["spec_accepted_tokens"]
@@ -600,11 +672,14 @@ class ServeEngine:
         return out
 
     def _has_work(self) -> bool:
-        return self.sched.has_work or bool(self._deferred)
+        return (self.sched.has_work or bool(self._deferred)
+                or (self._runner is not None and self._runner.pending))
 
     # ------------------------------------------------ the one decode cycle
 
     def step(self) -> bool:
+        if self._runner is not None:
+            return self._runner.step()
         if self.spec_k > 1:
             return self._step_spec()
         t0 = time.perf_counter()
@@ -662,7 +737,8 @@ class ServeEngine:
             if self.faults is not None:
                 for slot, req in list(self.sched.active.items()):
                     if self.faults.fires(
-                        "poison_logits", cycle=self._cycle, uid=req.uid
+                        "poison_logits", cycle=self._cycle, uid=req.uid,
+                        progress=len(req.out_tokens),
                     ):
                         rows[slot] = np.nan
             nxt = np.argmax(rows, axis=-1)
@@ -839,7 +915,8 @@ class ServeEngine:
             if self.faults is not None:
                 for slot, req in list(self.sched.active.items()):
                     if self.faults.fires(
-                        "poison_logits", cycle=self._cycle, uid=req.uid
+                        "poison_logits", cycle=self._cycle, uid=req.uid,
+                        progress=len(req.out_tokens),
                     ):
                         poison.add(slot)
             self.metrics.inc("steps")
@@ -962,40 +1039,55 @@ class ServeEngine:
         re-counted as decoded output."""
         now = time.perf_counter()
         for slot, req in list(self.sched.active.items()):
-            if req.replay_left > 0:
-                req.pos += 1
-                req.replay_left -= 1
-                if req.replay_left > 0:
-                    idx = len(req.out_tokens) - req.replay_left
-                    self.tokens[slot, 0] = req.out_tokens[idx]
-                else:
-                    # replay complete: resume the parked unpreempted stream
-                    self.tokens[slot, 0] = req.pending_token
-                    req.pending_token = None
-                    if self.tracer is not None:
-                        self.tracer.instant(
-                            "replay_done", uid=req.uid, cat="request"
-                        )
-                continue
-            tok = int(self.tokens[slot, 0])
-            req.out_tokens.append(tok)
+            self._advance_one(
+                slot, req, int(nxt[slot]), (bad or {}).get(slot), dt, now
+            )
+
+    def _advance_one(self, slot: int, req: Request, nxt_tok: int,
+                     bad: str | None, dt: float, now: float,
+                     *, cycle: int | None = None) -> None:
+        """One slot's share of :meth:`_advance` — the single per-token
+        accounting path both runtimes share: the sync cycle calls it per
+        active slot right after its host sync, the async runtime calls it at
+        the consumption boundary with the step's dispatch ``cycle`` (for
+        error attribution) and its device-computed next token/finite flag.
+        Keeping one body is what makes the async token stream bitwise
+        identical to the oracle by construction."""
+        if req.replay_left > 0:
             req.pos += 1
-            req.token_latencies_s.append(dt)
-            self._observe_token(req, dt, now)
-            self.metrics.inc("decoded_tokens")
-            if bad and slot in bad:
-                self._retire(
-                    req, Phase.ERRORED,
-                    reason=f"request {req.uid} step {self._cycle}: {bad[slot]}",
-                )
-                continue
-            hit_eos = self.eos_id is not None and tok == self.eos_id
-            if hit_eos or len(req.out_tokens) >= req.max_new_tokens:
-                if not hit_eos:
-                    self.metrics.inc("budget_retired")
-                self._retire(req, Phase.DONE)
+            req.replay_left -= 1
+            if req.replay_left > 0:
+                idx = len(req.out_tokens) - req.replay_left
+                self.tokens[slot, 0] = req.out_tokens[idx]
             else:
-                self.tokens[slot, 0] = int(nxt[slot])
+                # replay complete: resume the parked unpreempted stream
+                self.tokens[slot, 0] = req.pending_token
+                req.pending_token = None
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "replay_done", uid=req.uid, cat="request"
+                    )
+            return
+        tok = int(self.tokens[slot, 0])
+        req.out_tokens.append(tok)
+        req.pos += 1
+        req.token_latencies_s.append(dt)
+        self._observe_token(req, dt, now)
+        self.metrics.inc("decoded_tokens")
+        if bad is not None:
+            step_no = self._cycle if cycle is None else cycle
+            self._retire(
+                req, Phase.ERRORED,
+                reason=f"request {req.uid} step {step_no}: {bad}",
+            )
+            return
+        hit_eos = self.eos_id is not None and tok == self.eos_id
+        if hit_eos or len(req.out_tokens) >= req.max_new_tokens:
+            if not hit_eos:
+                self.metrics.inc("budget_retired")
+            self._retire(req, Phase.DONE)
+        else:
+            self.tokens[slot, 0] = int(nxt_tok)
 
     def _observe_token(self, req: Request, per_tok_s: float,
                        now: float) -> None:
@@ -1020,7 +1112,12 @@ class ServeEngine:
         """Single retirement path for every terminal phase: reset the
         page-table row to scratch, honor an injected delayed-release fault
         (the pages stay held by the retired uid until serviced), release
-        through the scheduler, bump the per-phase stat."""
+        through the scheduler, bump the per-phase stat, and — async runtime
+        — hand the finished request to the background completion thread."""
+        if self._runner is not None and req.slot is not None:
+            # drop dispatch-frontier mirrors; lagging in-flight steps for
+            # this slot are discarded at consumption (admit_seq mismatch)
+            self._runner.on_slot_cleared(req.slot)
         if self.paged and req.slot is not None:
             self._table[req.slot, :] = req.slot  # stale entries -> scratch
             self._table_dirty = True
@@ -1050,6 +1147,9 @@ class ServeEngine:
                 phase.value, uid=req.uid, cat="request",
                 args={"reason": reason} if reason is not None else None,
             )
+        if self._completions is not None:
+            self.metrics.inc("completions_enqueued")
+            self._completions.put(req)
 
     def _service_deferred(self) -> None:
         """Free pages whose injected release delay has elapsed."""
@@ -1104,6 +1204,10 @@ class ServeEngine:
         token currently in the feed buffer is a replayed one, already in
         ``out_tokens``."""
         slot = req.slot
+        if self._runner is not None:
+            # resolve a still-lazy admission feed into the host mirror (the
+            # parked token must be a real value) and drop dispatch mirrors
+            self._runner.on_preempt(req)
         if req.replay_left > 0:
             pending = req.pending_token
         else:
@@ -1208,14 +1312,18 @@ class ServeEngine:
             handled.append(path.split("/")[0])
         return handled
 
-    def _admit_and_prefill(self) -> None:
+    def _admit_and_prefill(self, *, defer_first: bool = False) -> dict:
         with self._phase("schedule"):
             groups = self.sched.admit()
             if groups:
                 self._note_admissions(groups)
+        lazy: dict[int, tuple] = {}
         for bucket_len, reqs in groups.items():
             with self._phase("prefill"):
-                self._prefill_bucket(bucket_len, reqs)
+                lazy.update(self._prefill_bucket(
+                    bucket_len, reqs, defer_first=defer_first
+                ))
+        return lazy
 
     def _note_admissions(self, groups: dict[int, list[Request]]) -> None:
         """Per-request admission telemetry: close the queue span, open the
@@ -1234,7 +1342,8 @@ class ServeEngine:
                     self.tracer.end_open(uid=req.uid, cat="request")
                     self.tracer.begin("prefill", uid=req.uid, cat="request")
 
-    def _prefill_bucket(self, bucket_len: int, reqs: list[Request]) -> None:
+    def _prefill_bucket(self, bucket_len: int, reqs: list[Request],
+                        *, defer_first: bool = False) -> dict:
         # divergent-suffix prefill: row r holds request r's unshared tail
         toks = np.zeros((self.slots, bucket_len), np.int32)
         lens = np.ones((self.slots,), np.int32)  # pad rows: length 1
@@ -1270,7 +1379,15 @@ class ServeEngine:
                 jnp.asarray(lens), jnp.asarray(pages), jnp.asarray(plens),
             )
         self.metrics.inc("prefill_calls")
-        first = np.argmax(np.asarray(logits)[:, 0], axis=-1)
+        lazy: dict[int, tuple] = {}
+        if defer_first:
+            # async runtime: the first token stays a device array — no host
+            # sync at admission; the scalar is resolved lazily at the slot's
+            # first consumption boundary (or at preemption)
+            first_dev = jnp.argmax(logits[:, 0], axis=-1)
+            first = None
+        else:
+            first = np.argmax(np.asarray(logits)[:, 0], axis=-1)
 
         slot_ids, lengths, pages_per_req = [], [], []
         for r, req in enumerate(reqs):
@@ -1308,6 +1425,8 @@ class ServeEngine:
                 # decoded-but-unfed token, not the re-prefill's argmax
                 self.tokens[req.slot, 0] = req.pending_token
                 req.pending_token = None
+            elif defer_first:
+                lazy[req.slot] = (first_dev, r)
             else:
                 self.tokens[req.slot, 0] = int(first[r])
         self._table_dirty = True
@@ -1328,9 +1447,10 @@ class ServeEngine:
             self.sched.register_prefix(
                 req, req.shared_pages + pages_per_req[r]
             )
+        return lazy
 
     def _ensure_flush_pages(
-        self, lookahead: dict[int, int] | None = None
+        self, lookahead: dict[int, int] | None = None, pos_of=None
     ) -> None:
         """Allocate the destination page for every sequence whose residual
         fills on the upcoming step (pos % block_n == block_n - 1): the flush
@@ -1354,16 +1474,23 @@ class ServeEngine:
         expected reservation policy), so the iteration snapshots the active
         set and re-checks each slot: a request preempted by an earlier
         allocation this cycle (or that preempted *itself* — alloc returned
-        None) is skipped, its table row already reset to scratch."""
+        None) is skipped, its table row already reset to scratch.
+
+        ``pos_of`` (request -> position) overrides the position the check
+        runs at: the async runtime passes its dispatch-frontier position,
+        which runs ahead of ``req.pos`` (consumption truth) by the in-flight
+        window — destinations must exist before the step that flushes them
+        is *dispatched*, not consumed."""
         cow_src, cow_dst = [], []
         for req in list(self.sched.active.values()):
+            pos = req.pos if pos_of is None else pos_of(req)
             window = 1 if lookahead is None else lookahead.get(req.slot, 1)
             for j in range(max(1, window)):
                 if self.sched.active.get(req.slot) is not req:
                     break  # preempted by an earlier alloc this cycle
-                if (req.pos + j) % self.block_n != self.block_n - 1:
+                if (pos + j) % self.block_n != self.block_n - 1:
                     continue
-                blk = (req.pos + j) // self.block_n
+                blk = (pos + j) // self.block_n
                 entry = int(self._table[req.slot, blk])
                 if entry < self.slots:  # still scratch -> fresh private page
                     page = self._alloc_page(req)
@@ -1400,7 +1527,7 @@ class ServeEngine:
 
     # ------------------------------------------------- exact-length shim
 
-    def _admit_exact(self) -> None:
+    def _admit_exact(self, *, defer_first: bool = False) -> dict:
         """Shim admission for dense-state models: the same scheduler (pool-
         less, exact-length groups), one per-request exact-length prefill
         spliced into the batched state."""
@@ -1408,12 +1535,16 @@ class ServeEngine:
             groups = self.sched.admit()
             if groups:
                 self._note_admissions(groups)
+        lazy: dict[int, tuple] = {}
         for reqs in groups.values():
             for req in reqs:
                 with self._phase("prefill"):
-                    self._fill_slot(req)
+                    lazy.update(
+                        self._fill_slot(req, defer_first=defer_first)
+                    )
+        return lazy
 
-    def _fill_slot(self, req: Request) -> None:
+    def _fill_slot(self, req: Request, *, defer_first: bool = False) -> dict:
         i = req.slot
         batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
         logits, st = self._prefill(self.params, batch)
@@ -1439,7 +1570,12 @@ class ServeEngine:
             if key in handled:
                 continue
             self.state[key] = jax.tree.map(splice, self.state[key], st[key])
-        self.tokens[i, 0] = int(np.argmax(np.asarray(logits)[0, -1]))
+        lazy: dict[int, tuple] = {}
+        if defer_first:
+            # scalar device argmax, resolved at the consumption boundary
+            lazy[i] = (jnp.argmax(logits[0, -1]), None)
+        else:
+            self.tokens[i, 0] = int(np.argmax(np.asarray(logits)[0, -1]))
         self.metrics.inc("prefill_calls")
         self.metrics.inc("prefill_tokens", req.prompt_len)
         req.phase = Phase.DECODE
@@ -1448,3 +1584,4 @@ class ServeEngine:
         if self.tracer is not None:
             self.tracer.end("prefill", uid=req.uid, cat="request")
             self.tracer.begin("decode", uid=req.uid, cat="request")
+        return lazy

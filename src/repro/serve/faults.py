@@ -32,6 +32,17 @@ consultation index) so tests can assert the replay.
 Targeted (non-random) injection: ``fire_at={"alloc_fail": (3,)}`` fires a
 site at exact consultation indices, composable with rates.  ``max_fires``
 caps firings per site (e.g. poison exactly one row over a whole run).
+
+Schedule-invariant targeting: ``fire_at_token={"poison_logits":
+{(uid, k)}}`` fires when the site is consulted for request ``uid`` at
+decode progress ``k`` (the engine passes ``progress=len(req.out_tokens)``).
+Unlike consultation indices — which depend on how many cycles ran and how
+many requests were active in each — a ``(uid, progress)`` key names a point
+on the *request's own* token stream, so the firing replays identically
+under any scheduling: sync vs async runtime, preempted vs unpressured,
+different admission interleavings.  The async-vs-sync differential suite
+(tests/test_serve_async.py) relies on this to make poisoned-step outputs
+bitwise comparable across runtimes.
 """
 from __future__ import annotations
 
@@ -47,13 +58,17 @@ class FaultPlan:
     def __init__(self, seed: int = 0, *, alloc_fail: float = 0.0,
                  forced_preempt: float = 0.0, delayed_release: float = 0.0,
                  poison_logits: float = 0.0, delay_cycles: int = 2,
-                 max_fires: dict | None = None, fire_at: dict | None = None):
+                 max_fires: dict | None = None, fire_at: dict | None = None,
+                 fire_at_token: dict | None = None):
         """``alloc_fail``/``forced_preempt``/``delayed_release``/
         ``poison_logits`` are per-consultation firing probabilities in
         ``[0, 1]``.  ``delay_cycles`` is how long a delayed release parks
         pages.  ``max_fires`` maps site → max total firings; ``fire_at``
         maps site → iterable of 0-based consultation indices that fire
-        unconditionally (deterministic targeting)."""
+        unconditionally (deterministic targeting); ``fire_at_token`` maps
+        site → iterable of ``(uid, progress)`` pairs that fire when the
+        site is consulted for that request at that decode progress
+        (schedule-invariant targeting — see module docstring)."""
         rates = {
             "alloc_fail": alloc_fail,
             "forced_preempt": forced_preempt,
@@ -63,7 +78,8 @@ class FaultPlan:
         for site, rate in rates.items():
             if not 0.0 <= rate <= 1.0:
                 raise ValueError(f"{site} rate {rate} outside [0, 1]")
-        for site in dict(max_fires or {}) | dict(fire_at or {}):
+        for site in (dict(max_fires or {}) | dict(fire_at or {})
+                     | dict(fire_at_token or {})):
             if site not in SITES:
                 raise ValueError(f"unknown fault site {site!r}")
         self.seed = seed
@@ -72,6 +88,10 @@ class FaultPlan:
         self.max_fires = dict(max_fires or {})
         self.fire_at = {
             site: frozenset(idx) for site, idx in (fire_at or {}).items()
+        }
+        self.fire_at_token = {
+            site: frozenset((uid, int(k)) for uid, k in pairs)
+            for site, pairs in (fire_at_token or {}).items()
         }
         # one independent stream per site: the decision sequence of a site
         # depends only on how many times IT was consulted
@@ -90,16 +110,22 @@ class FaultPlan:
         #: and tracing injected faults never influences the decisions)
         self.on_fire = None
 
-    def fires(self, site: str, *, cycle: int, uid=None) -> bool:
+    def fires(self, site: str, *, cycle: int, uid=None,
+              progress: int | None = None) -> bool:
         """Consult ``site``; True when the plan injects a fault here.
-        ``cycle``/``uid`` only annotate the log — they never influence the
-        decision (determinism)."""
+        ``cycle``/``uid`` only annotate the log — they never influence a
+        rate or ``fire_at`` decision (determinism by consultation count).
+        ``progress`` (with ``uid``) additionally keys the schedule-invariant
+        ``fire_at_token`` targets."""
         if site not in SITES:
             raise ValueError(f"unknown fault site {site!r}")
         n = self._consults[site]
         self._consults[site] += 1
         rate = self.rates[site]
         hit = n in self.fire_at.get(site, ())
+        if (not hit and progress is not None
+                and (uid, progress) in self.fire_at_token.get(site, ())):
+            hit = True
         if not hit and rate > 0.0:
             hit = bool(self._rng[site].random() < rate)
         if hit and self._fired[site] >= self.max_fires.get(site, np.inf):

@@ -1,0 +1,465 @@
+"""Async-vs-sync differential harness (ISSUE 9, docs/SERVING.md §13).
+
+The overlapped runtime (`repro.serve.async_runtime`) restructures the
+engine's decode loop — device-resident token feeds, a bounded in-flight
+window, dispatch-frontier page allocation, a background completion thread —
+and every one of those moving parts is only trustworthy against the
+synchronous engine as oracle.  The contract proven here:
+
+* **Bitwise parity**: identical workloads through ``async_runtime=True``
+  and ``False`` produce identical token streams and terminal phases across
+  cache families (paged attention, MLA, the dense xlstm shim), speculative
+  decoding, prefix sharing, oversubscription/preemption, and seeded fault
+  injection (schedule-invariant ``fire_at_token`` poison targeting).
+* **Liveness**: a randomized admit/cancel/expire/preempt storm against the
+  background completion thread under delayed-release faults finishes within
+  a bounded wall clock (queue timeouts + the runner watchdog raise
+  `repro.serve.async_runtime.DeadlockError` instead of hanging), with the
+  invariant auditor clean at drain.
+* **Exactly-once completion**: no request is lost and none is
+  double-completed — the worker's ledger holds every terminal uid exactly
+  once, whatever mix of DONE/CANCELLED/EXPIRED/ERRORED the storm produced.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import smoke_config
+from repro.models.zoo import build_model
+from repro.serve import (
+    DeadlockError,
+    FaultPlan,
+    Phase,
+    Request,
+    ServeEngine,
+    audit_engine,
+)
+from repro.serve.async_runtime import CompletionWorker
+
+BLOCK = 32
+
+
+def _build(arch, **cfg_kw):
+    kw = {"kv_bits": 4, "kv_block": BLOCK}
+    kw.update(cfg_kw)
+    cfg = smoke_config(arch).with_(**kw)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def attn_model():
+    return _build("llama3-8b")
+
+
+@pytest.fixture(scope="module")
+def mla_model():
+    return _build("deepseek-v3-671b")
+
+
+@pytest.fixture(scope="module")
+def xlstm_model():
+    return _build("xlstm-1.3b")
+
+
+def _workload(cfg, n=5, seed=42, lo=34, hi=48, new_lo=24, new_hi=32):
+    """Block-crossing prompts and decodes: flush-time allocation (the
+    preemption site) and residual flushes actually fire."""
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab, int(rng.integers(lo, hi)))
+                     .astype(np.int32),
+            max_new_tokens=int(rng.integers(new_lo, new_hi)),
+        )
+        for i in range(n)
+    ]
+
+
+def _run(model, params, reqs, *, async_runtime, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_seq", 128)
+    engine = ServeEngine(model, params, async_runtime=async_runtime, **kw)
+    for r in reqs:
+        assert engine.submit(r)
+    summary = engine.run()
+    engine.close()
+    return engine, summary
+
+
+def _outputs(reqs):
+    return {r.uid: list(r.out_tokens) for r in reqs}
+
+
+def _phases(reqs):
+    return {r.uid: r.phase.value for r in reqs}
+
+
+def _differential(model_fixture, cfg, model, params, **engine_kw):
+    """Run the same workload through both runtimes; return
+    (sync_reqs, async_reqs, sync_summary, async_summary, async_engine)."""
+    rs = _workload(cfg)
+    ra = _workload(cfg)
+    _, ss = _run(model, params, rs, async_runtime=False, **engine_kw)
+    eng, sa = _run(model, params, ra, async_runtime=True, **engine_kw)
+    assert _outputs(ra) == _outputs(rs), "async token streams diverged"
+    assert _phases(ra) == _phases(rs), "terminal phases diverged"
+    return rs, ra, ss, sa, eng
+
+
+# --------------------------------------------------------------------------
+# Tentpole: bitwise parity across families x pressure x faults x speculation
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["attn", "mla", "xlstm"])
+def test_async_matches_sync_bitwise_per_family(family, request):
+    """Plain workload, every cache family (paged attention, paged MLA, the
+    dense exact-length shim): identical token streams, every request DONE,
+    and the completion ledger holds each uid exactly once."""
+    cfg, model, params = request.getfixturevalue(f"{family}_model")
+    rs, ra, _ss, sa, eng = _differential(None, cfg, model, params)
+    assert all(r.done for r in ra), _phases(ra)
+    ledger = eng._completions.records
+    assert sorted(ledger) == sorted(r.uid for r in ra)
+    assert eng._completions.duplicates == 0
+    assert sa["completions_enqueued"] == len(ra)
+    for r in ra:
+        assert ledger[r.uid].tokens == tuple(r.out_tokens)
+
+
+@pytest.mark.parametrize("window", [1, 2, 4])
+def test_async_parity_any_window_depth(attn_model, window):
+    """The in-flight window depth changes only *when* results are consumed,
+    never what they are — including window 1 (dispatch/consume lockstep)
+    and windows deeper than the retirement lag."""
+    cfg, model, params = attn_model
+    rs = _workload(cfg)
+    ra = _workload(cfg)
+    _run(model, params, rs, async_runtime=False)
+    _run(model, params, ra, async_runtime=True, async_window=window)
+    assert _outputs(ra) == _outputs(rs)
+
+
+def test_async_parity_under_pool_pressure(attn_model):
+    """Half the worst-case provisioning under the expected reservation
+    policy: preemption-by-rematerialization fires in both runtimes (the
+    async one discovers retirement/preemption late, at the consumption
+    boundary) and the streams stay bitwise identical; the auditor
+    cross-checks every cycle."""
+    cfg, model, params = attn_model
+    kw = dict(n_pages=2 + 3, reserve_policy="expected",
+              expected_quantile=0.0, audit_every=1)
+    _rs, ra, _ss, sa, eng = _differential(None, cfg, model, params, **kw)
+    assert all(r.done for r in ra), _phases(ra)
+    assert sa["preempted"] > 0, "no pressure exercised — test is vacuous"
+    # lagging in-flight steps for retired/preempted slots were recognized
+    # and dropped, not misattributed
+    assert sa["discarded_steps"] > 0
+    assert eng.pool.n_free == eng.pool.capacity
+    assert audit_engine(eng).ok
+
+
+def test_async_parity_under_seeded_faults(attn_model):
+    """Seeded chaos, replayed through both runtimes: rate-based alloc-fail /
+    forced-preempt / delayed-release faults (output-invariant recovery
+    paths) plus a schedule-invariant ``fire_at_token`` poison — the only
+    targeting that can hit the *same decode step* under two different
+    schedules.  The poisoned request retires ERRORED at the same token in
+    both; everyone else completes identically."""
+    cfg, model, params = attn_model
+
+    def plan():
+        return FaultPlan(
+            seed=3, alloc_fail=0.05, forced_preempt=0.05,
+            delayed_release=0.3,
+            fire_at_token={"poison_logits": {(2, 5)}},
+        )
+
+    kw = dict(n_pages=2 + 3, reserve_policy="expected",
+              expected_quantile=0.0, audit_every=1)
+    rs = _workload(cfg)
+    ra = _workload(cfg)
+    _, _ = _run(model, params, rs, async_runtime=False, faults=plan(), **kw)
+    eng, _ = _run(model, params, ra, async_runtime=True, faults=plan(), **kw)
+    assert _outputs(ra) == _outputs(rs)
+    assert _phases(ra) == _phases(rs)
+    assert _phases(ra)[2] == "errored"
+    # the poisoned request's error names its dispatch step deterministically
+    assert "non-finite logits row" in ra[2].error
+    assert len(ra[2].out_tokens) == 6  # poisoned at progress 5, 6th emitted
+    assert audit_engine(eng).ok
+
+
+def test_async_parity_with_speculative_decode(attn_model):
+    """``spec_k > 1`` with ``async_runtime=True``: the speculative cycle
+    itself stays unoverlapped (draft+verify already amortize the sync), but
+    completions route through the background thread — and the stream equals
+    both the sync spec run and the non-speculative oracle."""
+    cfg, model, params = attn_model
+    r_sync = _workload(cfg)
+    r_async = _workload(cfg)
+    r_plain = _workload(cfg)
+    _run(model, params, r_sync, async_runtime=False, spec_k=2)
+    eng, sa = _run(model, params, r_async, async_runtime=True, spec_k=2)
+    _run(model, params, r_plain, async_runtime=False)
+    assert _outputs(r_async) == _outputs(r_sync) == _outputs(r_plain)
+    assert sa["spec_accepted_tokens"] > 0
+    assert sorted(eng._completions.records) == [r.uid for r in r_async]
+
+
+def test_async_parity_with_prefix_sharing(attn_model):
+    """B shares A's committed prefix blocks (admitted one step later so the
+    index hit is real), decodes across a block boundary (private flush
+    pages), and both runtimes emit the same streams as solo runs."""
+    cfg, model, params = attn_model
+    rng = np.random.default_rng(6)
+    pa = rng.integers(0, cfg.vocab, 2 * BLOCK).astype(np.int32)
+    pb = np.concatenate(
+        [pa, rng.integers(0, cfg.vocab, 8).astype(np.int32)]
+    )
+
+    def staged(async_runtime):
+        eng = ServeEngine(model, params, slots=2, max_seq=256,
+                          async_runtime=async_runtime)
+        a = Request(uid=0, prompt=pa.copy(), max_new_tokens=BLOCK + 4)
+        b = Request(uid=1, prompt=pb.copy(), max_new_tokens=BLOCK + 4)
+        eng.submit(a)
+        eng.step()  # A adopted + prefix registered
+        eng.submit(b)
+        eng.step()  # B admitted: sharing visible before retirement
+        assert len(b.shared_pages) == 2
+        s = eng.run()
+        eng.close()
+        assert a.done and b.done
+        return _outputs([a, b]), s
+
+    out_async, sa = staged(True)
+    out_sync, ss = staged(False)
+    assert out_async == out_sync
+    assert sa["prefill_tokens_saved"] == ss["prefill_tokens_saved"] > 0
+
+
+def test_async_preempt_before_first_consumption(attn_model):
+    """The nastiest interleaving: a request whose admission first-token is
+    still a device array (no consumption boundary reached it) gets
+    preempted — the runtime must resolve the lazy token into the parked
+    feed, or rematerialization would replay garbage.  Forced preemption on
+    the first consulted cycles makes the window deterministic."""
+    cfg, model, params = attn_model
+
+    def plan():
+        return FaultPlan(fire_at={"forced_preempt": (0, 1, 2)})
+
+    kw = dict(n_pages=2 + 6, audit_every=1, async_window=4)
+    rs = _workload(cfg, n=3)
+    ra = _workload(cfg, n=3)
+    _run(model, params, rs, async_runtime=False, faults=plan(),
+         n_pages=2 + 6, audit_every=1)
+    eng, sa = _run(model, params, ra, async_runtime=True, faults=plan(),
+                   **kw)
+    assert _outputs(ra) == _outputs(rs)
+    assert sa["preempted"] > 0
+    assert audit_engine(eng).ok
+
+
+# --------------------------------------------------------------------------
+# Completion worker: ledger, callbacks, watchdogs (unit level)
+# --------------------------------------------------------------------------
+
+class _Req:
+    """Minimal retired-request stand-in for worker unit tests."""
+
+    def __init__(self, uid, tokens=(1, 2, 3), phase=Phase.DONE, error=None):
+        self.uid = uid
+        self.out_tokens = list(tokens)
+        self.phase = phase
+        self.error = error
+
+
+def test_completion_worker_detokenizes_and_records_once():
+    seen = []
+    w = CompletionWorker(
+        queue_size=4, watchdog_s=5.0,
+        detokenizer=lambda toks: "|".join(map(str, toks)),
+        on_complete=lambda rec: seen.append(rec.uid),
+    )
+    try:
+        w.put(_Req(7, (4, 5)))
+        w.put(_Req(8, (6,), phase=Phase.ERRORED, error="boom"))
+        w.drain()
+        assert sorted(w.records) == [7, 8]
+        assert w.records[7].text == "4|5"
+        assert w.records[7].phase == "done"
+        assert w.records[8].error == "boom"
+        assert sorted(seen) == [7, 8]
+        # a duplicate retirement is counted, never overwrites the ledger
+        w.put(_Req(7, (9, 9)))
+        w.drain()
+        assert w.duplicates == 1
+        assert w.records[7].tokens == (4, 5)
+    finally:
+        w.close()
+
+
+def test_completion_callback_error_surfaces_at_drain():
+    w = CompletionWorker(
+        queue_size=4, watchdog_s=5.0,
+        on_complete=lambda rec: (_ for _ in ()).throw(ValueError("cb")),
+    )
+    try:
+        w.put(_Req(1))
+        with pytest.raises(ValueError, match="cb"):
+            w.drain()
+        assert 1 in w.records  # the record landed before the callback blew
+    finally:
+        w.close()
+
+
+def test_completion_queue_full_raises_deadlock_not_hang():
+    """A wedged consumer (detokenizer blocked on an event) must turn a full
+    bounded queue into a DeadlockError within ~watchdog_s, not a hang."""
+    release = threading.Event()
+    w = CompletionWorker(
+        queue_size=1, watchdog_s=0.2,
+        detokenizer=lambda toks: (release.wait(10), "")[1],
+    )
+    try:
+        w.put(_Req(0))        # worker picks this up and blocks
+        time.sleep(0.05)
+        w.put(_Req(1))        # fills the queue
+        t0 = time.perf_counter()
+        with pytest.raises(DeadlockError, match="completion queue full"):
+            w.put(_Req(2))
+        assert time.perf_counter() - t0 < 5.0
+        with pytest.raises(DeadlockError, match="failed to drain"):
+            w.drain()
+    finally:
+        release.set()
+        w.close()
+
+
+def test_engine_close_is_idempotent_and_sync_noop(attn_model):
+    cfg, model, params = attn_model
+    eng = ServeEngine(model, params, slots=2, max_seq=128)
+    eng.close()
+    eng.close()
+    reqs = _workload(cfg, n=1)
+    eng2, _ = _run(model, params, reqs, async_runtime=True)
+    eng2.close()  # second close after _run's close
+
+
+# --------------------------------------------------------------------------
+# Concurrency stress + liveness: the storm
+# --------------------------------------------------------------------------
+
+def test_storm_admit_cancel_expire_preempt_no_loss_no_double(attn_model):
+    """Randomized lifecycle storm against the overlapped runtime: staggered
+    submissions, random cancels (waiting and active), short TTLs on an
+    injectable clock, forced preemption and delayed page release, over an
+    oversubscribed pool — driven step by step with the runner watchdog
+    armed.  Liveness is the watchdog plus a bounded outer wall clock; the
+    exactly-once contract is checked uid by uid against the worker ledger,
+    and the auditor must be clean at drain."""
+    cfg, model, params = attn_model
+    rng = np.random.default_rng(11)
+    now = [0.0]  # injectable TTL clock, advanced by the driver
+
+    plan = FaultPlan(seed=5, forced_preempt=0.08, delayed_release=0.4,
+                     delay_cycles=3)
+    eng = ServeEngine(
+        model, params, slots=2, max_seq=128, n_pages=2 + 3,
+        reserve_policy="expected", expected_quantile=0.0,
+        faults=plan, audit_every=1, clock=lambda: now[0],
+        async_runtime=True, async_window=3, watchdog_s=20.0,
+    )
+    all_reqs = []
+    pending = [
+        Request(
+            uid=i,
+            prompt=rng.integers(
+                0, cfg.vocab, int(rng.integers(34, 48))
+            ).astype(np.int32),
+            max_new_tokens=int(rng.integers(10, 24)),
+            # roughly a third get a TTL tight enough to expire mid-flight
+            deadline_s=(float(rng.integers(3, 9))
+                        if rng.random() < 0.35 else None),
+        )
+        for i in range(14)
+    ]
+    deadline = time.perf_counter() + 120.0  # outer liveness bound
+    cancelled, submitted = set(), set()
+    while eng._has_work() or pending:
+        assert time.perf_counter() < deadline, "storm exceeded wall clock"
+        # staggered admissions keep the waiting queue churning
+        if pending and rng.random() < 0.4:
+            req = pending.pop()
+            assert eng.submit(req)
+            submitted.add(req.uid)
+            all_reqs.append(req)
+        # random cancels hit waiting and active requests alike
+        if submitted and rng.random() < 0.08:
+            uid = int(rng.choice(sorted(submitted)))
+            got = eng.cancel(uid)
+            if got is not None:
+                cancelled.add(uid)
+        now[0] += 1.0  # TTL clock marches -> some deadlines expire
+        if eng._has_work():
+            eng.step()
+            eng._runner.check_liveness()
+    summary = eng.run()  # drain: consumes leftovers, drains completions
+    eng.close()
+
+    terminal = {
+        Phase.DONE, Phase.CANCELLED, Phase.EXPIRED, Phase.ERRORED,
+    }
+    assert all(r.phase in terminal for r in all_reqs), _phases(all_reqs)
+    # exactly-once: every submitted uid in the ledger, none twice
+    ledger = eng._completions.records
+    assert sorted(ledger) == sorted(submitted)
+    assert eng._completions.duplicates == 0
+    assert summary["completions_enqueued"] == len(submitted)
+    # the storm actually stormed
+    phases = {r.phase for r in all_reqs}
+    assert Phase.DONE in phases
+    assert cancelled or Phase.EXPIRED in phases
+    # every DONE stream matches an unpressured solo decode of that prompt
+    # (spot-check two — full parity is the differential suite's job)
+    done = [r for r in all_reqs if r.phase is Phase.DONE][:2]
+    for r in done:
+        solo_eng = ServeEngine(model, params, slots=2, max_seq=128)
+        solo = Request(uid=0, prompt=np.asarray(r.prompt).copy(),
+                       max_new_tokens=r.max_new_tokens)
+        solo_eng.submit(solo)
+        solo_eng.run()
+        assert list(r.out_tokens) == list(solo.out_tokens), r.uid
+    # resources drained, invariants hold
+    assert eng.pool.n_free == eng.pool.capacity
+    assert eng.pool.reserved == 0
+    assert audit_engine(eng).ok
+
+
+def test_runner_watchdog_raises_on_stall(attn_model):
+    """The liveness watchdog itself: a runner whose clock says no progress
+    happened for longer than watchdog_s must raise DeadlockError, not spin."""
+    cfg, model, params = attn_model
+    eng = ServeEngine(model, params, slots=2, max_seq=128,
+                      async_runtime=True, watchdog_s=0.05)
+    try:
+        reqs = _workload(cfg, n=1)
+        for r in reqs:
+            eng.submit(r)
+        eng.step()  # real work: dispatch one step
+        eng._runner.last_progress -= 10.0  # simulate a wedged pipeline
+        with pytest.raises(DeadlockError, match="no progress"):
+            eng._runner.check_liveness()
+        # finishing the workload normally still works after the scare
+        eng._runner.last_progress = time.perf_counter()
+        eng.run()
+        assert all(r.done for r in reqs)
+    finally:
+        eng.close()
