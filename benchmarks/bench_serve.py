@@ -33,6 +33,15 @@ Five sweeps, all appending to BENCH_serve.json so future PRs track them:
   per-cell tokens/s and ``host_stall_fraction`` before/after overlap, plus
   a bitwise-parity check; the acceptance bar is the async stall fraction
   strictly below the sync baseline on the same workload.
+* **tenant churn** (``--tenant-churn``): rotating sessions over per-tenant
+  shared system prompts where every session departs before the tenant's
+  next arrives (docs/SERVING.md §14) — prefix hit rate, prefill tokens
+  computed vs. saved, retained-hit and retained-reclaim counts with
+  retention off and on, over an ample and a deliberately tight pool, plus
+  the §14 bitwise oracles (cold first round, retained-hit == live-hit).
+* **pool gauges** (``--pool-gauges``): host-side micro-bench of the
+  allocator's gauge refresh — ``gauge_mode="incremental"`` vs ``"full"``
+  microseconds per reserve/alloc/free round-trip.
 
 Telemetry (docs/OBSERVABILITY.md): every offered-load cell reports TTFT and
 TPOT percentiles (split latency series — queueing shows up in TTFT, steady
@@ -600,6 +609,195 @@ def run_async_sweep(*, rates=(2.0, 8.0, 16.0), n_requests=8, max_new=12,
     return records
 
 
+def run_tenant_churn_sweep(*, n_tenants=3, rounds=2, max_new=26, slots=2,
+                           max_seq=256, out_path: Path | None = None):
+    """Tenant-churn sweep (docs/SERVING.md §14): ``n_tenants`` tenants, each
+    with a fixed two-block system prompt, rotate short sessions through the
+    engine one at a time — every session fully departs before the tenant's
+    next one arrives, so without retention the shared prompt is re-prefilled
+    every visit.  The rotation is skewed (tenant 0 returns between every
+    other tenant's session — the popular-system-prompt shape), which under
+    the tight pool keeps the hot tenant's retained set MRU while the cold
+    tenants' sets are LRU-reclaimed: the tight cell shows *graceful*
+    degradation (partial hit rate, nonzero reclaims, zero preemptions)
+    rather than all-or-nothing.  Each pool cell runs the identical session
+    stream with retention off and on, recording the prefix hit rate,
+    prefill tokens computed vs. saved, retained-hit and retained-reclaim
+    counts.
+
+    Bitwise claims recorded per the §14 oracle doctrine (§9: sharing itself
+    is not bitwise vs. a cold raw-bf16 prefill, so ON-vs-OFF full-stream
+    identity is not the bar): cold first visits are identical with
+    retention on and off, and a retained hit emits exactly the tokens of a
+    *live* hit on the same prompt (donor still resident)."""
+    cfg = smoke_config("llama3-8b").with_(kv_bits=4, kv_block=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    blk = cfg.kv_block
+
+    # hot/cold rotation: [0, 1, 0, 2, ..., 0, n-1] per round
+    schedule = []
+    for _ in range(rounds):
+        for cold in range(1, n_tenants):
+            schedule += [0, cold]
+    max_occ = max(schedule.count(t) for t in range(n_tenants))
+
+    rng = np.random.default_rng(zlib.crc32(b"tenant-churn"))
+    system = [
+        rng.integers(0, cfg.vocab, 2 * blk).astype(np.int32)
+        for _ in range(n_tenants)
+    ]
+    tails = [
+        [rng.integers(0, cfg.vocab, 8 + 3 * o).astype(np.int32)
+         for o in range(max_occ)]
+        for _ in range(n_tenants)
+    ]
+
+    def sessions():
+        """Churn stream: (uid, tenant, occurrence, prompt)."""
+        occ = [0] * n_tenants
+        for uid, t in enumerate(schedule):
+            yield uid, t, occ[t], np.concatenate([system[t], tails[t][occ[t]]])
+            occ[t] += 1
+
+    def churn_run(retain, n_pages):
+        engine = ServeEngine(
+            model, params, slots=slots, max_seq=max_seq, n_pages=n_pages,
+            retain_prefix=retain,
+        )
+        import time as _time
+
+        outs = {}
+        t0 = _time.perf_counter()
+        for uid, t, o, prompt in sessions():
+            req = Request(uid=uid, prompt=prompt, max_new_tokens=max_new)
+            engine.submit(req)
+            engine.run()  # session completes and departs before the next
+            outs[(t, o)] = list(req.out_tokens)
+        return engine.summary(wall_s=_time.perf_counter() - t0), outs
+
+    # live-hit oracle for tenant 0's round-1 session: round 0 still
+    # resident (long decode) when the round-1 prompt admits, retention off
+    live = ServeEngine(model, params, slots=slots, max_seq=max_seq)
+    la = Request(uid=0, prompt=np.concatenate([system[0], tails[0][0]]),
+                 max_new_tokens=48)
+    lb = Request(uid=1, prompt=np.concatenate([system[0], tails[0][1]]),
+                 max_new_tokens=max_new)
+    live.submit(la)
+    live.step()
+    live.submit(lb)
+    live.run()
+    live_hit_tokens = list(lb.out_tokens)
+
+    # tight pool: capacity equals the aggregate retained footprint (2 full
+    # system blocks per tenant); each session's decode crosses into a third
+    # block (max_new spans a block boundary), so admissions on a fully
+    # populated tier must reclaim LRU retained pages first
+    tight = slots + 2 * n_tenants
+    records = []
+    for pool_name, n_pages in (("ample", None), ("tight", tight)):
+        cell = {}
+        for retain in (False, True):
+            stats, outs = churn_run(retain, n_pages)
+            cell[retain] = (stats, outs)
+            rec = {
+                "pool": pool_name,
+                "retention": retain,
+                "n_tenants": n_tenants,
+                "rounds": rounds,
+                "sessions": len(schedule),
+                "prefix_hit_rate": round(stats["prefix_hit_rate"], 4),
+                "prefill_tokens": stats["prefill_tokens"],
+                "prefill_tokens_saved": stats["prefill_tokens_saved"],
+                "prefix_retained_hits": stats["sched_prefix_retained_hits"],
+                "retained_reclaims": stats["retained_reclaims"],
+                "pool_pages_retained": stats["pool_pages_retained"],
+                "preempted": stats["preempted"],
+                "tokens_per_s": round(stats["tokens_per_s"], 2),
+            }
+            if retain:
+                off_stats, off_outs = cell[False]
+                on_outs = outs
+                rec["hit_rate_gain"] = round(
+                    stats["prefix_hit_rate"] - off_stats["prefix_hit_rate"],
+                    4)
+                rec["prefill_tokens_delta"] = (
+                    stats["prefill_tokens"] - off_stats["prefill_tokens"])
+                # cold first visits identical with retention on and off
+                rec["first_visit_bitwise_match"] = all(
+                    on_outs[(t, 0)] == off_outs[(t, 0)]
+                    for t in range(n_tenants)
+                )
+                if pool_name == "ample":
+                    # retained hit == live hit, bitwise (§14 oracle)
+                    rec["retained_hit_matches_live_hit"] = (
+                        on_outs[(0, 1)] == live_hit_tokens
+                    )
+            records.append(rec)
+            emit(
+                f"serve.churn.{pool_name}.{'on' if retain else 'off'}",
+                stats["prefill_tokens"],
+                f"hit_rate={rec['prefix_hit_rate']}"
+                f";saved={rec['prefill_tokens_saved']}"
+                f";retained_hits={rec['prefix_retained_hits']}"
+                f";reclaims={rec['retained_reclaims']}",
+            )
+    out_path = _BENCH_SERVE if out_path is None else out_path
+    _append(out_path, {
+        "backend": jax.default_backend(),
+        "sweep": "tenant_churn",
+        "records": records,
+    })
+    return records
+
+
+def run_pool_gauge_bench(*, n_pages=258, n_scratch=2, iters=5000,
+                         out_path: Path | None = None):
+    """Host-side micro-bench of ``PagePool._update_gauges``: a pure-python
+    reserve/alloc/free round-trip per iteration (three gauge refreshes)
+    under ``gauge_mode="incremental"`` (cached instrument handles,
+    skip-if-unchanged) vs. ``"full"`` (re-resolve every gauge by name,
+    re-set all five).  The allocator runs on the host inside every decode
+    cycle, so this overhead lands directly on the schedule phase."""
+    import time as _time
+
+    from repro.serve import PagePool
+    from repro.serve.telemetry import MetricsRegistry
+
+    results = {}
+    for mode in ("incremental", "full"):
+        pool = PagePool(n_pages, n_scratch=n_scratch,
+                        metrics=MetricsRegistry(), gauge_mode=mode)
+        # warm-up so both modes measure steady state, not first-touch
+        for _ in range(100):
+            pool.reserve(1)
+            pool.free(pool.alloc())
+        t0 = _time.perf_counter()
+        for _ in range(iters):
+            pool.reserve(1)
+            pool.free(pool.alloc())
+        results[mode] = (_time.perf_counter() - t0) / iters
+    rec = {
+        "iters": iters,
+        "n_pages": n_pages,
+        "incremental_us_per_op": round(results["incremental"] * 1e6, 3),
+        "full_us_per_op": round(results["full"] * 1e6, 3),
+        "speedup": round(results["full"] / max(results["incremental"], 1e-12),
+                         3),
+    }
+    emit(
+        "serve.pool_gauges", results["incremental"] * 1e6,
+        f"full_us={rec['full_us_per_op']};speedup={rec['speedup']}",
+    )
+    out_path = _BENCH_SERVE if out_path is None else out_path
+    _append(out_path, {
+        "backend": jax.default_backend(),
+        "sweep": "pool_gauges",
+        "records": [rec],
+    })
+    return [rec]
+
+
 def run():
     run_serve_sweep(phase_breakdown=True)
     run_shared_prefix_sweep()
@@ -607,6 +805,8 @@ def run():
     run_oversubscribe_sweep()
     run_spec_decode_sweep()
     run_async_sweep()
+    run_tenant_churn_sweep()
+    run_pool_gauge_bench()
 
 
 if __name__ == "__main__":
@@ -628,6 +828,13 @@ if __name__ == "__main__":
     ap.add_argument("--async-sweep", action="store_true",
                     help="run only the async-vs-sync offered-load curve "
                          "(tokens/s + host_stall_fraction per runtime)")
+    ap.add_argument("--tenant-churn", action="store_true",
+                    help="run only the tenant-churn sweep (rotating "
+                         "sessions over shared system prompts, retention "
+                         "off vs on, ample vs tight pool)")
+    ap.add_argument("--pool-gauges", action="store_true",
+                    help="run only the PagePool gauge-mode micro-bench "
+                         "(incremental vs full _update_gauges)")
     ap.add_argument("--phase-breakdown", action="store_true",
                     help="add per-phase seconds (schedule/prefill/"
                          "decode_dispatch/device_wait/advance) to every "
@@ -644,6 +851,10 @@ if __name__ == "__main__":
         run_spec_decode_sweep()
     elif args.async_sweep:
         run_async_sweep()
+    elif args.tenant_churn:
+        run_tenant_churn_sweep()
+    elif args.pool_gauges:
+        run_pool_gauge_bench()
     elif args.family is not None:
         run_family_sweep(
             families=tuple(args.family) if args.family else

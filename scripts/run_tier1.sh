@@ -21,14 +21,18 @@
 # families/speculation/pressure/faults, completion-thread ledger,
 # deadlock watchdogs, docs/SERVING.md §13), and
 # tests/test_serve_invariants.py (generative random-op audit sweep;
-# hypothesis-gated) — plus the shared_kv paged kernel grid in
-# tests/test_kernels_paged.py.
+# hypothesis-gated),
+# tests/test_serve_prefix_tier.py (persistent prefix-cache tier: retained-
+# page survival + bitwise re-admission, reclaim-before-preemption ordering,
+# auditor detection, evict_storm faults, docs/SERVING.md §14) — plus the
+# shared_kv paged kernel grid in tests/test_kernels_paged.py.
 # CI (.github/workflows/ci.yml) calls exactly this script, so local and CI
 # runs cannot diverge.
 #
-#   scripts/run_tier1.sh --serve-pressure    # run only the pressure gate
-#   scripts/run_tier1.sh --serve-telemetry   # run only the telemetry gate
-#   scripts/run_tier1.sh --serve-async       # run only the async gate
+#   scripts/run_tier1.sh --serve-pressure     # run only the pressure gate
+#   scripts/run_tier1.sh --serve-telemetry    # run only the telemetry gate
+#   scripts/run_tier1.sh --serve-async        # run only the async gate
+#   scripts/run_tier1.sh --serve-prefix-tier  # run only the retention gate
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
@@ -68,6 +72,15 @@ if [[ "${1:-}" == "--serve-async" ]]; then
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m pytest -x -q "${TIMEOUT_ARGS[@]}" \
         tests/test_serve_async.py "$@"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--serve-prefix-tier" ]]; then
+    shift
+    echo "[tier1] serve-prefix-tier gate (retained-page survival, reclaim ordering, evict_storm)"
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m pytest -x -q "${TIMEOUT_ARGS[@]}" \
+        tests/test_serve_prefix_tier.py "$@"
     exit 0
 fi
 

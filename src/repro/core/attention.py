@@ -39,19 +39,24 @@ def inverse_query_transform(o: jax.Array) -> jax.Array:
 
 # Split-KV (sequence-parallel) decode context: when set, decode_attention
 # routes through dist.splitkv with the packed cache sharded along blocks.
-_SPLITKV: dict = {"mesh": None, "axis": "data"}
+# page_affine additionally declares the pools' leading (page) axis sharded
+# along the same mesh axis (page-affine allocator — serve/pages.py), so the
+# walk reads each page only on the chip that stores it.
+_SPLITKV: dict = {"mesh": None, "axis": "data", "page_affine": False}
 
 
 class use_splitkv:
     """Context manager enabling cross-chip split-KV decode (long-context,
     small-batch shapes).  Used by the launcher/dry-run around lowering."""
 
-    def __init__(self, mesh, axis: str = "data"):
+    def __init__(self, mesh, axis: str = "data", *, page_affine: bool = False):
         self.mesh, self.axis = mesh, axis
+        self.page_affine = page_affine
 
     def __enter__(self):
         self._prev = dict(_SPLITKV)
         _SPLITKV["mesh"], _SPLITKV["axis"] = self.mesh, self.axis
+        _SPLITKV["page_affine"] = self.page_affine
         return self
 
     def __exit__(self, *exc):
@@ -195,6 +200,7 @@ def _paged_decode_attention(
         return _sk.splitkv_paged_decode_attention(
             q, cache, _SPLITKV["mesh"], axis=_SPLITKV["axis"],
             sm_scale=sm_scale, d_v=d_v, impl=impl, num_splits=num_splits,
+            page_affine=_SPLITKV["page_affine"],
         )
     h_kv = cache.kw.shape[1]
     qt = query_transform(q, h_kv)

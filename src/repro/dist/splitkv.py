@@ -169,22 +169,32 @@ def splitkv_paged_decode_attention(
     d_v: int | None = None,
     impl: str = "auto",
     num_splits: int | str | None = "auto",
+    page_affine: bool = False,
 ):
-    """Sequence-parallel *paged* decode: shard the page-table **walk**, not
-    the pools.
+    """Sequence-parallel *paged* decode: shard the page-table **walk**, and
+    optionally the pool *storage* behind it.
 
     The paged cache scatters a sequence's blocks across arbitrary pool pages,
     so the pools themselves have no contiguous block axis to shard; instead
     the ``page_table`` columns (dim 1 of ``[B, nb_max]``) are sharded along
-    ``axis`` — each chip walks a contiguous slice of every sequence's table
-    against replicated pools, clips ``pack_blocks`` to its slice, and the
-    per-chip flash partials merge with the usual lse collectives.  The bf16
-    residual rides with the last shard, exactly as in the dense path.
+    ``axis`` — each chip walks a contiguous slice of every sequence's table,
+    clips ``pack_blocks`` to its slice, and the per-chip flash partials merge
+    with the usual lse collectives.  The bf16 residual rides with the last
+    shard, exactly as in the dense path.
 
-    Replicating the pools is the right at-rest layout for serving: the pools
-    are written by the (replicated) paged residual flush and read by every
-    chip's slice of the walk; sharding pool *storage* across chips is future
-    work (it needs a page-affine allocator in serve/pages.py).
+    ``page_affine=False`` (default) walks the table against *replicated*
+    pools — every chip stores every page.  ``page_affine=True`` additionally
+    shards the pools' leading (page) axis along the same mesh axis, under
+    the page-affine allocator contract (serve/pages.py with ``shards > 1``):
+    every page referenced at table column ``j`` lives in shard
+    ``j // nb_local`` — the chip that walks that column — so each chip walks
+    its table slice against only its own ``n_pages / n`` pages and aggregate
+    pool bytes scale with the mesh.  The local walk rebases global page ids
+    into the shard (``tbl - idx * pp_local``); entries that violate affinity
+    would clamp into range and read garbage, but by the allocator invariant
+    the only out-of-shard entries are scratch ids in masked (beyond
+    ``pack_blocks``) columns — the same masking the padded-table path
+    already relies on.
 
     q: [B, 1, h_q, d_k]; cache: PagedQuantKVCache.  Returns
     [B, 1, h_q, d_v], replicated along ``axis``.  Composes with the
@@ -212,19 +222,30 @@ def splitkv_paged_decode_attention(
 
     shared = cache.shared_kv
     rep = PS()
+    # pool fields shard their leading (page) axis under page affinity; the
+    # residuals stay replicated (they are slot-indexed, not page-indexed)
+    pool = PS(axis) if page_affine else rep
+    if page_affine and cache.kw.shape[0] % n:
+        raise ValueError(
+            f"page_affine needs the pool page count ({cache.kw.shape[0]}) "
+            f"divisible by the {axis!r} axis size ({n}); allocate the pool "
+            "with shards equal to the axis size (serve/pages.py)"
+        )
     if shared:
         operands = (
             qt, cache.kw, cache.k_scale, cache.k_zero,
             cache.k_res, table, cache.pack_blocks, cache.res_len,
         )
-        in_specs = (rep,) * 5 + (PS(None, axis), rep, rep)
+        in_specs = (rep, pool, pool, pool, rep, PS(None, axis), rep, rep)
     else:
         operands = (
             qt, cache.kw, cache.k_scale, cache.k_zero,
             cache.vw, cache.v_scale, cache.v_zero,
             cache.k_res, cache.v_res, table, cache.pack_blocks, cache.res_len,
         )
-        in_specs = (rep,) * 9 + (PS(None, axis), rep, rep)
+        in_specs = (
+            (rep,) + (pool,) * 6 + (rep, rep) + (PS(None, axis), rep, rep)
+        )
 
     def local(*args):
         if shared:
@@ -238,6 +259,13 @@ def splitkv_paged_decode_attention(
         lo = idx * nb_local
         pb_local = jnp.clip(pb_ - lo, 0, nb_local)
         rl_local = jnp.where(idx == n - 1, rl_, 0)
+        if page_affine:
+            # rebase global page ids into this shard's pool slice; by the
+            # allocator's affinity invariant every valid entry in this
+            # shard's table columns is shard-local, so only masked entries
+            # (scratch ids beyond pb_local) clamp
+            pp_local = kw_.shape[0]
+            tbl_ = jnp.clip(tbl_ - idx * pp_local, 0, pp_local - 1)
         o, lse = pg_ops.paged_bitdecode_attention(
             qt_, kw_, ks_, kz_, vw_, vs_, vz_, kres_, vres_,
             tbl_, pb_local, rl_local,

@@ -53,15 +53,16 @@ _CACHE_FIELD_ROLES = {
     "res_len": (1, {0: "batch"}),
 }
 
-# Paged layout: pools ([P, H, ...]) replicate their page dim (pages are
-# scattered arbitrarily, only the table *walk* is sequence-parallel — see
-# dist.splitkv.splitkv_paged_decode_attention) and shard KV heads over
-# "model"; the page_table columns carry the "blocks" role so the at-rest
-# placement matches the sharded walk.  Prefix sharing rides this placement
-# unchanged: a shared page id may appear in several table rows (or twice in
-# one row's shard), and because every chip holds the full pools each shard
-# dereferences it locally — sharing needs no cross-chip coordination, and
-# copy-on-write repoints are plain table updates under the same spec.
+# Paged layout: by default the pools ([P, H, ...]) replicate their page dim
+# (pages are scattered arbitrarily, only the table *walk* is
+# sequence-parallel — see dist.splitkv.splitkv_paged_decode_attention) and
+# shard KV heads over "model"; the page_table columns carry the "blocks"
+# role so the at-rest placement matches the sharded walk.  Prefix sharing
+# rides this placement unchanged: a shared page id may appear in several
+# table rows (or twice in one row's shard), and because every chip holds
+# the full pools each shard dereferences it locally — sharing needs no
+# cross-chip coordination, and copy-on-write repoints are plain table
+# updates under the same spec.
 _PAGED_FIELD_ROLES = {
     "kw": (4, {1: "heads"}),
     "k_scale": (3, {1: "heads"}),
@@ -74,6 +75,22 @@ _PAGED_FIELD_ROLES = {
     "page_table": (2, {0: "batch", 1: "blocks"}),
     "pack_blocks": (1, {0: "batch"}),
     "res_len": (1, {0: "batch"}),
+}
+
+# Page-affine layout (docs/SERVING.md §14): the pools' leading (page) dim
+# ALSO shards along ``seq_ax``, matching the allocator contract of
+# serve/pages.py (``shards`` = axis size): the page backing table column j
+# lives only on the chip that walks column j, so aggregate pool bytes scale
+# linearly with the mesh.  Residuals stay batch/heads-placed (slot-indexed),
+# and the table keeps its column sharding.
+_PAGED_AFFINE_FIELD_ROLES = {
+    **_PAGED_FIELD_ROLES,
+    "kw": (4, {0: "pages", 1: "heads"}),
+    "k_scale": (3, {0: "pages", 1: "heads"}),
+    "k_zero": (3, {0: "pages", 1: "heads"}),
+    "vw": (4, {0: "pages", 1: "heads"}),
+    "v_scale": (3, {0: "pages", 1: "heads"}),
+    "v_zero": (3, {0: "pages", 1: "heads"}),
 }
 
 
@@ -94,15 +111,19 @@ def _entry(names, mesh, dim: int):
     return names if len(names) > 1 else names[0]
 
 
-def _cache_specs(c, mesh, batch_axes, seq_ax):
+def _cache_specs(c, mesh, batch_axes, seq_ax, page_affine=False):
     role_axes = {
         "batch": batch_axes,
         "heads": ("model",),
         "blocks": (seq_ax,) if seq_ax else (),
+        "pages": (seq_ax,) if seq_ax else (),
     }
-    roles_table = (
-        _PAGED_FIELD_ROLES if isinstance(c, PagedQuantKVCache) else _CACHE_FIELD_ROLES
-    )
+    if isinstance(c, PagedQuantKVCache):
+        roles_table = (
+            _PAGED_AFFINE_FIELD_ROLES if page_affine else _PAGED_FIELD_ROLES
+        )
+    else:
+        roles_table = _CACHE_FIELD_ROLES
 
     def field_spec(name: str, arr):
         if arr is None:
@@ -125,15 +146,27 @@ def _cache_specs(c, mesh, batch_axes, seq_ax):
 
 
 def decode_state_specs(model, mesh, *, global_batch: int, seq_ax: str | None = None,
-                       paged: bool = False, n_pages: int | None = None):
+                       paged: bool = False, n_pages: int | None = None,
+                       nb_max: int | None = None, page_affine: bool = False):
     """PartitionSpec tree matching ``model.init_decode_state`` structure
-    (or ``model.init_paged_decode_state`` when ``paged``)."""
+    (or ``model.init_paged_decode_state`` when ``paged``).
+
+    ``page_affine`` (paged only) additionally shards the pools' page dim
+    along ``seq_ax`` — pair with serve/pages.py's sharded allocator and
+    ``splitkv_paged_decode_attention(page_affine=True)``.  Placement drops
+    an axis whose size does not divide the *probed* dim, so callers whose
+    real state differs from the default probe shape (the serve engine's
+    mesh-aligned ``nb_max``, its pool size) must pass ``nb_max`` /
+    ``n_pages`` explicitly."""
     cfg = model.cfg
     batch_axes = _batch_axes(mesh, global_batch)
     # structure only — nb just has to be positive; actual decode states may
-    # have any block count, specs are rank/dim-role based
-    max_seq = 4 * getattr(cfg, "kv_block", 128)
-    nb_max = max_seq // getattr(cfg, "kv_block", 128)
+    # have any block count, specs are rank/dim-role based.  Divisibility is
+    # checked against these probe dims though, so nb_max/n_pages overrides
+    # matter whenever an axis must actually split the dim (page_affine).
+    if nb_max is None:
+        nb_max = 4
+    max_seq = nb_max * getattr(cfg, "kv_block", 128)
     # closure (not args) so batch/max_seq stay concrete python ints
     if paged:
         np_ = n_pages if n_pages is not None else global_batch * (nb_max + 1)
@@ -158,7 +191,7 @@ def decode_state_specs(model, mesh, *, global_batch: int, seq_ax: str | None = N
 
     def node(x):
         if isinstance(x, _cache_types):
-            return _cache_specs(x, mesh, batch_axes, seq_ax)
+            return _cache_specs(x, mesh, batch_axes, seq_ax, page_affine)
         return generic(x)
 
     return jax.tree.map(

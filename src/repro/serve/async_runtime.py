@@ -353,6 +353,10 @@ class AsyncRunner:
                 victim = eng._pick_victim()
                 if victim is not None:
                     eng._preempt(victim)
+            if (eng.paged and eng.faults is not None
+                    and eng.faults.fires(
+                        "evict_storm", cycle=eng._cycle)):
+                eng.pool.reclaim_retained(eng.faults.storm_pages)
         # prefill admission overlaps the in-flight decode steps: the bucketed
         # prefill is dispatched (device-ordered behind them) and its first
         # tokens stay on device (defer_first)
@@ -508,8 +512,10 @@ class AsyncRunner:
             model, impl, quant_impl = eng.model, eng._impl, eng._quant_impl
             mesh, axis = eng.mesh, eng.splitkv_axis
 
+            affine = getattr(eng, "page_affine", False)
+
             def _astep_sk(p, s, t):
-                with catt.use_splitkv(mesh, axis):
+                with catt.use_splitkv(mesh, axis, page_affine=affine):
                     logits, st = model.decode_step(
                         p, s, t, impl=impl, quant_impl=quant_impl
                     )

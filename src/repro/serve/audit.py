@@ -4,7 +4,8 @@ Four views of page ownership must agree at every cycle boundary, and each
 is maintained by different code:
 
 1. the **pool** (`repro.serve.pages.PagePool`) — refcounts, holder tags,
-   the free list, and the commitment budget (``n_used + reserved``);
+   the free list, the RETAINED tier (refcount-0 pages kept for prefix
+   re-admission), and the commitment budget (``n_used + reserved``);
 2. the **page tables** (the engine's host mirror ``_table``) — which pool
    page each slot's block column resolves to on device;
 3. the **prefix index** (`repro.serve.scheduler.PrefixIndex`) — which
@@ -66,12 +67,13 @@ class AuditReport:
 
 def _audit_pool(pool, out: list) -> int:
     """Pool-internal accounting: free list vs refcounts vs holders vs the
-    commitment budget."""
-    free = list(pool._free)
+    retained tier vs the commitment budget."""
+    free = pool.free_pages()
     if len(set(free)) != len(free):
         dups = sorted({p for p in free if free.count(p) > 1})
         out.append(f"free list holds duplicate page(s) {dups}")
     free_set = set(free)
+    retained_set = set(pool.retained_pages())
     for page in free_set:
         if page < pool.n_scratch:
             out.append(f"scratch page {page} on the free list")
@@ -80,15 +82,31 @@ def _audit_pool(pool, out: list) -> int:
                 f"page {page} is on the free list with refcount "
                 f"{pool.refcount(page)}"
             )
+        if page in retained_set:
+            out.append(f"page {page} is both free and retained")
+    for page in retained_set:
+        if page < pool.n_scratch:
+            out.append(f"scratch page {page} in the retained tier")
+        if pool.refcount(page) != 0:
+            out.append(
+                f"retained page {page} has refcount {pool.refcount(page)} "
+                "(the tier holds only refcount-0 pages)"
+            )
+        if pool.holders(page):
+            out.append(
+                f"retained page {page} still lists holders "
+                f"{pool.holders(page)}"
+            )
     for page in range(pool.n_scratch, pool.n_pages):
         rc = pool.refcount(page)
         if rc < 0:
             out.append(f"page {page} has negative refcount {rc}")
-        if rc > 0 and page in free_set:
+        if rc > 0 and (page in free_set or page in retained_set):
             continue  # already reported above
-        if rc == 0 and page not in free_set:
+        if rc == 0 and page not in free_set and page not in retained_set:
             out.append(
-                f"leaked page {page}: refcount 0 but not on the free list"
+                f"leaked page {page}: refcount 0 but on neither the free "
+                "list nor the retained tier"
             )
         holders = pool.holders(page)
         if rc > 0 and len(holders) != rc:
@@ -224,7 +242,7 @@ def audit_engine(engine) -> AuditReport:
     if index is not None:
         report.index_nodes_checked = len(index._meta)
         for page, (digest, parent, _toks) in index._meta.items():
-            if pool.refcount(page) <= 0:
+            if pool.refcount(page) <= 0 and not pool.is_retained(page):
                 out.append(
                     f"dangling prefix-index node: page {page} is registered "
                     "but free"
@@ -244,6 +262,14 @@ def audit_engine(engine) -> AuditReport:
                 out.append(
                     f"prefix-index digest entry maps to unregistered page "
                     f"{page}"
+                )
+        # retained pages exist only to be re-discovered: one with no index
+        # node is dead weight the reclaim path can never justify keeping
+        for page in pool.retained_pages():
+            if page not in index._meta:
+                out.append(
+                    f"retained page {page} is not registered in the prefix "
+                    "index"
                 )
 
     _audit_spec(engine, out)

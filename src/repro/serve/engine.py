@@ -148,6 +148,9 @@ STAT_COUNTERS = (
     # budget_retired = hit max_new_tokens without EOS
     "budget_retired", "preempted", "preempt_remat_tokens",
     "expired", "cancelled", "errored", "audits", "faults_injected",
+    # prefix-retention tier (docs/SERVING.md §14): retained pages evicted
+    # back to the free list (LRU reclaim under pressure or evict_storm)
+    "retained_reclaims",
     # self-speculative decoding (docs/SERVING.md §11)
     "spec_cycles", "spec_draft_tokens",
     "spec_accepted_tokens", "spec_rejected_tokens",
@@ -196,7 +199,9 @@ class ServeEngine:
                  n_pages: int | None = None, min_bucket: int = 16,
                  mesh=None, splitkv_axis: str = "data",
                  splitkv: str = "auto", share_prefix: bool = True,
-                 spec_tail: bool = True, reserve_policy: str = "worst_case",
+                 spec_tail: bool = True, retain_prefix: bool = False,
+                 page_affine: bool = False,
+                 reserve_policy: str = "worst_case",
                  expected_quantile: float = 0.5,
                  preempt_policy: str = "youngest", audit_every: int = 0,
                  faults=None, strict: bool = False,
@@ -222,6 +227,19 @@ class ServeEngine:
         adopts a matching donor block as the speculative flush destination
         when a prompt ends mid-block — the copy-on-write candidate (see
         docs/SERVING.md).
+
+        Prefix retention + page affinity (docs/SERVING.md §14):
+        ``retain_prefix=True`` keeps prefix-registered pages in the pool's
+        evictable RETAINED tier after their last holder departs, so a later
+        admission over the same prompt re-adopts them at zero prefill cost;
+        reclaim (LRU) happens only when the free list runs dry, *before*
+        any preemption fires.  ``page_affine=True`` (requires ``mesh`` and
+        a paged family) shards the page pool's free list per mesh-axis
+        shard and pins every page to the shard owning its page-table
+        column, matching a leading-axis device sharding of the pools
+        (`repro.dist.state_specs.decode_state_specs` with
+        ``page_affine=True``) — aggregate pool capacity then scales with
+        the mesh instead of being replicated per chip.
 
         Pressure handling (docs/SERVING.md §10): ``reserve_policy`` /
         ``expected_quantile`` select the admission reservation (worst-case
@@ -385,8 +403,11 @@ class ServeEngine:
                 f"{tuple(getattr(mesh, 'axis_names', ()))}"
             )
         if mesh is not None and splitkv != "never":
+            _affine = bool(page_affine)
+
             def _split_step(p, s, t):
-                with catt.use_splitkv(mesh, splitkv_axis):
+                with catt.use_splitkv(mesh, splitkv_axis,
+                                      page_affine=_affine):
                     return model.decode_step(
                         p, s, t, impl=impl, quant_impl=quant_impl
                     )
@@ -395,15 +416,32 @@ class ServeEngine:
         self.tokens = np.zeros((slots, 1), np.int32)
         self._occupancy: list[float] = []
 
+        self.page_affine = bool(page_affine)
+        if self.page_affine and mesh is None:
+            raise ValueError("page_affine=True requires a mesh")
+        if self.page_affine and not self.paged:
+            raise ValueError("page_affine=True requires a paged family")
+        if self.page_affine and splitkv == "never":
+            raise ValueError(
+                "page_affine=True needs the sharded split-KV walk "
+                "(splitkv='auto' or 'always')"
+            )
         if self.paged:
             nb_max = -(-max_seq // self.block_n)
             if mesh is not None:
                 n = int(mesh.shape[splitkv_axis])  # pad-free sharded table walk
                 nb_max = -(-nb_max // n) * n
             self.nb_max = nb_max
-            self.n_pages = (
-                n_pages if n_pages is not None else slots * nb_max + slots
-            )
+            shards = int(mesh.shape[splitkv_axis]) if self.page_affine else 1
+            self._pool_shards = shards
+            self._nb_local = nb_max // shards
+            if n_pages is not None:
+                self.n_pages = n_pages
+            else:
+                # full provisioning; page-affine adds one slot-page per
+                # shard so shard 0's scratch range doesn't eat into its
+                # allocatable share (n_pages stays a multiple of shards)
+                self.n_pages = slots * nb_max + slots * shards
             self.state = model.init_paged_decode_state(
                 slots, n_pages=self.n_pages, nb_max=nb_max
             )
@@ -429,15 +467,41 @@ class ServeEngine:
                 for f in qcache._PAGED_POOL_FIELDS
                 if getattr(pc, f) is not None
             ) // self.n_pages
+            if self.page_affine:
+                # place the pools page-sharded at rest: each chip holds
+                # n_pages/shards pages (plus its table-column slice), so
+                # per-chip pool bytes stay constant as the mesh grows
+                from jax.sharding import NamedSharding
+                from repro.dist.state_specs import decode_state_specs
+                if self.n_pages % shards:
+                    raise ValueError(
+                        f"page_affine needs n_pages ({self.n_pages}) "
+                        f"divisible by the {splitkv_axis!r} axis size "
+                        f"({shards})"
+                    )
+                specs = decode_state_specs(
+                    model, mesh, global_batch=slots, seq_ax=splitkv_axis,
+                    paged=True, n_pages=self.n_pages, nb_max=nb_max,
+                    page_affine=True,
+                )
+                self.state = jax.device_put(
+                    self.state,
+                    jax.tree.map(
+                        lambda s: None if s is None else NamedSharding(mesh, s),
+                        specs, is_leaf=lambda x: x is None,
+                    ),
+                )
             self.pool = pg.PagePool(
                 self.n_pages, n_scratch=slots, page_bytes=self.kv_page_bytes,
-                metrics=self.metrics,
+                metrics=self.metrics, shards=self._pool_shards,
             )
             share = share_prefix and spec.supports_prior
+            self.retain_prefix = retain_prefix and share
             self.sched = Scheduler(
                 slots=slots, pool=self.pool, block_n=self.block_n,
                 max_seq=max_seq, min_bucket=min_bucket,
                 share_prefix=share, spec_tail=spec_tail and share,
+                retain_prefix=self.retain_prefix,
                 exact_buckets=spec.exact_prefill,
                 reserve_policy=reserve_policy,
                 expected_quantile=expected_quantile,
@@ -482,6 +546,8 @@ class ServeEngine:
         else:
             # exact-length shim: dense state, per-request prefill, no pool
             self.pool = None
+            self.retain_prefix = False
+            self._pool_shards = 1
             self.sched = Scheduler(
                 slots=slots, pool=None, block_n=self.block_n, max_seq=max_seq,
                 share_prefix=False, spec_tail=False, exact_buckets=True,
@@ -668,6 +734,9 @@ class ServeEngine:
                     self.sched.stats["prefix_hit_blocks"]
                     / max(1, self.sched.stats["prefix_lookup_blocks"])
                 ),
+                # prefix-retention tier (docs/SERVING.md §14)
+                pool_pages_retained=self.pool.n_retained,
+                pool_shards=self._pool_shards,
             )
         return out
 
@@ -700,6 +769,10 @@ class ServeEngine:
                 victim = self._pick_victim()
                 if victim is not None:
                     self._preempt(victim)
+            if (self.paged and self.faults is not None
+                    and self.faults.fires(
+                        "evict_storm", cycle=self._cycle)):
+                self.pool.reclaim_retained(self.faults.storm_pages)
         if self.paged:
             self._admit_and_prefill()
         else:
@@ -838,6 +911,10 @@ class ServeEngine:
                 victim = self._pick_victim()
                 if victim is not None:
                     self._preempt(victim)
+            if (self.paged and self.faults is not None
+                    and self.faults.fires(
+                        "evict_storm", cycle=self._cycle)):
+                self.pool.reclaim_retained(self.faults.storm_pages)
         if self.paged:
             self._admit_and_prefill()
         else:
@@ -1230,6 +1307,10 @@ class ServeEngine:
             return False
         if self.splitkv == "always":
             return True
+        if self.page_affine:
+            # sharded pool storage: the plain step would gather every
+            # shard's pages to every chip — the sharded walk is the point
+            return True
         axis_size = int(self.mesh.shape[self.splitkv_axis])
         if axis_size <= 1:
             return False
@@ -1243,8 +1324,8 @@ class ServeEngine:
 
     # ----------------------------------------------------- paged admission
 
-    def _alloc_page(self, req: Request, *,
-                    admission: bool = False) -> int | None:
+    def _alloc_page(self, req: Request, *, admission: bool = False,
+                    block: int | None = None) -> int | None:
         """Pool alloc charged to ``req``: converts one of its reservation
         units and joins its page list.
 
@@ -1258,6 +1339,15 @@ class ServeEngine:
         requeued).  Admission-time allocs never extend: ``reserve_need``
         floors the reservation at the prompt's own block count, so
         preemption can only fire on the decode flush path.
+
+        Retention ordering: ``pool.reserve``/``pool.alloc`` drain the
+        RETAINED tier (LRU) before reporting pressure, so every retained
+        page is reclaimed before any victim is preempted here.
+
+        ``block`` (page-affine mode) pins the page to the shard owning
+        that table column; when the shard is dry — free list empty *and*
+        no retained page in the shard — victims are preempted until one
+        of their pages refills it (or the requester self-preempts).
 
         An injected ``alloc_fail`` fault exercises the same victim path
         deterministically (the alloc itself then proceeds — recovery, not
@@ -1280,7 +1370,25 @@ class ServeEngine:
                     return None
                 self._preempt(victim)
             req.reserved_pages += 1
-        page = self.pool.alloc(owner=req.uid)
+        shard = None
+        if self.page_affine and block is not None:
+            shard = block // self._nb_local
+            while not self.pool.shard_available(shard):
+                victim = self._pick_victim(exclude=req)
+                if victim is None:
+                    if admission:
+                        # mid-splice: the bucket adoption cannot be torn
+                        # down cleanly — full per-shard provisioning (the
+                        # affine default) makes this unreachable
+                        raise RuntimeError(
+                            f"page-affine shard {shard} exhausted at "
+                            f"admission of request {req.uid} with no "
+                            "preemptible victim"
+                        )
+                    self._preempt(req)
+                    return None
+                self._preempt(victim)
+        page = self.pool.alloc(owner=req.uid, shard=shard)
         req.reserved_pages -= 1
         req.pages.append(page)
         return page
@@ -1394,10 +1502,11 @@ class ServeEngine:
             s = len(req.shared_pages)
             sl = req.suffix_len(self.block_n)
             n_blocks = sl // self.block_n
-            # covered by the reservation floor — never preempts here
+            # covered by the reservation floor — never preempts here;
+            # page-affine: fresh block j lands at table column s + j
             pgs = [
-                self._alloc_page(req, admission=True)
-                for _ in range(n_blocks)
+                self._alloc_page(req, admission=True, block=s + j)
+                for j in range(n_blocks)
             ]
             self._table[req.slot, :] = req.slot  # fresh scratch row
             self._table[req.slot, :s] = req.shared_pages
@@ -1493,13 +1602,15 @@ class ServeEngine:
                 blk = (pos + j) // self.block_n
                 entry = int(self._table[req.slot, blk])
                 if entry < self.slots:  # still scratch -> fresh private page
-                    page = self._alloc_page(req)
+                    page = self._alloc_page(req, block=blk)
                     if page is None:
                         continue  # self-preempted: requeued, row reset
                     self._table[req.slot, blk] = page
                     self._table_dirty = True
                 elif self.pool.refcount(entry) > 1:  # shared -> copy-on-write
-                    page = self._alloc_page(req)
+                    # page-affine: src and dst both back column blk, so the
+                    # replica stays in the shard that owns the column
+                    page = self._alloc_page(req, block=blk)
                     if page is None:
                         continue  # self-preempted: requeued, row reset
                     cow_src.append(entry)

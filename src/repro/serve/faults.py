@@ -20,7 +20,13 @@ at exactly one place in the cycle:
 * ``poison_logits`` — consulted per active request per cycle; a firing
   overwrites that request's logits row with NaN *after* the decode step,
   exercising the engine's step-level error isolation (the request retires
-  ``ERRORED``; the engine loop and every other request are unaffected).
+  ``ERRORED``; the engine loop and every other request are unaffected);
+* ``evict_storm`` — consulted once per cycle (schedule phase); a firing
+  force-reclaims up to ``storm_pages`` pages from the pool's RETAINED tier
+  (LRU order, prefix index invalidated atomically —
+  ``PagePool.reclaim_retained``), exercising retention-tier invalidation:
+  a post-storm admission must fall back to a cold prefill with outputs
+  bitwise unchanged.
 
 Determinism: each site draws from its own ``numpy`` Generator seeded from
 ``(seed, site)``, and decisions depend only on the site's consultation
@@ -49,7 +55,8 @@ from __future__ import annotations
 import numpy as np
 
 #: the named engine sites, in consultation-stream order
-SITES = ("alloc_fail", "forced_preempt", "delayed_release", "poison_logits")
+SITES = ("alloc_fail", "forced_preempt", "delayed_release", "poison_logits",
+         "evict_storm")
 
 
 class FaultPlan:
@@ -57,13 +64,16 @@ class FaultPlan:
 
     def __init__(self, seed: int = 0, *, alloc_fail: float = 0.0,
                  forced_preempt: float = 0.0, delayed_release: float = 0.0,
-                 poison_logits: float = 0.0, delay_cycles: int = 2,
+                 poison_logits: float = 0.0, evict_storm: float = 0.0,
+                 delay_cycles: int = 2, storm_pages: int = 4,
                  max_fires: dict | None = None, fire_at: dict | None = None,
                  fire_at_token: dict | None = None):
         """``alloc_fail``/``forced_preempt``/``delayed_release``/
-        ``poison_logits`` are per-consultation firing probabilities in
-        ``[0, 1]``.  ``delay_cycles`` is how long a delayed release parks
-        pages.  ``max_fires`` maps site → max total firings; ``fire_at``
+        ``poison_logits``/``evict_storm`` are per-consultation firing
+        probabilities in ``[0, 1]``.  ``delay_cycles`` is how long a delayed
+        release parks pages; ``storm_pages`` is how many retained pages one
+        ``evict_storm`` firing reclaims (LRU-first; fewer when the tier is
+        shallower).  ``max_fires`` maps site → max total firings; ``fire_at``
         maps site → iterable of 0-based consultation indices that fire
         unconditionally (deterministic targeting); ``fire_at_token`` maps
         site → iterable of ``(uid, progress)`` pairs that fire when the
@@ -74,6 +84,7 @@ class FaultPlan:
             "forced_preempt": forced_preempt,
             "delayed_release": delayed_release,
             "poison_logits": poison_logits,
+            "evict_storm": evict_storm,
         }
         for site, rate in rates.items():
             if not 0.0 <= rate <= 1.0:
@@ -85,6 +96,7 @@ class FaultPlan:
         self.seed = seed
         self.rates = rates
         self.delay_cycles = delay_cycles
+        self.storm_pages = storm_pages
         self.max_fires = dict(max_fires or {})
         self.fire_at = {
             site: frozenset(idx) for site, idx in (fire_at or {}).items()

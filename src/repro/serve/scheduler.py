@@ -121,6 +121,12 @@ class Request:
     replay_left: int = 0           # decoded tokens still to teacher-force
     pending_token: int | None = None  # decoded-but-unfed token at preemption
     preemptions: int = 0
+    # shared-block count of the FIRST admission, frozen so rematerializing
+    # re-admissions reproduce the original prefill computation exactly: a
+    # victim whose prompt entered cold must re-prefill cold even if its own
+    # pages now sit in the RETAINED tier (suffix-over-dequantized-prior is
+    # not bitwise vs. a raw full prefill, SERVING.md §9/§14)
+    orig_shared_blocks: int | None = None
     admit_seq: int = -1            # global admission order (victim policy)
     admit_cycle: int = -1          # engine cycle of the last admission
     # ---- self-speculative decoding (engine spec_k > 1, SERVING.md §11) ----
@@ -243,6 +249,12 @@ class PrefixIndex:
                 self._children.setdefault(parent, []).append(page)
             parent = h
 
+    def is_registered(self, page: int) -> bool:
+        """Whether ``page`` holds a live chain node — the pool's
+        ``retainable`` predicate: only pages the index can re-discover are
+        worth keeping in the RETAINED tier."""
+        return page in self._meta
+
     def forget_page(self, page: int) -> None:
         """Drop a page's node (page died, or its content is about to be
         overwritten in place)."""
@@ -264,6 +276,7 @@ class Scheduler:
     def __init__(self, *, slots: int, pool: PagePool | None, block_n: int,
                  max_seq: int, min_bucket: int = 16,
                  share_prefix: bool = True, spec_tail: bool = True,
+                 retain_prefix: bool = False,
                  exact_buckets: bool = False, namespace: str = "default",
                  reserve_policy: str = "worst_case",
                  expected_quantile: float = 0.5, strict: bool = False,
@@ -286,7 +299,14 @@ class Scheduler:
         per-request ``deadline_s`` enforcement.  ``metrics`` shares the
         engine's `repro.serve.telemetry.MetricsRegistry` (counters register
         under the ``sched_`` prefix; default: a private registry) — the
-        ``stats`` property keeps the historical unprefixed dict view."""
+        ``stats`` property keeps the historical unprefixed dict view.
+
+        ``retain_prefix`` (needs ``share_prefix``) turns on the pool's
+        RETAINED tier: prefix-registered pages survive their last holder's
+        departure as evictable LRU entries, and admission promotes them
+        back at zero cost (counted as ``prefix_retained_hits``).  Off by
+        default — with retention on, a drained engine intentionally keeps
+        registered pages out of the free list."""
         if reserve_policy not in ("worst_case", "expected"):
             raise ValueError(f"unknown reserve_policy {reserve_policy!r}")
         if not 0.0 <= expected_quantile <= 1.0:
@@ -305,9 +325,12 @@ class Scheduler:
         self.strict = strict
         self.clock = clock if clock is not None else time.monotonic
         self.index: PrefixIndex | None = None
+        self.retain_prefix = retain_prefix and share_prefix and pool is not None
         if share_prefix and pool is not None:
             self.index = PrefixIndex(namespace, block_n)
             pool.on_release = self.index.forget_page
+            if self.retain_prefix:
+                pool.retainable = self.index.is_registered
         self.waiting: deque[Request] = deque()
         self.active: dict[int, Request] = {}  # slot -> request
         self._admit_seq = 0
@@ -320,7 +343,8 @@ class Scheduler:
     _STAT_KEYS = (
         "submitted", "admitted", "completed", "rejected",
         "backpressure_events", "prefix_hit_requests", "prefix_hit_blocks",
-        "prefix_lookup_blocks", "spec_tail_adoptions",
+        "prefix_lookup_blocks", "prefix_retained_hits",
+        "spec_tail_adoptions",
     )
 
     @property
@@ -390,6 +414,12 @@ class Scheduler:
             req.chain = self.index.chain(req.prompt)
         chain = req.chain
         cap = (req.prompt_len - 1) // self.block_n  # keep >= 1 suffix token
+        if req.preemptions and req.orig_shared_blocks is not None:
+            # rematerialization must replay the original admission's exact
+            # prefill: never share MORE blocks than the first admission did
+            # (the wider hit would swap a raw-bf16 prefill for a suffix
+            # prefill over a dequantized prior — not bitwise, §9)
+            cap = min(cap, req.orig_shared_blocks)
         shared = self.index.lookup(chain[:cap])
         spec = None
         s = len(shared)
@@ -436,18 +466,32 @@ class Scheduler:
             req = self.waiting[0]
             shared, spec, chain = self._match_prefix(req)
             need = self.reserve_need(req, len(shared))
-            if self.pool is not None and not self.pool.reserve(
-                need, owner=req.uid
-            ):
-                self.metrics.inc("sched_backpressure_events")
-                break  # strict FIFO: nothing overtakes the head
-            self.waiting.popleft()
+            promoted = 0
             if self.pool is not None:
+                # retain BEFORE reserving: reserve() reclaims retained
+                # pages under budget pressure, and the LRU tail it would
+                # evict can be exactly the chain _match_prefix resolved.
+                # Promotion is budget-neutral (a retained page already
+                # counts in n_used), so retain-first never turns a
+                # would-have-succeeded reserve into backpressure.
                 for page in shared:
-                    self.pool.retain(page, owner=req.uid)
+                    promoted += bool(self.pool.retain(page, owner=req.uid))
                 if spec is not None:
-                    self.pool.retain(spec, owner=req.uid)
+                    promoted += bool(self.pool.retain(spec, owner=req.uid))
+                if not self.pool.reserve(need, owner=req.uid):
+                    # retract: promoted pages fall back to RETAINED (at
+                    # the MRU end — they were just touched), plain shared
+                    # refs simply drop
+                    for page in shared:
+                        self.pool.free(page, owner=req.uid)
+                    if spec is not None:
+                        self.pool.free(spec, owner=req.uid)
+                    self.metrics.inc("sched_backpressure_events")
+                    break  # strict FIFO: nothing overtakes the head
+            self.waiting.popleft()
             req.shared_pages = list(shared)
+            if req.orig_shared_blocks is None:
+                req.orig_shared_blocks = len(shared)
             req.spec_page = spec
             req.chain = chain
             req.pages = list(shared) + ([spec] if spec is not None else [])
@@ -462,6 +506,8 @@ class Scheduler:
             if shared:
                 self.metrics.inc("sched_prefix_hit_requests")
                 self.metrics.inc("sched_prefix_hit_blocks", len(shared))
+            if promoted:
+                self.metrics.inc("sched_prefix_retained_hits", promoted)
             if self.index is not None:
                 self.metrics.inc("sched_prefix_lookup_blocks", len(chain))
             if spec is not None:

@@ -429,21 +429,26 @@ def test_fault_delayed_release_drains_clean(small_model, baseline_outputs):
 
 
 def test_fault_storm_under_oversubscription(small_model, baseline_outputs):
-    """Everything at once: oversubscribed pool, expected reservations, and
-    random alloc-fail + forced-preempt + delayed-release — the union of
-    recovery paths still yields bitwise-identical outputs and a clean
-    drain."""
+    """Everything at once: oversubscribed pool, expected reservations,
+    prefix retention, and random alloc-fail + forced-preempt +
+    delayed-release + evict-storm — the union of recovery paths still
+    yields bitwise-identical outputs and a clean drain."""
     plan = FaultPlan(seed=21, alloc_fail=0.1, forced_preempt=0.1,
-                     delayed_release=0.5, delay_cycles=2)
+                     delayed_release=0.5, delay_cycles=2,
+                     evict_storm=0.2, storm_pages=2)
     engine, reqs = _run_faulted(
         small_model, plan, n_pages=2 + 4,
         reserve_policy="expected", expected_quantile=0.25,
+        retain_prefix=True,
     )
     assert all(r.done for r in reqs), [r.phase for r in reqs]
     for r in reqs:
         assert r.out_tokens == baseline_outputs[r.uid]
-    assert engine.pool.n_free == engine.pool.capacity
+    # retained pages are drained-but-resident: the tier plus the free list
+    # must account for every capacity page, none reserved
+    assert engine.pool.n_free + engine.pool.n_retained == engine.pool.capacity
     assert engine.pool.reserved == 0
+    assert plan.fired("evict_storm") > 0
     assert audit_engine(engine).ok
 
 
